@@ -1,0 +1,117 @@
+"""Shared scenario builders + timing/CSV helpers for the benchmark suite.
+
+Every module exposes ``run() -> List[Row]`` where a Row is
+``(name, us_per_call, derived)`` — ``derived`` carries the paper-table
+quantity (reduction factor, hit ratio, page count, accuracy drop, ...).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (DedupConfig, LSHConfig, ModelStore,  # noqa: E402
+                        StoreConfig)
+from repro.core.blocks import block_tensor                    # noqa: E402
+from repro.core.lsh import estimate_r                         # noqa: E402
+from repro.data.pipeline import SyntheticTextTask             # noqa: E402
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def store_config(task_embed: np.ndarray, block_shape=(64, 64),
+                 blocks_per_page=8, threshold=8, validate=False,
+                 r_quantile=0.5, pack="two_stage",
+                 drop_t=0.035, k=16) -> StoreConfig:
+    blocks, _ = block_tensor(task_embed, block_shape)
+    r = estimate_r(blocks, quantile=r_quantile)
+    return StoreConfig(
+        dedup=DedupConfig(block_shape=block_shape,
+                          lsh=LSHConfig(num_bands=16, rows_per_band=4, r=r,
+                                        collision_threshold=threshold),
+                          validate=validate, validate_every_k=k,
+                          accuracy_drop_threshold=drop_t),
+        blocks_per_page=blocks_per_page, pack_strategy=pack)
+
+
+def word2vec_scenario(num_models=6, vocab=2048, d=64, seed=0,
+                      **cfg_kw):
+    """Paper Sec. 7.1.1: N embedding variants fine-tuned from one base."""
+    task = SyntheticTextTask(vocab=vocab, d=d, seed=seed)
+    cfg = store_config(task.base_embed, **cfg_kw)
+    store = ModelStore(cfg)
+    heads, models = {}, {}
+    for v in range(num_models):
+        name = f"w2v-v{v}"
+        emb = task.variant_embedding(v)
+        models[name] = emb
+        store.register(name, {"embedding": emb})
+        heads[name] = task.train_head(emb, variant=v)
+    return task, store, heads, models
+
+
+def classification_scenario(num_models=5, vocab=2048, d=64, seed=0,
+                            validate=True, **cfg_kw):
+    """Paper Sec. 7.1.2: five text classifiers; variants 0/2 freeze the
+    embedding (non-trainable, = base), 1/3/4 fine-tune it."""
+    task = SyntheticTextTask(vocab=vocab, d=d, seed=seed)
+    cfg = store_config(task.base_embed, validate=validate, **cfg_kw)
+    store = ModelStore(cfg)
+    rows = {}
+    for v in range(num_models):
+        name = f"clf-{v + 1}"
+        emb = task.base_embed if v in (0, 2) else task.variant_embedding(v)
+        head = task.train_head(emb, variant=v)
+        docs, labels = task.sample(256, variant=v, seed=seed + 51 + v)
+        acc0 = task.accuracy(emb, head, docs, labels)
+
+        def ev(tensors, head=head, docs=docs, labels=labels):
+            return task.accuracy(tensors["embedding"], head, docs, labels)
+
+        store.register(name, {"embedding": emb},
+                       evaluator=ev if validate else None)
+        acc1 = ev({"embedding": store.materialize(name, "embedding")})
+        rows[name] = {"emb": emb, "head": head, "docs": docs,
+                      "labels": labels, "acc_before": acc0,
+                      "acc_after": acc1}
+    return task, store, rows
+
+
+def ffnn_scenario(num_models=3, features=2048, hidden=256, labels=512,
+                  seed=0, blocks_per_page=8):
+    """Paper Sec. 7.1.3: transfer-learning FFNNs sharing W1 exactly."""
+    rng = np.random.default_rng(seed)
+    W1 = (rng.standard_normal((features, hidden)) * 0.05).astype(np.float32)
+    cfg = store_config(W1, block_shape=(64, 64),
+                       blocks_per_page=blocks_per_page, threshold=14)
+    store = ModelStore(cfg)
+    models = {}
+    for v in range(num_models):
+        W2 = (rng.standard_normal((hidden, labels)) * 0.05
+              ).astype(np.float32)
+        b1 = np.zeros(hidden, np.float32)
+        b2 = np.zeros(labels, np.float32)
+        name = f"ffnn-{v}"
+        models[name] = {"W1": W1, "W2": W2, "b1": b1, "b2": b2}
+        store.register(name, dict(models[name]))
+    return store, models
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

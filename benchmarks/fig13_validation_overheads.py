@@ -1,0 +1,49 @@
+"""Fig. 13 analog: periodic-validation overheads — validation set size vs
+accuracy preserved, compression achieved, and per-validation latency."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import Row, store_config
+from repro.core import ModelStore
+from repro.data.pipeline import SyntheticTextTask
+
+
+def run() -> list:
+    rows: list[Row] = []
+    task = SyntheticTextTask(vocab=1024, d=64, seed=0)
+    for n_val in (32, 128, 512):
+        cfg = store_config(task.base_embed, block_shape=(32, 32),
+                           blocks_per_page=8, threshold=6,
+                           validate=True, drop_t=0.02, k=16)
+        store = ModelStore(cfg)
+        val_t = []
+        for v in range(3):
+            emb = task.variant_embedding(v)
+            head = task.train_head(emb, variant=v)
+            docs, labels = task.sample(n_val, variant=v, seed=v + 7)
+
+            def ev(tensors, head=head, docs=docs, labels=labels):
+                t0 = time.perf_counter()
+                acc = task.accuracy(tensors["embedding"], head, docs,
+                                    labels)
+                val_t.append(time.perf_counter() - t0)
+                return acc
+
+            store.register(f"m{v}", {"embedding": emb}, evaluator=ev)
+        ratio = store.storage_bytes() / max(1, store.dense_bytes())
+        drops = [m.accuracy_before - m.accuracy_after
+                 for m in store.dedup.models.values()
+                 if m.accuracy_after is not None]
+        n_validations = sum(m.num_validations
+                            for m in store.dedup.models.values())
+        rows.append((
+            f"fig13/val{n_val}",
+            float(np.mean(val_t)) * 1e6 if val_t else 0.0,
+            f"val_bytes={n_val * task.doc_len * 4};"
+            f"compression_ratio={ratio:.3f};"
+            f"max_drop={max(drops) if drops else 0:.4f};"
+            f"validations={n_validations}"))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 14 analog: cache hit ratio across replacement policies (LRU, MRU,
+LocalitySet-M/L, Optimized-M/L with Eq. 2) on multi-model traffic."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Row, word2vec_scenario
+from repro.core.bufferpool import POLICIES
+from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
+                                  WeightServer)
+
+
+def run() -> list:
+    rows: list[Row] = []
+    task, store, heads, _ = word2vec_scenario(num_models=6)
+    cap = max(2, store.num_pages() // 3)      # pressure: third fits
+    for policy in POLICIES:
+        server = WeightServer(store, cap, policy, StorageModel("ssd"))
+        engine = EmbeddingServingEngine(server, heads)
+        rng = np.random.default_rng(5)
+        for b in range(60):
+            v = int(rng.integers(0, 6))
+            docs, _ = task.sample(24, variant=v, seed=300 + b)
+            engine.submit(f"w2v-v{v}", docs)
+        engine.run()
+        rows.append((f"fig14/{policy}", 0.0,
+                     f"hit_ratio={server.pool.hit_ratio:.4f}"))
+    return rows

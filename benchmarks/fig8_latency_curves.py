@@ -1,0 +1,49 @@
+"""Figs. 8/9/10 analog: serving latency vs buffer-pool size and storage
+tier, dedup vs dense, six word2vec models."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Row, word2vec_scenario, store_config
+from repro.core import ModelStore
+from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
+                                  WeightServer)
+
+
+def _serve_virtual_seconds(store, heads, task, cap, storage, batches=30,
+                           seed=0):
+    server = WeightServer(store, cap, "optimized_mru",
+                          StorageModel(storage))
+    engine = EmbeddingServingEngine(server, heads)
+    rng = np.random.default_rng(seed)
+    for b in range(batches):
+        v = int(rng.integers(0, len(heads)))
+        docs, _ = task.sample(32, variant=v, seed=seed + 100 + b)
+        engine.submit(f"w2v-v{v}", docs)
+    stats = engine.run()
+    return stats.fetch_seconds, server.pool.hit_ratio
+
+
+def run() -> list:
+    rows: list[Row] = []
+    task, store, heads, _ = word2vec_scenario(num_models=6)
+    dense_cfg = store_config(task.base_embed, threshold=17)
+    dense = ModelStore(dense_cfg)
+    for name in heads:
+        v = int(name.split("v")[-1])
+        dense.register(name, {"embedding": task.variant_embedding(v)})
+
+    dedup_pages = store.num_pages()
+    for frac in (0.25, 0.5, 1.0):
+        cap = max(2, int(dedup_pages * frac))
+        for storage in ("ssd", "hdd"):
+            t_d, hr_d = _serve_virtual_seconds(store, heads, task, cap,
+                                               storage)
+            t_b, hr_b = _serve_virtual_seconds(dense, heads, task, cap,
+                                               storage)
+            speed = t_b / max(1e-9, t_d)
+            rows.append((f"fig8/pool{frac}/{storage}",
+                         t_d * 1e6 / 30,
+                         f"dedup_hit={hr_d:.3f};dense_hit={hr_b:.3f};"
+                         f"io_speedup={speed:.2f}x"))
+    return rows

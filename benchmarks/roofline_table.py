@@ -1,0 +1,58 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json; prefers the ``unrolled`` accounting
+variant (exact per-layer costs) and falls back to the rolled baseline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh="single", prefer_variant="unrolled"):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(path))
+        m = rec.get("meta", {})
+        if not m or (("multi" if m.get("multi_pod") else "single") != mesh):
+            continue
+        key = (m.get("arch"), m.get("shape"))
+        variant = m.get("variant", "baseline")
+        cur = cells.get(key)
+        if cur is None or variant == prefer_variant:
+            if cur is not None and cur["meta"].get("variant") == \
+                    prefer_variant and variant != prefer_variant:
+                continue
+            cells[key] = rec
+    return cells
+
+
+def run() -> list:
+    rows: list[Row] = []
+    cells = load_cells()
+    for (arch, shape), rec in sorted(cells.items()):
+        if rec["status"] == "skipped":
+            rows.append((f"roofline/{arch}/{shape}", 0.0,
+                         "skipped:" + rec["reason"][:48]))
+            continue
+        if rec["status"] != "ok":
+            rows.append((f"roofline/{arch}/{shape}", 0.0, "error"))
+            continue
+        rl = rec["roofline"]
+        m = rec["meta"]
+        flops = rec.get("cost_analysis", {}).get("flops")
+        u = (m["model_flops"] / m["devices"] / flops) if flops else None
+        rows.append((
+            f"roofline/{arch}/{shape}",
+            max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) * 1e6,
+            f"dominant={rl['dominant'].replace('_s', '')};"
+            f"compute={rl['compute_s']:.2e};memory={rl['memory_s']:.2e};"
+            f"collective={rl['collective_s']:.2e};"
+            f"useful={u:.2f}" if u else "useful=?"))
+    return rows

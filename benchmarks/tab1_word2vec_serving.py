@@ -1,0 +1,57 @@
+"""Tab. 1 / Figs. 8-9 analog: multi-word2vec serving latency, dedup store
+vs dense per-model store, across pool sizes and storage tiers."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Row, timed, word2vec_scenario
+from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
+                                  WeightServer)
+
+
+def _serve(store, heads, task, capacity_pages, storage, batches=40,
+           seed=0, policy="optimized_mru"):
+    server = WeightServer(store, capacity_pages, policy,
+                          StorageModel(storage))
+    engine = EmbeddingServingEngine(server, heads)
+    rng = np.random.default_rng(seed)
+    n = len(heads)
+    for b in range(batches):
+        v = int(rng.integers(0, n))
+        docs, _ = task.sample(32, variant=v, seed=seed + 100 + b)
+        engine.submit(f"w2v-v{v}", docs)
+    stats = engine.run()
+    return stats, server
+
+
+def run() -> list:
+    rows: list[Row] = []
+    for num_models in (3, 6, 12):
+        task, store, heads, _ = word2vec_scenario(num_models=num_models)
+        red = store.dense_bytes() / max(1, store.storage_bytes())
+        rows.append((f"tab1/storage_reduction/m{num_models}", 0.0,
+                     f"{red:.2f}x"))
+        # dense baseline: no dedup (threshold > bands -> nothing matches)
+        from .common import store_config
+        from repro.core import ModelStore
+        base_cfg = store_config(task.base_embed, threshold=17)
+        dense = ModelStore(base_cfg)
+        for name in heads:
+            v = int(name.split("v")[-1])
+            dense.register(name, {"embedding": task.variant_embedding(v)})
+
+        for storage in ("ssd", "hdd"):
+            # memory-capped pool: half the dedup pages fit (paper: buffer
+            # pool = half of available RAM); same absolute cap for both.
+            cap = max(2, store.num_pages() // 2)
+            stats, server = _serve(store, heads, task, cap, storage)
+            stats_d, server_d = _serve(dense, heads, task, cap, storage)
+            # latency = virtual storage I/O per batch (compute identical)
+            us = stats.fetch_seconds / max(1, stats.batches) * 1e6
+            us_d = stats_d.fetch_seconds / max(1, stats_d.batches) * 1e6
+            rows.append((f"tab1/dedup/m{num_models}/{storage}", us,
+                         f"hit={server.pool.hit_ratio:.3f}"))
+            rows.append((f"tab1/dense/m{num_models}/{storage}", us_d,
+                         f"hit={server_d.pool.hit_ratio:.3f};"
+                         f"dedup_io_speedup={us_d / max(1e-9, us):.2f}x"))
+    return rows

@@ -1,0 +1,34 @@
+"""Tab. 2 analog: private/shared pages + accuracy before/after dedup for
+five text-classification variants (Sec. 7.1.2)."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from .common import Row, classification_scenario
+
+
+def run() -> list:
+    task, store, rows_info = classification_scenario(num_models=5)
+    pk = store.packing
+    counts = defaultdict(int)
+    for (m, t), pids in pk.tensor_pages.items():
+        for p in set(pids):
+            counts[p] += 1
+    rows: list[Row] = []
+    for name, info in rows_info.items():
+        pids = set(pk.tensor_pages[(name, "embedding")])
+        shared = sum(1 for p in pids if counts[p] > 1)
+        private = len(pids) - shared
+        rows.append((
+            f"tab2/{name}", 0.0,
+            f"private={private};shared={shared};"
+            f"auc_before={info['acc_before']:.4f};"
+            f"auc_after={info['acc_after']:.4f}"))
+    total = store.num_pages()
+    dense_pages = sum(-(-e.grid.num_blocks // store.cfg.blocks_per_page)
+                      for m in store.dedup.models.values()
+                      for e in m.tensors.values())
+    rows.append(("tab2/total_pages", 0.0,
+                 f"dedup={total};dense={dense_pages};"
+                 f"reduction={dense_pages / max(1, total):.2f}x"))
+    return rows

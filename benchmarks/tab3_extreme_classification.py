@@ -1,0 +1,59 @@
+"""Tab. 3 / Fig. 11 analog: transfer-learning FFNNs (shared W1), storage
+reduction + inference latency dedup vs dense, via the dedup_matmul path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Row, ffnn_scenario, timed
+from repro.kernels import ref
+from repro.serving.engine import StorageModel, WeightServer
+
+
+def run() -> list:
+    rows: list[Row] = []
+    store, models = ffnn_scenario(num_models=3)
+    red = store.dense_bytes() / max(1, store.storage_bytes())
+    rows.append(("tab3/storage_reduction/m3", 0.0, f"{red:.2f}x"))
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((64, 2048)), jnp.float32)
+
+    # dedup path: virtual W1 through the shared pool (ref oracle = the
+    # jnp lowering of the Pallas kernel), W2 dense per model
+    vt = store.virtual_tensor("ffnn-1", "W1")
+    pool = jnp.asarray(store.page_pool().reshape(-1, 64, 64))
+    bmap = jnp.asarray(vt.block_map.reshape(vt.grid.grid))
+    W2 = jnp.asarray(models["ffnn-1"]["W2"])
+
+    def dedup_infer():
+        h = jnp.maximum(ref.dedup_matmul(x, pool, bmap), 0.0)
+        return (h @ W2).block_until_ready()
+
+    us_dedup, _ = timed(dedup_infer, repeats=5)
+    W1 = jnp.asarray(models["ffnn-1"]["W1"])
+
+    def dense_infer():
+        h = jnp.maximum(x @ W1, 0.0)
+        return (h @ W2).block_until_ready()
+
+    us_dense, _ = timed(dense_infer, repeats=5)
+    rows.append(("tab3/infer_dedup", us_dedup, "virtual-W1"))
+    rows.append(("tab3/infer_dense", us_dense,
+                 f"overhead={us_dedup / max(1e-9, us_dense):.2f}x"))
+
+    # paging latency under memory pressure: shared W1 pages hit across
+    # model switches (the Fig. 11 effect)
+    for storage in ("ssd", "hdd"):
+        server = WeightServer(store, max(2, store.num_pages() // 2),
+                              "optimized_mru", StorageModel(storage))
+        t = 0.0
+        for rep in range(6):
+            for name in models:
+                t += server.access_pages(
+                    name, server.tensor_pages(name, "W1"))
+                t += server.access_pages(
+                    name, server.tensor_pages(name, "W2"))
+        rows.append((f"tab3/page_fetch/{storage}", t * 1e6 / 18,
+                     f"hit={server.pool.hit_ratio:.3f}"))
+    return rows

@@ -1,0 +1,31 @@
+"""Tab. 6 analog: LSH band-collision threshold sweep — the validation-free
+knob trading compression ratio against accuracy."""
+from __future__ import annotations
+
+from .common import Row, store_config
+from repro.core import ModelStore
+from repro.data.pipeline import SyntheticTextTask
+
+
+def run() -> list:
+    rows: list[Row] = []
+    task = SyntheticTextTask(vocab=1024, d=64, seed=0)
+    for threshold in (4, 6, 8, 10, 12, 14):
+        cfg = store_config(task.base_embed, block_shape=(32, 32),
+                           blocks_per_page=8, threshold=threshold)
+        store = ModelStore(cfg)
+        worst_drop = 0.0
+        for v in range(4):
+            emb = task.variant_embedding(v)
+            head = task.train_head(emb, variant=v)
+            docs, labels = task.sample(256, variant=v, seed=31 + v)
+            acc0 = task.accuracy(emb, head, docs, labels)
+            store.register(f"m{v}", {"embedding": emb})
+            acc1 = task.accuracy(store.materialize(f"m{v}", "embedding"),
+                                 head, docs, labels)
+            worst_drop = max(worst_drop, acc0 - acc1)
+        ratio = store.storage_bytes() / max(1, store.dense_bytes())
+        rows.append((f"tab6/threshold_{threshold}", 0.0,
+                     f"compression_ratio={ratio:.3f};"
+                     f"acc_drop={worst_drop:.4f}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Tab. 7 analog: page-packing strategies (DedupBase / Two-Stage /
+Greedy-1 / Greedy-2) on the paper's scenario shapes, pages + pack time."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Row, timed, word2vec_scenario, classification_scenario
+from repro.core.pagepack import (check_coverage, pack_dedup_base,
+                                 pack_greedy1, pack_greedy2, pack_two_stage)
+
+
+def _compare(tag, store, l):
+    sets = store.dedup.tensor_sets()
+    seqs = {(m, t): store.dedup.models[m].tensors[t].block_map
+            for m in store.dedup.models
+            for t in store.dedup.models[m].tensors}
+    rows = []
+    for name, fn in [("dedup_base", lambda: pack_dedup_base(seqs, l)),
+                     ("two_stage", lambda: pack_two_stage(sets, l)),
+                     ("greedy1", lambda: pack_greedy1(sets, l)),
+                     ("greedy2", lambda: pack_greedy2(sets, l))]:
+        us, res = timed(fn, repeats=2)
+        check_coverage(res, sets, l)
+        rows.append((f"tab7/{tag}/{name}", us,
+                     f"pages={res.num_pages}"))
+    return rows
+
+
+def run() -> list:
+    rows: list[Row] = []
+    # word2vec, large-ish blocks
+    _, store, _, _ = word2vec_scenario(num_models=6,
+                                       block_shape=(64, 64),
+                                       blocks_per_page=8)
+    rows += _compare("word2vec_64x64_l8", store, 8)
+    # text classification, two page sizes (paper: 64MB vs 32MB)
+    _, store2, _ = classification_scenario(num_models=5, validate=False,
+                                           block_shape=(32, 32),
+                                           blocks_per_page=8)
+    rows += _compare("textclf_32x32_l8", store2, 8)
+    rows += _compare("textclf_32x32_l4", store2, 4)
+    # heterogeneous-ish: small blocks -> many equivalence classes
+    _, store3, _, _ = word2vec_scenario(num_models=4,
+                                        block_shape=(32, 32),
+                                        blocks_per_page=16, seed=3)
+    rows += _compare("word2vec_32x32_l16", store3, 16)
+    return rows

@@ -1,0 +1,40 @@
+"""Tab. 8 analog: model-update handling — Approach-1 (remove+reinsert)
+vs Approach-2 (LSH delta, skipping unchanged blocks)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import Row, store_config
+from repro.core import ModelStore
+from repro.data.pipeline import SyntheticTextTask
+
+
+def run() -> list:
+    rows: list[Row] = []
+    task = SyntheticTextTask(vocab=1024, d=64, seed=0)
+    for approach in (1, 2):
+        cfg = store_config(task.base_embed, block_shape=(32, 32),
+                           blocks_per_page=8, threshold=8)
+        store = ModelStore(cfg)
+        for v in range(3):
+            store.register(f"m{v}", {"embedding": task.variant_embedding(v)})
+        # update m1: perturb 5% of rows (the wiki500_imdbm update)
+        emb = task.variant_embedding(1)
+        rng = np.random.default_rng(42)
+        touched = rng.choice(task.vocab, task.vocab // 20, replace=False)
+        emb2 = emb.copy()
+        emb2[touched] += (rng.standard_normal((len(touched), task.d))
+                          * 0.05).astype(np.float32)
+        t0 = time.perf_counter()
+        res = store.update("m1", {"embedding": emb2}, approach=approach)
+        dt = time.perf_counter() - t0
+        store.repack()
+        ratio = store.storage_bytes() / max(1, store.dense_bytes())
+        err = np.abs(store.materialize("m1", "embedding") - emb2).max()
+        rows.append((f"tab8/approach{approach}", dt * 1e6,
+                     f"compression_ratio={ratio:.3f};"
+                     f"validations={res.num_validations};"
+                     f"max_err={err:.4f}"))
+    return rows

@@ -1,0 +1,66 @@
+"""Dedup-aware fine-tuning (paper Sec. 4.3): register two LM variants,
+freeze the shared blocks via gradient masks, fine-tune only the private
+blocks of the second variant, and show the page store is unchanged for
+shared pages.
+
+    PYTHONPATH=src python examples/finetune_dedup.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import DedupConfig, LSHConfig, ModelStore, StoreConfig
+from repro.core.finetune import gradient_masks
+
+
+def main():
+    rng = np.random.default_rng(0)
+    base = {
+        "wq": (rng.standard_normal((256, 256)) * 0.02).astype(np.float32),
+        "w1": (rng.standard_normal((256, 512)) * 0.02).astype(np.float32),
+    }
+    variant = {k: v.copy() for k, v in base.items()}
+    variant["w1"][:64] += 0.05        # domain fine-tune touches a corner
+
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(64, 64),
+                          lsh=LSHConfig(num_bands=16, rows_per_band=4,
+                                        r=2.0, collision_threshold=8),
+                          validate=False),
+        blocks_per_page=4))
+    store.register("base", base)
+    res = store.register("variant", variant)
+    print(f"variant: {res.deduped_blocks}/{res.total_blocks} blocks shared "
+          f"with base")
+
+    masks = gradient_masks(store.dedup, "variant")
+    frozen = {k: 1.0 - m.mean() for k, m in masks.items()}
+    print("frozen fraction per tensor:",
+          {k: f"{v:.2f}" for k, v in frozen.items()})
+
+    # simulated fine-tune steps: masked SGD only updates private blocks
+    weights = {k: store.materialize("variant", k) for k in variant}
+    for step in range(5):
+        grads = {k: rng.standard_normal(w.shape).astype(np.float32) * 0.01
+                 for k, w in weights.items()}
+        for k in weights:
+            weights[k] = weights[k] - grads[k] * masks[k]
+
+    for k in weights:
+        shared_region = masks[k] == 0
+        assert np.array_equal(weights[k][shared_region],
+                              store.materialize("variant", k)[shared_region])
+    print("shared blocks bit-identical after fine-tune "
+          "(shared pages need no rewrite)")
+
+    # re-register the tuned weights: only private pages change
+    before = store.num_pages()
+    store.update("variant", weights, approach=2)
+    print(f"pages before/after update: {before}/{store.num_pages()}")
+
+
+if __name__ == "__main__":
+    main()

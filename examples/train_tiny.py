@@ -1,0 +1,30 @@
+"""Train a reduced LM for a few hundred steps with checkpoint/restart —
+the training substrate behind the dry-run's production-scale train_step.
+
+    PYTHONPATH=src python examples/train_tiny.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ck = "/tmp/repro_train_tiny"
+    out = train_main([
+        "--arch", "deepseek-7b", "--reduced",
+        "--steps", "200", "--batch", "8", "--seq", "64",
+        "--lr", "3e-3", "--ckpt", ck, "--ckpt-every", "50",
+        "--log-every", "20",
+    ])
+    losses = out["losses"]
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {len(losses)} steps")
+    print(f"checkpoints in {ck}; rerun with --resume auto to continue "
+          f"after a failure")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Dedup-aware buffer-pool management (paper Sec. 6).
+
+The pool holds a bounded number of pages.  Baseline policies: LRU / MRU /
+LFU.  Locality-set policies (Pangea, refs [82, 83]) group pages into
+locality sets, each with its own internal policy; the victim *set* is the
+one whose next page-to-evict has the lowest expected eviction cost
+
+    cost = c_w + p_reuse * c_r                                     (Eq. 1)
+
+The paper's contribution ("Optimized-M/L"): model page accesses as
+superposed Poisson processes of the models *sharing* the page, so
+
+    p_reuse = 1 - exp(-sum_{m_i in sharers} lambda_i * t)          (Eq. 2)
+
+giving shared pages higher retention priority.  ``lambda_i`` is estimated
+online from each model's request stream (EMA of instantaneous rate) — in
+the serving engine these are the per-model queue rates.
+
+The pool is a policy simulator by default; ``on_load``/``on_evict``
+callbacks let the serving engine attach real host<->HBM page movement
+(the TPU adaptation of disk<->DRAM paging, see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict, defaultdict
+from typing import Callable, Dict, Hashable, Iterable, Optional, Set
+
+PageId = Hashable
+ModelId = Hashable
+
+POLICIES = ("lru", "mru", "lfu",
+            "locality_lru", "locality_mru",
+            "optimized_lru", "optimized_mru")
+
+
+@dataclasses.dataclass
+class PoolConfig:
+    capacity_pages: int
+    policy: str = "optimized_mru"
+    c_w: float = 0.0        # weights are read-only -> no write-back cost
+    c_r: float = 1.0
+    horizon_t: float = 8.0  # "t time ticks" in Eq. 2
+    rate_ema: float = 0.2   # EMA factor for lambda estimation
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}")
+
+
+@dataclasses.dataclass
+class _PageMeta:
+    last_tick: int = -1
+    freq: int = 0
+    locality_set: Hashable = None
+    sharers: frozenset = frozenset()
+
+
+class BufferPool:
+    def __init__(self, cfg: PoolConfig,
+                 page_sharers: Optional[Dict[PageId, Iterable[ModelId]]] = None,
+                 page_locality: Optional[Dict[PageId, Hashable]] = None,
+                 on_load: Optional[Callable[[PageId], None]] = None,
+                 on_evict: Optional[Callable[[PageId], None]] = None):
+        self.cfg = cfg
+        self.meta: Dict[PageId, _PageMeta] = {}
+        self.resident: "OrderedDict[PageId, None]" = OrderedDict()
+        self.page_sharers = {p: frozenset(ms)
+                             for p, ms in (page_sharers or {}).items()}
+        self.page_locality = dict(page_locality or {})
+        self.on_load = on_load
+        self.on_evict = on_evict
+        self.tick = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._lambda: Dict[ModelId, float] = defaultdict(float)
+        self._last_access: Dict[ModelId, int] = {}
+        self._set_lambda: Dict[Hashable, float] = defaultdict(float)
+        self._set_last: Dict[Hashable, int] = {}
+
+    # ------------------------------------------------------------- metrics --
+    @property
+    def hit_ratio(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+
+    # -------------------------------------------------------------- access --
+    def access(self, model: ModelId, page: PageId) -> bool:
+        """Record an access; returns True on hit.  Loads the page on miss,
+        evicting per policy when over capacity."""
+        self.tick += 1
+        self._update_rate(model)
+        m = self.meta.get(page)
+        if m is None:
+            m = self.meta[page] = _PageMeta(
+                locality_set=self.page_locality.get(page, page),
+                sharers=self.page_sharers.get(page, frozenset([model])))
+        self._update_set_rate(m.locality_set)
+        m.last_tick = self.tick
+        m.freq += 1
+
+        if page in self.resident:
+            self.hits += 1
+            self.resident.move_to_end(page)      # LRU order maintenance
+            return True
+        self.misses += 1
+        while len(self.resident) >= self.cfg.capacity_pages:
+            self._evict_one()
+        self.resident[page] = None
+        if self.on_load:
+            self.on_load(page)
+        return False
+
+    def _update_rate(self, model: ModelId) -> None:
+        last = self._last_access.get(model)
+        if last is not None:
+            inst = 1.0 / max(1, self.tick - last)
+            a = self.cfg.rate_ema
+            self._lambda[model] = (1 - a) * self._lambda[model] + a * inst
+        else:
+            self._lambda[model] = self.cfg.rate_ema
+        self._last_access[model] = self.tick
+
+    def _update_set_rate(self, ls: Hashable) -> None:
+        last = self._set_last.get(ls)
+        if last is not None:
+            inst = 1.0 / max(1, self.tick - last)
+            a = self.cfg.rate_ema
+            self._set_lambda[ls] = (1 - a) * self._set_lambda[ls] + a * inst
+        else:
+            self._set_lambda[ls] = self.cfg.rate_ema
+        self._set_last[ls] = self.tick
+
+    # ------------------------------------------------------------ eviction --
+    def _p_reuse_eq2(self, page: PageId) -> float:
+        """Eq. 2: superposed Poisson over the models sharing the page."""
+        lam = sum(self._lambda.get(mid, 0.0)
+                  for mid in self.meta[page].sharers)
+        return 1.0 - math.exp(-lam * self.cfg.horizon_t)
+
+    def _p_reuse_set(self, ls: Hashable) -> float:
+        lam = self._set_lambda.get(ls, 0.0)
+        return 1.0 - math.exp(-lam * self.cfg.horizon_t)
+
+    def _cost(self, p_reuse: float) -> float:
+        return self.cfg.c_w + p_reuse * self.cfg.c_r   # Eq. 1
+
+    def _victim_in_set(self, pages, inner: str) -> PageId:
+        # Recency order within the set, using resident OrderedDict order.
+        ordered = [p for p in self.resident if p in pages]
+        return ordered[-1] if inner == "mru" else ordered[0]
+
+    def _evict_one(self) -> None:
+        pol = self.cfg.policy
+        if pol == "lru":
+            victim = next(iter(self.resident))
+        elif pol == "mru":
+            victim = next(reversed(self.resident))
+        elif pol == "lfu":
+            victim = min(self.resident, key=lambda p: (self.meta[p].freq,
+                                                       self.meta[p].last_tick))
+        else:
+            inner = "mru" if pol.endswith("mru") else "lru"
+            by_set: Dict[Hashable, Set[PageId]] = defaultdict(set)
+            for p in self.resident:
+                by_set[self.meta[p].locality_set].add(p)
+            best, best_cost = None, None
+            for ls, pages in by_set.items():
+                cand = self._victim_in_set(pages, inner)
+                if pol.startswith("optimized"):
+                    pr = self._p_reuse_eq2(cand)     # Eq. 2 (shared-page aware)
+                else:
+                    pr = self._p_reuse_set(ls)       # original locality-set
+                cost = self._cost(pr)
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = cand, cost
+            victim = best
+        del self.resident[victim]
+        self.evictions += 1
+        if self.on_evict:
+            self.on_evict(victim)
+
+
+def run_trace(pool: BufferPool, trace) -> float:
+    """Feed an iterable of (model, page) accesses; return hit ratio."""
+    for model, page in trace:
+        pool.access(model, page)
+    return pool.hit_ratio

@@ -1,0 +1,228 @@
+"""ModelStore: the end-to-end deduplicated model repository (paper Fig. 3).
+
+register -> dedup (Sec. 4) -> pack pages (Sec. 5) -> serve via buffer pool
+(Sec. 6).  The on-disk format doubles as the system's *checkpoint* format:
+content-addressed pages + per-model block maps + a JSON manifest, so a new
+model variant ships only its private pages (DESIGN.md §2, changed
+assumption 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .blocks import BlockGrid, unblock_tensor
+from .bufferpool import BufferPool, PoolConfig
+from .dedup import DedupConfig, DedupResult, Deduplicator, Evaluator
+from .pagepack import PackResult, check_coverage, pack
+
+TensorRef = Tuple[str, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    dedup: DedupConfig = dataclasses.field(default_factory=DedupConfig)
+    blocks_per_page: int = 16           # page size limit "l"
+    pack_strategy: str = "two_stage"
+
+
+@dataclasses.dataclass
+class VirtualTensor:
+    """Device-servable representation: indices into the shared page pool."""
+    grid: BlockGrid
+    dtype: np.dtype
+    block_map: np.ndarray        # [num_blocks] -> slot in the flattened pool
+    page_ids: List[int]          # pages this tensor needs resident
+
+
+class ModelStore:
+    def __init__(self, cfg: Optional[StoreConfig] = None):
+        self.cfg = cfg or StoreConfig()
+        self.dedup = Deduplicator(self.cfg.dedup)
+        self._pack: Optional[PackResult] = None
+        self._slot_of_block: Dict[int, Tuple[int, int]] = {}  # did -> (page, slot)
+
+    # ------------------------------------------------------------ pipeline --
+    def register(self, model: str, tensors: Mapping[str, np.ndarray],
+                 evaluator: Optional[Evaluator] = None,
+                 layers=None) -> DedupResult:
+        res = self.dedup.add_model(model, dict(tensors), evaluator, layers)
+        self._pack = None                        # packing is now stale
+        return res
+
+    def remove(self, model: str) -> None:
+        self.dedup.remove_model(model)
+        self._pack = None
+
+    def update(self, model: str, tensors: Mapping[str, np.ndarray],
+               evaluator: Optional[Evaluator] = None,
+               approach: int = 2) -> DedupResult:
+        res = self.dedup.update_model(model, dict(tensors), evaluator, approach)
+        self._pack = None
+        return res
+
+    def repack(self) -> PackResult:
+        """(Re)run Sec.-5 page packing over the current distinct blocks."""
+        tensor_sets = self.dedup.tensor_sets()
+        seqs = {(m, t): self.dedup.models[m].tensors[t].block_map
+                for m in self.dedup.models
+                for t in self.dedup.models[m].tensors}
+        self._pack = pack(tensor_sets, self.cfg.blocks_per_page,
+                          self.cfg.pack_strategy, tensor_seqs=seqs)
+        check_coverage(self._pack, tensor_sets, self.cfg.blocks_per_page)
+        self._slot_of_block = {}
+        for pid, page in enumerate(self._pack.pages):
+            for slot, did in enumerate(page):
+                # A block may appear in several pages (Alg. 3 copies); keep
+                # the first placement as canonical.
+                self._slot_of_block.setdefault(did, (pid, slot))
+        return self._pack
+
+    @property
+    def packing(self) -> PackResult:
+        if self._pack is None:
+            self.repack()
+        return self._pack
+
+    # ----------------------------------------------------------- accessors --
+    def num_pages(self) -> int:
+        return self.packing.num_pages
+
+    def storage_bytes(self, dtype=np.float32) -> int:
+        bh, bw = self.cfg.dedup.block_shape
+        itemsize = np.dtype(dtype).itemsize
+        return self.packing.num_pages * self.cfg.blocks_per_page * bh * bw * itemsize
+
+    def dense_bytes(self, dtype=np.float32) -> int:
+        """Storage without dedup: every model's logical blocks, paged."""
+        bh, bw = self.cfg.dedup.block_shape
+        itemsize = np.dtype(dtype).itemsize
+        l = self.cfg.blocks_per_page
+        pages = 0
+        for m in self.dedup.models.values():
+            for e in m.tensors.values():
+                pages += -(-e.grid.num_blocks // l)
+        return pages * l * bh * bw * itemsize
+
+    def materialize(self, model: str, tensor: str) -> np.ndarray:
+        return self.dedup.materialize(model, tensor)
+
+    def materialize_rows(self, model: str, tensor: str,
+                         rows: np.ndarray) -> np.ndarray:
+        """Gather only the requested rows (2-D tensors): the serving path's
+        partial materialization — touches just the row blocks involved."""
+        e = self.dedup.models[model].tensors[tensor]
+        bh, bw = e.grid.block_shape
+        gw = e.grid.grid[1]
+        rows = np.asarray(rows)
+        rb = rows // bh
+        off = rows % bh
+        out = np.empty((len(rows), e.grid.shape2d[1]), np.float32)
+        for j in range(gw):
+            dids = e.block_map[rb * gw + j]
+            cols = slice(j * bw, min((j + 1) * bw, e.grid.shape2d[1]))
+            width = cols.stop - cols.start
+            for i, (did, o) in enumerate(zip(dids, off)):
+                out[i, cols] = self.dedup.distinct[int(did)][o, :width]
+        return out
+
+    def page_pool(self, dtype=np.float32) -> np.ndarray:
+        """[num_pages, blocks_per_page, bh, bw] physical page array."""
+        bh, bw = self.cfg.dedup.block_shape
+        l = self.cfg.blocks_per_page
+        pool = np.zeros((self.packing.num_pages, l, bh, bw), dtype=dtype)
+        for pid, page in enumerate(self.packing.pages):
+            for slot, did in enumerate(page):
+                pool[pid, slot] = self.dedup.distinct[did]
+        return pool
+
+    def virtual_tensor(self, model: str, tensor: str) -> VirtualTensor:
+        """Indirection view used by the Pallas dedup kernels: block_map maps
+        each logical block to a flat slot ``page * l + slot``."""
+        pk = self.packing
+        e = self.dedup.models[model].tensors[tensor]
+        l = self.cfg.blocks_per_page
+        flat = np.array([self._slot_of_block[int(d)][0] * l
+                         + self._slot_of_block[int(d)][1]
+                         for d in e.block_map], dtype=np.int32)
+        return VirtualTensor(e.grid, e.dtype, flat,
+                             sorted(set(pk.tensor_pages[(model, tensor)])))
+
+    # ------------------------------------------------------------- serving --
+    def make_buffer_pool(self, capacity_pages: int,
+                         policy: str = "optimized_mru", **kw) -> BufferPool:
+        pk = self.packing
+        sharers: Dict[int, set] = {}
+        locality: Dict[int, frozenset] = {}
+        owners: Dict[int, set] = {}
+        for (m, t), pids in pk.tensor_pages.items():
+            for p in pids:
+                sharers.setdefault(p, set()).add(m)
+                owners.setdefault(p, set()).add((m, t))
+        for p, ts in owners.items():
+            locality[p] = frozenset(ts)          # locality set = equivalence class
+        return BufferPool(PoolConfig(capacity_pages, policy, **kw),
+                          page_sharers=sharers, page_locality=locality)
+
+    # --------------------------------------------------------- persistence --
+    def save(self, path: str) -> Dict:
+        """Content-addressed save: page files named by sha256; manifest JSON
+        committed atomically last (crash-safe restart point)."""
+        os.makedirs(path, exist_ok=True)
+        pk = self.packing
+        pool = self.page_pool()
+        page_hashes: List[str] = []
+        for pid in range(pk.num_pages):
+            raw = np.ascontiguousarray(pool[pid]).tobytes()
+            h = hashlib.sha256(raw).hexdigest()[:24]
+            page_hashes.append(h)
+            fp = os.path.join(path, f"page-{h}.npy")
+            if not os.path.exists(fp):           # dedup on disk too
+                np.save(fp, pool[pid])
+        manifest = {
+            "blocks_per_page": self.cfg.blocks_per_page,
+            "block_shape": list(self.cfg.dedup.block_shape),
+            "pages": [{"hash": h, "blocks": pk.pages[i]}
+                      for i, h in enumerate(page_hashes)],
+            "models": {
+                m: {t: {"shape": list(e.grid.tensor_shape),
+                        "dtype": str(np.dtype(e.dtype)),
+                        "block_map": e.block_map.tolist(),
+                        "pages": pk.tensor_pages[(m, t)]}
+                    for t, e in res.tensors.items()}
+                for m, res in self.dedup.models.items()},
+        }
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, os.path.join(path, "manifest.json"))  # atomic commit
+        return manifest
+
+
+def load_store_tensors(path: str) -> Dict[str, Dict[str, np.ndarray]]:
+    """Rehydrate every model's tensors from a saved store directory."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    l = manifest["blocks_per_page"]
+    bh, bw = manifest["block_shape"]
+    # did -> block array, via the page files
+    block_of: Dict[int, np.ndarray] = {}
+    for entry in manifest["pages"]:
+        page = np.load(os.path.join(path, f"page-{entry['hash']}.npy"))
+        for slot, did in enumerate(entry["blocks"]):
+            block_of.setdefault(did, page[slot])
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    for m, tensors in manifest["models"].items():
+        out[m] = {}
+        for t, spec in tensors.items():
+            from .blocks import make_grid
+            grid = make_grid(tuple(spec["shape"]), (bh, bw))
+            blocks = np.stack([block_of[d] for d in spec["block_map"]])
+            out[m][t] = unblock_tensor(blocks, grid).astype(spec["dtype"])
+    return out

@@ -1,0 +1,4 @@
+from .pipeline import (SyntheticTextTask, make_batch_from_specs,
+                       token_batches)
+
+__all__ = ["SyntheticTextTask", "make_batch_from_specs", "token_batches"]

@@ -1,0 +1,5 @@
+from .sharding import (ShardingRecipe, cache_specs, current_recipe, hint,
+                       make_recipe, param_spec, param_specs, use_recipe)
+
+__all__ = ["ShardingRecipe", "cache_specs", "current_recipe", "hint",
+           "make_recipe", "param_spec", "param_specs", "use_recipe"]

@@ -1,0 +1,225 @@
+"""Sharding recipes: DP / FSDP / TP / EP / SP over the production mesh.
+
+Axes (launch/mesh.py): single-pod ``("data", "model")`` = (16, 16);
+multi-pod ``("pod", "data", "model")`` = (2, 16, 16).
+
+* params: 2D-sharded — FSDP over ``data``, TP over ``model`` (giant MoEs
+  only fit 256 chips at 256-way param sharding).
+* MoE experts: EP over ``model``; expert-internal dims FSDP over ``data``.
+* activations: batch over (``pod``, ``data``); optional sequence parallel
+  (``seq`` axis) for long prefill; logits vocab over ``model``.
+
+Models call :func:`hint` with a *site name*; the active
+:class:`ShardingRecipe` (a contextvar set by the launcher) maps sites to
+``PartitionSpec``s.  Outside a recipe/mesh context hints are identity, so
+smoke tests run unsharded on one CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar("recipe", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRecipe:
+    """Axis assignment for one run mode (train / prefill / decode)."""
+    dp: Tuple[str, ...] = ("data",)       # batch ("pod","data") when multi-pod
+    tp: Optional[str] = "model"           # tensor/expert parallel axis
+    fsdp: Optional[str] = "data"          # param FSDP axis
+    seq: Optional[str] = None             # sequence-parallel axis (prefill)
+    kv_seq: Optional[str] = None          # decode KV-cache sequence axis
+    sites: Dict[str, P] = dataclasses.field(default_factory=dict)
+
+    def site(self, name: str) -> Optional[P]:
+        return self.sites.get(name)
+
+
+def make_recipe(mode: str, multi_pod: bool = False,
+                overrides: Optional[Dict[str, P]] = None) -> ShardingRecipe:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    tp, fsdp = "model", "data"
+    if mode == "train":
+        sites = {
+            "residual": P(dp, None, None),
+            "act_ff":   P(dp, None, tp),
+            "logits":   P(dp, None, tp),
+            "moe_disp": P(tp, None, None),      # [E, C, D] expert-sharded
+        }
+        rec = ShardingRecipe(dp, tp, fsdp, None, None, sites)
+    elif mode == "prefill":
+        # Sequence parallel: 32k tokens split over `model`, batch over dp.
+        # NOTE §Perf iteration 2b: forcing head-sharded attention via
+        # attn_q/attn_kv/attn_o hints made GSPMD all-gather the residual
+        # stream instead (worse); ring attention is the real fix. The
+        # hint sites remain available but are unset here.
+        sites = {
+            "residual": P(dp, tp, None),
+            "act_ff":   P(dp, tp, None),
+            "logits":   P(dp, None, tp),      # [B, 1, V]: vocab over TP
+            "moe_disp": P(tp, None, None),
+        }
+        rec = ShardingRecipe(dp, tp, fsdp, tp, None, sites)
+    elif mode == "decode":
+        # One token per step: KV cache sequence sharded over `model`.
+        sites = {
+            "residual": P(dp, None, None),
+            "act_ff":   P(dp, None, tp),
+            "logits":   P(dp, None, tp),
+            "moe_disp": P(tp, None, None),
+        }
+        rec = ShardingRecipe(dp, tp, fsdp, None, tp, sites)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    if overrides:
+        sites = dict(rec.sites)
+        sites.update(overrides)
+        rec = dataclasses.replace(rec, sites=sites)
+    return rec
+
+
+@contextlib.contextmanager
+def use_recipe(recipe: Optional[ShardingRecipe]):
+    tok = _ACTIVE.set(recipe)
+    try:
+        yield recipe
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def current_recipe() -> Optional[ShardingRecipe]:
+    return _ACTIVE.get()
+
+
+def hint(x, site: str):
+    """Best-effort ``with_sharding_constraint`` at a named activation site."""
+    rec = _ACTIVE.get()
+    if rec is None:
+        return x
+    spec = rec.site(site)
+    if spec is None:
+        return x
+    spec = _fit_rank(spec, x.ndim)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _fit_rank(spec: P, ndim: int) -> P:
+    parts = list(spec)
+    if len(parts) < ndim:
+        parts = parts + [None] * (ndim - len(parts))
+    elif len(parts) > ndim:
+        # Drop *inner* Nones first, else truncate (decode: [B,1,D] vs [B,S,D]).
+        parts = [p for p in parts if p is not None]
+        parts = parts + [None] * (ndim - len(parts)) if len(parts) < ndim \
+            else parts[:ndim]
+    return P(*parts)
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes that do not evenly divide the corresponding dim
+    (jit input shardings require even partitioning; e.g. batch=1 decode
+    cells and odd vocabs fall back to replication on that dim)."""
+    import math as _math
+    sizes = dict(mesh.shape)
+    parts = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = list(ax) if isinstance(ax, tuple) else [ax]
+        while axes and dim % _math.prod(sizes[a] for a in axes) != 0:
+            axes = axes[:-1]
+        if not axes:
+            parts.append(None)
+        elif len(axes) == 1:
+            parts.append(axes[0])
+        else:
+            parts.append(tuple(axes))
+    return P(*parts)
+
+
+# ------------------------------------------------------------- param rules --
+# leaf name -> spec builder(recipe, ndim).  All per-layer params carry a
+# leading stacked-layer axis (never sharded).
+def _mat(in_ax, out_ax):
+    def rule(rec: ShardingRecipe, ndim: int) -> P:
+        base = [in_ax(rec), out_ax(rec)]
+        return P(*([None] * (ndim - 2) + base))
+    return rule
+
+
+_FSDP = lambda r: r.fsdp
+_TP = lambda r: r.tp
+_NONE = lambda r: None
+
+_PARAM_RULES = {
+    # attention (cross-attn c* shares rules)
+    r"^(wq|wk|wv|cq|ck|cv)$": _mat(_FSDP, _TP),
+    r"^(wo|co)$":             _mat(_TP, _FSDP),
+    r"^(bq|bk|bv)$":          lambda rec, nd: P(*([None] * (nd - 1) + [rec.tp])),
+    # dense mlp + arctic dense-residual
+    r"^(w1|w3|dw1|dw3)$":     _mat(_FSDP, _TP),
+    r"^(w2|dw2)$":            _mat(_TP, _FSDP),
+    # MoE: experts over TP(=EP) axis, d_model over FSDP
+    r"^(ew1|ew3)$": lambda rec, nd: P(*([None] * (nd - 3) + [rec.tp, rec.fsdp, None])),
+    r"^ew2$":       lambda rec, nd: P(*([None] * (nd - 3) + [rec.tp, None, rec.fsdp])),
+    r"^router$":    _mat(_FSDP, _NONE),
+    # mamba
+    r"^in_proj$":   _mat(_FSDP, _TP),
+    r"^out_proj$":  _mat(_TP, _FSDP),
+    r"^(conv_w|conv_b|A_log|Dp|dt_bias)$":
+        lambda rec, nd: P(*([None] * (nd - 1) + [rec.tp])),
+    # embeddings
+    r"^embed$":     lambda rec, nd: P(rec.tp, rec.fsdp),
+    r"^head$":      lambda rec, nd: P(rec.fsdp, rec.tp),
+    r"^pos_embed$": lambda rec, nd: P(*([None] * nd)),
+}
+
+
+def param_spec(path: str, ndim: int,
+               recipe: Optional[ShardingRecipe] = None) -> P:
+    rec = recipe or current_recipe() or make_recipe("train")
+    leaf = path.split("/")[-1]
+    for pat, rule in _PARAM_RULES.items():
+        if re.match(pat, leaf):
+            return rule(rec, ndim)
+    return P()      # norms, scalars: replicated
+
+
+def param_specs(params, recipe: Optional[ShardingRecipe] = None):
+    """Pytree of PartitionSpecs matching a params pytree (by key path)."""
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        ndim = len(tree.shape)
+        return param_spec(prefix, ndim, recipe)
+    return walk(params, "")
+
+
+def cache_specs(cache, recipe: ShardingRecipe):
+    """Specs for a decode cache pytree (leaf-name keyed)."""
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        leaf = prefix.split("/")[-1]
+        nd = len(tree.shape)
+        if leaf in ("k", "v"):          # [L, B, S, K, hd]
+            return P(None, recipe.dp, recipe.kv_seq, None, None)
+        if leaf == "ssm_state":         # [L, B, H, hd, state]
+            return P(None, recipe.dp, recipe.tp, None, None)
+        if leaf == "conv_state":        # [L, B, K-1, C]
+            return P(None, recipe.dp, None, recipe.tp)
+        if leaf in ("enc_k", "enc_v"):  # [L, B, S_enc, K, hd]
+            return P(None, recipe.dp, recipe.kv_seq, None, None)
+        if leaf == "pos":
+            return P()
+        return P(*([None] * nd))
+    return walk(cache, "")

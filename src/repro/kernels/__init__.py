@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's perf-critical compute hot-spots.
+
+Each kernel = <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling)
++ a jit'd wrapper in ops.py + a pure-jnp oracle in ref.py.  On CPU the
+kernels run with interpret=True (validated against ref.py in tests/).
+"""
+from . import ref
+from .ops import dedup_embedding, dedup_matmul, flash_attention, lsh_signature
+
+__all__ = ["ref", "dedup_embedding", "dedup_matmul", "flash_attention",
+           "lsh_signature"]

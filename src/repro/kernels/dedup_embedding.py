@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: embedding lookup from a deduplicated row-block pool.
+
+The paper's word2vec scenario (Sec. 7.1.1/7.2.1): the embedding matrix is
+stored as row blocks ([bv, D] slabs), deduplicated across model variants.
+Token ids are scalar-prefetched; for token ``t`` the index_map selects
+physical block ``row_block_map[ids[t] // bv]`` and the kernel copies row
+``ids[t] % bv`` out of it.  Consecutive tokens hitting the same physical
+block reuse the already-resident VMEM tile (Pallas skips the DMA when the
+index_map output repeats) — sorting/batching ids by block, as the serving
+engine's batcher does, is the VMEM analogue of the paper's cache-locality
+optimization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, rbmap_ref, w_ref, o_ref, *, bv: int):
+    t = pl.program_id(0)
+    row = ids_ref[t] % bv
+    o_ref[0, :] = w_ref[0, row, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def dedup_embedding(ids, pool, row_block_map, *, bd: int = 512,
+                    interpret: bool = False):
+    """ids [B] int32 -> [B, D] rows of the virtual embedding.
+
+    pool [n_distinct, bv, D]; row_block_map [V/bv] int32.
+    """
+    (B,) = ids.shape
+    n_distinct, bv, D = pool.shape
+    bd = min(bd, D)
+    assert D % bd == 0, (D, bd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # ids, row_block_map
+        grid=(B, D // bd),
+        in_specs=[
+            pl.BlockSpec((1, bv, bd),
+                         lambda t, j, ids, rbmap: (rbmap[ids[t] // bv], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda t, j, ids, rbmap: (t, j)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, bv=bv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), pool.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "parallel")),
+        interpret=interpret,
+    )
+    return fn(ids.astype(jnp.int32), row_block_map.astype(jnp.int32), pool)

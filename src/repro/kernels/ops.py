@@ -1,0 +1,86 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the Pallas path compiles natively; on CPU (this container) the
+kernels execute through ``interpret=True`` — same kernel body, Python
+interpretation, used by the allclose test sweeps against ``ref.py``.
+Wrappers handle padding to tile multiples and unpadding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dedup_embedding import dedup_embedding as _dedup_embedding
+from .dedup_matmul import dedup_matmul as _dedup_matmul
+from .flash_attention import flash_attention as _flash_attention
+from .lsh_signature import lsh_signature as _lsh_signature
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def dedup_matmul(x, pool, block_map, bm: int = 128, out_dtype=None):
+    """x [M, K] (or [..., K]) @ virtual W -> [..., N]."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x2, padm = _pad_to(x2, 0, bm)
+    y = _dedup_matmul(x2, pool, block_map, bm=bm,
+                      interpret=_interpret(), out_dtype=out_dtype)
+    if padm:
+        y = y[: y.shape[0] - padm]
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def dedup_embedding(ids, pool, row_block_map):
+    lead = ids.shape
+    out = _dedup_embedding(ids.reshape(-1), pool, row_block_map,
+                           interpret=_interpret())
+    return out.reshape(lead + (out.shape[-1],))
+
+
+def lsh_signature(blocks, proj, bias, r: float):
+    n, dim = blocks.shape
+    blocks = blocks.reshape(n, dim).astype(jnp.float32)
+    blocks, padn = _pad_to(blocks, 0, 128)
+    blocks, padk = _pad_to(blocks, 1, 512 if dim >= 512 else 8)
+    proj = jnp.pad(proj.astype(jnp.float32), ((0, padk), (0, 0)))
+    nh = proj.shape[1]
+    proj, padh = _pad_to(proj, 1, 128 if nh >= 128 else 8)
+    bias = jnp.pad(bias.astype(jnp.float32), (0, padh))
+    bk = 512 if blocks.shape[1] % 512 == 0 else 8
+    bh = 128 if proj.shape[1] % 128 == 0 else 8
+    sig = _lsh_signature(blocks, proj, bias, r=float(r), bk=bk, bh=bh,
+                         interpret=_interpret())
+    return sig[:n, :nh]
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, bq=512, bkv=512):
+    Sq, Skv = q.shape[1], k.shape[1]
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    q, padq = _pad_to(q, 1, bq)
+    k, padk = _pad_to(k, 1, bkv)
+    v, _ = _pad_to(v, 1, bkv)
+    if padk and not causal:
+        raise ValueError("non-causal padding needs an explicit kv mask; "
+                         "pad Skv to a bkv multiple upstream")
+    out = _flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale, bq=bq, bkv=bkv,
+                           interpret=_interpret())
+    return out[:, :Sq]
+
+
+__all__ = ["dedup_matmul", "dedup_embedding", "lsh_signature",
+           "flash_attention", "ref"]

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def materialize_virtual(pool, block_map, K: int, N: int):
+    """pool [n_distinct, bk, bn] + block_map [K/bk, N/bn] -> dense W [K, N]."""
+    nkb, nnb = block_map.shape
+    bk, bn = pool.shape[1], pool.shape[2]
+    blocks = pool[block_map.reshape(-1)]                 # [nkb*nnb, bk, bn]
+    W = (blocks.reshape(nkb, nnb, bk, bn)
+               .transpose(0, 2, 1, 3)
+               .reshape(nkb * bk, nnb * bn))
+    return W[:K, :N]
+
+
+def dedup_matmul(x, pool, block_map, out_dtype=None):
+    """x [M, K] @ W_virtual[K, N]  (paper Sec. 2.2 FFNN inference, with the
+    tensor blocks deduplicated through the block map)."""
+    K = block_map.shape[0] * pool.shape[1]
+    N = block_map.shape[1] * pool.shape[2]
+    W = materialize_virtual(pool, block_map, K, N)
+    y = jnp.matmul(x, W.astype(x.dtype), preferred_element_type=F32)
+    return y.astype(out_dtype or x.dtype)
+
+
+def dedup_embedding(ids, pool, row_block_map, d_model: int):
+    """Embedding lookup from a deduplicated row-block pool.
+
+    pool [n_distinct, bv, D]; row_block_map [V/bv] -> distinct id.
+    ids [B] -> [B, D].
+    """
+    bv = pool.shape[1]
+    rb = ids // bv
+    off = ids % bv
+    blocks = pool[row_block_map[rb]]                     # [B, bv, D]
+    return jnp.take_along_axis(
+        blocks, off[:, None, None].astype(jnp.int32).repeat(1, 1),
+        axis=1)[:, 0, :d_model]
+
+
+def lsh_signature(blocks, proj, bias, r: float):
+    """[n, dim] fp32 -> int32 signatures [n, num_hashes] (Sec. 4.2.2)."""
+    h = jnp.floor((blocks.astype(F32) @ proj.astype(F32) + bias) / r)
+    return h.astype(jnp.int32)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None):
+    """q [B, Sq, H, hd]; k, v [B, Skv, K, hd] -> [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = scale if scale is not None else hd ** -0.5
+    qg = (q.astype(F32) * scale).reshape(B, Sq, Kh, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(F32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m &= qp >= kp
+    if window:
+        m &= (qp - kp) < window
+    s = jnp.where(m[None, None, None], s, -2e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(F32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

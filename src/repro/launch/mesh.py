@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except TypeError:            # older jax without axis_types kwarg
+        return jax.make_mesh(shape, axes)
+
+
+def make_mini_mesh(*, multi_pod: bool = False, devices_per_axis: int = 2):
+    """Reduced mesh for CI-scale dry-run tests (8 host devices)."""
+    d = devices_per_axis
+    shape = (2, d, d) if multi_pod else (d, d)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except TypeError:
+        return jax.make_mesh(shape, axes)

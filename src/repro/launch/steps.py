@@ -1,0 +1,48 @@
+"""Step builders shared by the trainer, serving engine, and dry-run."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import ModelAPI
+from ..optim.optimizers import Optimizer
+
+
+def make_train_step(api: ModelAPI, opt: Optimizer,
+                    grad_transform: Optional[Callable] = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_transform`` hooks in gradient compression / dedup-finetune
+    masks (applied before the optimizer).
+    """
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss(p, batch))(params)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(api: ModelAPI, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(api: ModelAPI):
+    def decode_step(params, cache, tokens):
+        return api.decode(params, cache, tokens)
+    return decode_step
+
+
+def make_serve_step(api: ModelAPI):
+    """decode_32k / long_500k cell entry point: one new token against a
+    filled cache (batch = {"tokens", "cache"})."""
+    def serve_step(params, batch):
+        logits, cache = api.decode(params, batch["cache"], batch["tokens"])
+        return logits, cache
+    return serve_step

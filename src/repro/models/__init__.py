@@ -1,0 +1,3 @@
+from .registry import ModelAPI, build, input_specs, param_shapes
+
+__all__ = ["ModelAPI", "build", "input_specs", "param_shapes"]

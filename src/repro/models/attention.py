@@ -1,0 +1,127 @@
+"""Attention: GQA/MHA with RoPE, qk-norm, logit softcap, sliding window.
+
+Two execution paths:
+  * :func:`attend` — chunked online-softmax attention (flash-style in pure
+    JAX: ``lax.scan`` over KV chunks, O(S·chunk) memory) for training and
+    long prefill.  The Pallas flash kernel in ``kernels/flash_attention.py``
+    is the TPU hot path; this is its reference/portable implementation.
+  * :func:`decode_attend` — single-step decode against a (possibly
+    partially filled) KV cache.
+
+Shapes: q [B, Sq, H, hd]; k, v [B, Skv, K, hd]; H = K * G (GQA groups).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -2.0e38
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int, kv_len):
+    """[Sq, C] boolean validity mask. ``window`` may be a traced scalar
+    (0 = global)."""
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        in_win = (q_pos[:, None] - kv_pos[None, :]) < w
+        m &= jnp.where(w > 0, in_win, True)
+    if kv_len is not None:
+        m &= kv_pos[None, :] < kv_len
+    return m
+
+
+def _cap(s, cap: float):
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def attend(q, k, v, *, causal: bool = True, window=0, softcap: float = 0.0,
+           q_offset=0, kv_len=None, chunk: int = 1024,
+           scale: Optional[float] = None):
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else hd ** -0.5
+
+    chunk = min(chunk, Skv)
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = Skv
+    nc = (Skv + pad) // chunk
+
+    # Keep K/V in their storage dtype and accumulate in fp32 on the MXU
+    # (preferred_element_type) — a materialized fp32 upcast of the whole
+    # K/V stream dominated HBM traffic (§Perf iteration 1).
+    qg = (q.astype(F32) * scale).astype(k.dtype).reshape(B, Sq, K, G, hd)
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, K, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, K, hd), 1, 0)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, kb, vb = xs
+        kv_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kb,
+                       preferred_element_type=F32)
+        s = _cap(s, softcap)
+        valid = _mask(q_pos, kv_pos, causal, window, kv_len)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=F32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, F32)
+    l0 = jnp.zeros((B, K, G, Sq), F32)
+    a0 = jnp.zeros((B, K, G, Sq, hd), F32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nc, dtype=jnp.int32), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)   # [B,K,G,Sq,hd]->[B,Sq,H,hd]
+    return out.astype(q.dtype)
+
+
+def decode_attend(q, k, v, *, kv_len, window=0, softcap: float = 0.0,
+                  q_pos=None, scale: Optional[float] = None):
+    """One-token decode: q [B, 1, H, hd] against cache k/v [B, S, K, hd].
+
+    ``kv_len`` (traced) is the filled length; ``q_pos`` the absolute
+    position of the query token (defaults to kv_len - 1 after append).
+    """
+    B, _, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else hd ** -0.5
+    q_pos = kv_len - 1 if q_pos is None else q_pos
+
+    # bf16 K/V operands with fp32 MXU accumulation: no materialized
+    # upcast of the cache (§Perf iteration 1).
+    qg = (q.astype(F32) * scale).astype(k.dtype).reshape(B, K, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                   preferred_element_type=F32)
+    s = _cap(s, softcap)
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    valid = kv_pos[None] < kv_len
+    w = jnp.asarray(window, jnp.int32)
+    in_win = (q_pos - kv_pos[None]) < w
+    valid &= jnp.where(w > 0, in_win, True)
+    s = jnp.where(valid[:, None, None] if valid.ndim == 2 else valid,
+                  s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

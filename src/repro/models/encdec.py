@@ -1,0 +1,259 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend is a STUB:
+the encoder consumes precomputed frame embeddings per the assignment).
+
+LayerNorm + plain GELU MLP + learned decoder positions + sinusoidal
+encoder positions, no RoPE — faithful to the whisper backbone.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import hint
+from .attention import attend, decode_attend
+from .layers import dot, layer_norm, mlp
+
+F32 = jnp.float32
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    half = channels // 2
+    scale = math.log(10_000) / (half - 1)
+    inv = jnp.exp(-scale * jnp.arange(half, dtype=F32))
+    ang = jnp.arange(length, dtype=F32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _ln(d):
+    return {"scale": jnp.ones((d,), F32), "bias": jnp.zeros((d,), F32)}
+
+
+def _attn_p(key, d, H, hd, dtype, prefix=""):
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    names = ["cq", "ck", "cv", "co"] if prefix == "c" else \
+        ["wq", "wk", "wv", "wo"]
+    return {
+        names[0]: (jax.random.normal(ks[0], (d, H * hd)) * s).astype(dtype),
+        names[1]: (jax.random.normal(ks[1], (d, H * hd)) * s).astype(dtype),
+        names[2]: (jax.random.normal(ks[2], (d, H * hd)) * s).astype(dtype),
+        names[3]: (jax.random.normal(ks[3], (H * hd, d)) * s).astype(dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, max_dec: int = 4096) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    d, H, hd, f = cfg.d_model, cfg.num_heads, cfg.hd, cfg.d_ff
+    ks = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": _ln(d), "attn": _attn_p(k1, d, H, hd, dtype),
+                "ln2": _ln(d),
+                "mlp": {"w1": (jax.random.normal(k2, (d, f)) * 0.02
+                               ).astype(dtype),
+                        "w2": (jax.random.normal(jax.random.fold_in(k2, 1),
+                                                 (f, d)) * 0.02
+                               ).astype(dtype)}}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": _ln(d), "attn": _attn_p(k1, d, H, hd, dtype),
+                "lnc": _ln(d), "cross": _attn_p(k2, d, H, hd, dtype, "c"),
+                "ln2": _ln(d),
+                "mlp": {"w1": (jax.random.normal(k3, (d, f)) * 0.02
+                               ).astype(dtype),
+                        "w2": (jax.random.normal(jax.random.fold_in(k3, 1),
+                                                 (f, d)) * 0.02
+                               ).astype(dtype)}}
+
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, d)) * 0.02
+                  ).astype(dtype),
+        "pos_embed": (jax.random.normal(ks[1], (max_dec, d)) * 0.01
+                      ).astype(dtype),
+        "enc_blocks": jax.vmap(enc_layer)(
+            jax.random.split(ks[2], cfg.enc_layers)),
+        "enc_norm": _ln(d),
+        "dec_blocks": jax.vmap(dec_layer)(
+            jax.random.split(ks[3], cfg.num_layers)),
+        "dec_norm": _ln(d),
+    }
+
+
+def _self_attn(h, p, cfg, causal, cache_kv=None, pos=None):
+    B, S, _ = h.shape
+    H, hd = cfg.num_heads, cfg.hd
+    q = dot(h, p["wq"].astype(h.dtype)).reshape(B, S, H, hd)
+    k = dot(h, p["wk"].astype(h.dtype)).reshape(B, S, H, hd).astype(h.dtype)
+    v = dot(h, p["wv"].astype(h.dtype)).reshape(B, S, H, hd).astype(h.dtype)
+    if cache_kv is None:
+        out = attend(q, k, v, causal=causal, window=0)
+        kv = (k, v)
+    else:
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, pos, 0, 0))
+        out = decode_attend(q, ck, cv, kv_len=pos + 1)
+        kv = (ck, cv)
+    return dot(out.reshape(B, S, H * hd),
+               p["wo"].astype(h.dtype)).astype(h.dtype), kv
+
+
+def _cross_attn(h, p, cfg, enc_kv, enc_len=None, single=False):
+    B, S, _ = h.shape
+    H, hd = cfg.num_heads, cfg.hd
+    q = dot(h, p["cq"].astype(h.dtype)).reshape(B, S, H, hd)
+    k, v = enc_kv
+    if single:
+        out = decode_attend(q, k, v, kv_len=k.shape[1] if enc_len is None
+                            else enc_len, q_pos=k.shape[1])
+    else:
+        out = attend(q, k, v, causal=False, window=0)
+    return dot(out.reshape(B, S, H * hd),
+               p["co"].astype(h.dtype)).astype(h.dtype)
+
+
+def encode(params, cfg: ModelConfig, frames) -> jnp.ndarray:
+    """frames: [B, S, D] precomputed embeddings (frontend stub)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = hint(x, "residual")
+
+    def body(carry, lp):
+        h = layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        a, _ = _self_attn(h, lp["attn"], cfg, causal=False)
+        x = carry + a
+        h2 = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        x = hint(x + mlp(h2, lp["mlp"], "gelu", False), "residual")
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body) if cfg.remat else body,
+                        x, params["enc_blocks"],
+                        unroll=cfg.enc_layers if cfg.scan_unroll else 1)
+    return layer_norm(x, params["enc_norm"]["scale"],
+                      params["enc_norm"]["bias"])
+
+
+def _dec_embed(params, tokens, pos0=0):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    S = tokens.shape[1]
+    pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos0, S, 0)
+    return x + pe[None].astype(x.dtype)
+
+
+def _cross_kv(lp, cfg, enc_out):
+    B, S, _ = enc_out.shape
+    H, hd = cfg.num_heads, cfg.hd
+    k = dot(enc_out, lp["ck"].astype(enc_out.dtype)).reshape(B, S, H, hd)
+    v = dot(enc_out, lp["cv"].astype(enc_out.dtype)).reshape(B, S, H, hd)
+    return k.astype(enc_out.dtype), v.astype(enc_out.dtype)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out):
+    x = _dec_embed(params, tokens)
+    x = hint(x, "residual")
+
+    def body(carry, lp):
+        h = layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        a, _ = _self_attn(h, lp["attn"], cfg, causal=True)
+        x = carry + a
+        hc = layer_norm(x, lp["lnc"]["scale"], lp["lnc"]["bias"])
+        x = x + _cross_attn(hc, lp["cross"], cfg, _cross_kv(lp["cross"],
+                                                            cfg, enc_out))
+        h2 = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        x = hint(x + mlp(h2, lp["mlp"], "gelu", False), "residual")
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body) if cfg.remat else body,
+                        x, params["dec_blocks"],
+                        unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    x = layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
+    logits = dot(x, params["embed"].T.astype(x.dtype))
+    return hint(logits, "logits")
+
+
+def loss(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    enc = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, batch["tokens"], enc)
+    lp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    ll = jnp.take_along_axis(lp, batch["labels"][..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L, H, hd = cfg.num_layers, cfg.num_heads, cfg.hd
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((L, batch, max_len, H, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, H, hd), dtype),
+        "enc_k": jnp.zeros((L, batch, enc_len, H, hd), dtype),
+        "enc_v": jnp.zeros((L, batch, enc_len, H, hd), dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens,
+            max_len: Optional[int] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Encode audio, precompute cross-KV, run the decoder prompt."""
+    enc = encode(params, cfg, frames)
+    S_dec = tokens.shape[1]
+    max_len = max_len or S_dec
+    x = _dec_embed(params, tokens)
+
+    def body(carry, lp):
+        h = layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        a, (k, v) = _self_attn(h, lp["attn"], cfg, causal=True)
+        x = carry + a
+        hc = layer_norm(x, lp["lnc"]["scale"], lp["lnc"]["bias"])
+        ekv = _cross_kv(lp["cross"], cfg, enc)
+        x = x + _cross_attn(hc, lp["cross"], cfg, ekv)
+        h2 = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        x = hint(x + mlp(h2, lp["mlp"], "gelu", False), "residual")
+        return x, (k, v, ekv[0], ekv[1])
+
+    x, (ks, vs, eks, evs) = jax.lax.scan(
+        body, x, params["dec_blocks"],
+        unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    if max_len != S_dec:
+        pad = jnp.zeros(ks.shape[:2] + (max_len,) + ks.shape[3:], ks.dtype)
+        ks = jax.lax.dynamic_update_slice(pad, ks, (0,) * 5)
+        vs = jax.lax.dynamic_update_slice(jnp.zeros_like(pad), vs, (0,) * 5)
+    x = layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
+    logits = dot(x[:, -1:], params["embed"].T.astype(x.dtype))
+    cache = {"pos": jnp.asarray(S_dec, jnp.int32),
+             "k": ks, "v": vs, "enc_k": eks, "enc_v": evs}
+    return hint(logits, "logits"), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict, tokens):
+    pos = cache["pos"]
+    x = _dec_embed(params, tokens, pos0=pos)
+
+    def body(carry, xs):
+        lp, ck, cv, ek, ev = xs
+        h = layer_norm(carry, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        a, (nk, nv) = _self_attn(h, lp["attn"], cfg, causal=True,
+                                 cache_kv=(ck, cv), pos=pos)
+        x = carry + a
+        hc = layer_norm(x, lp["lnc"]["scale"], lp["lnc"]["bias"])
+        x = x + _cross_attn(hc, lp["cross"], cfg, (ek, ev), single=True)
+        h2 = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        x = x + mlp(h2, lp["mlp"], "gelu", False)
+        return x, (nk, nv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["enc_k"], cache["enc_v"]),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    x = layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
+    logits = dot(x, params["embed"].T.astype(x.dtype))
+    new_cache = {"pos": pos + 1, "k": ks, "v": vs,
+                 "enc_k": cache["enc_k"], "enc_v": cache["enc_v"]}
+    return hint(logits, "logits"), new_cache

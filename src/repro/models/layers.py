@@ -1,0 +1,114 @@
+"""Shared building blocks for the model zoo (pure functional JAX).
+
+Conventions:
+  * params are plain dicts of jnp arrays; per-layer params are *stacked*
+    on a leading layer axis so layer loops are ``jax.lax.scan``s.
+  * matmuls accumulate in fp32 (``preferred_element_type``) with bf16
+    operands — the precision scheme the roofline assumes (197 TFLOP/s
+    bf16 MXU).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+
+F32 = jnp.float32
+
+
+def dot(a, b, **kw):
+    return jnp.matmul(a, b, preferred_element_type=F32, **kw)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(F32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(F32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale.astype(F32) \
+        + bias.astype(F32)
+    return out.astype(x.dtype)
+
+
+def norm(x, p, kind: str, eps: float):
+    if kind == "layer":
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+def softcap(x, cap: float):
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(F32) / cap)).astype(x.dtype)
+
+
+def rotary(x, positions, theta: float):
+    """Apply RoPE.  x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freqs          # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def mlp(x, p, act: str, gated: bool):
+    """SwiGLU/GeGLU (gated) or plain 2-matmul MLP."""
+    h = dot(x, p["w1"])                                     # [.., F]
+    if gated:
+        h = activation(h, act) * dot(x, p["w3"])
+    else:
+        h = activation(h, act)
+    h = hint(h.astype(x.dtype), "act_ff")
+    return dot(h, p["w2"]).astype(x.dtype)
+
+
+def embed(tokens, table, scale: bool):
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        # keep the scale in the embedding dtype: a python-float multiply
+        # upcasts the whole activation (and, hoisted, the table) to fp32
+        x = x * jnp.asarray(math.sqrt(table.shape[-1]), x.dtype)
+    return x
+
+
+def unembed(x, table_or_head, tied: bool, cap: float = 0.0):
+    w = table_or_head.T if tied else table_or_head
+    logits = dot(x, w.astype(x.dtype))
+    return softcap(logits, cap)
+
+
+def causal_conv1d(x, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv used by mamba: x [B,S,C], w [K,C], b [C].
+
+    With ``state`` ([B, K-1, C], the trailing inputs of the previous step)
+    this is the streaming/decode form; returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xin = jnp.concatenate([state, x], axis=1)               # [B, S+K-1, C]
+    y = sum(xin[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xin[:, -(k - 1):] if k > 1 else state
+    return (y + b).astype(x.dtype), new_state

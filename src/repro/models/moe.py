@@ -1,0 +1,89 @@
+"""Mixture-of-Experts block: top-k routing with capacity, EP-sharded.
+
+Dispatch is scatter/gather-based (no [T, E, C] one-hot blowup, which is
+intractable at kimi-k2 scale: T=65k, E=384).  Token -> (expert, slot)
+assignments are computed with per-expert running counts; overflow tokens
+are dropped (capacity factor knob).  Experts run as one grouped einsum
+over the expert axis, which GSPMD shards over the ``model`` (EP) axis.
+
+Supports arctic's parallel dense-FFN residual (``dense_ff``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoEConfig
+from ..distributed.sharding import hint
+from .layers import activation, dot, mlp
+
+F32 = jnp.float32
+
+
+def _capacity(moe: MoEConfig, num_tokens: int) -> int:
+    c = int(moe.capacity_factor * num_tokens * moe.top_k / moe.num_experts)
+    return max(8, -(-c // 8) * 8)          # >=8 and lane-aligned
+
+
+def moe_block(x, p, moe: MoEConfig, act: str, gated: bool):
+    """x: [B, S, D] (or [B, 1, D] decode) -> same shape."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    E, K = moe.num_experts, moe.top_k
+    C = _capacity(moe, T)
+
+    router_logits = dot(xt, p["router"].astype(xt.dtype))          # [T, E]
+    probs = jax.nn.softmax(router_logits.astype(F32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                   # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # (expert, slot) assignment with running per-expert counts.
+    counts = jnp.zeros((E,), jnp.int32)
+    slot_list, keep_list = [], []
+    for j in range(K):
+        e = gate_idx[:, j]                                          # [T]
+        onehot = jax.nn.one_hot(e, E, dtype=jnp.int32)              # [T, E]
+        pos = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]      # [T, E]
+        slot_in_e = jnp.take_along_axis(pos, e[:, None], axis=1)[:, 0]
+        counts = counts + onehot.sum(axis=0)
+        keep = slot_in_e < C
+        slot_list.append(jnp.where(keep, e * C + slot_in_e, E * C))  # E*C=drop
+        keep_list.append(keep)
+    slots = jnp.stack(slot_list, axis=1)                            # [T, K]
+    keeps = jnp.stack(keep_list, axis=1)                            # [T, K]
+
+    # Dispatch: scatter token rows into [E*C, D] (dropped -> overflow row).
+    disp = jnp.zeros((E * C + 1, D), xt.dtype)
+    tok_rows = jnp.repeat(xt[:, None, :], K, axis=1).reshape(T * K, D)
+    disp = disp.at[slots.reshape(-1)].set(tok_rows, mode="drop")
+    xe = hint(disp[: E * C].reshape(E, C, D), "moe_disp")
+
+    # Grouped expert FFN (EP over the expert axis).
+    h = jnp.einsum("ecd,edf->ecf", xe, p["ew1"].astype(xe.dtype),
+                   preferred_element_type=F32)
+    if gated:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["ew3"].astype(xe.dtype),
+                       preferred_element_type=F32)
+        h = activation(h, act) * g
+    else:
+        h = activation(h, act)
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(xe.dtype),
+                    p["ew2"].astype(xe.dtype),
+                    preferred_element_type=F32)                     # [E, C, D]
+
+    # Combine: gather each token's k expert outputs, weight by gates.
+    ye_flat = jnp.concatenate(
+        [ye.reshape(E * C, D), jnp.zeros((1, D), ye.dtype)], axis=0)
+    per_k = ye_flat[slots.reshape(-1)].reshape(T, K, D)
+    w = (gate_vals * keeps).astype(per_k.dtype)                     # [T, K]
+    yt = jnp.einsum("tkd,tk->td", per_k, w,
+                    preferred_element_type=F32).astype(x.dtype)
+
+    if moe.dense_ff and "dw1" in p:                                 # arctic
+        dense_p = {"w1": p["dw1"], "w2": p["dw2"]}
+        if gated:
+            dense_p["w3"] = p["dw3"]
+        yt = yt + mlp(xt, dense_p, act, gated).astype(x.dtype)
+    return yt.reshape(B, S, D)

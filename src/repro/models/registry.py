@@ -1,0 +1,108 @@
+"""Unified model API: ``build(cfg)`` returns callables shared by the
+trainer, serving engine, and dry-run; ``input_specs`` produces
+ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no allocation)
+for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import encdec, transformer
+
+WHISPER_DEC_LEN = 448          # whisper decoder context (prompt length)
+WHISPER_ENC_LEN = 1500         # encoder frames for decode cells
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable                 # (key, max_dec) -> params
+    loss: Callable                 # (params, batch) -> scalar
+    prefill: Callable              # (params, batch, max_len) -> (logits, cache)
+    decode: Callable               # (params, cache, tokens) -> (logits, cache)
+    init_cache: Callable           # (batch, max_len, enc_len) -> cache
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.encdec:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key, max_dec=4096: encdec.init_params(key, cfg,
+                                                              max_dec),
+            loss=lambda p, b: encdec.loss(p, cfg, b),
+            prefill=lambda p, b, max_len=None: encdec.prefill(
+                p, cfg, b["frames"], b["tokens"], max_len),
+            decode=lambda p, c, t: encdec.decode_step(p, cfg, c, t),
+            init_cache=lambda batch, max_len, enc_len=WHISPER_ENC_LEN:
+                encdec.init_cache(cfg, batch, max_len, enc_len),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key, max_dec=0: transformer.init_params(key, cfg),
+        loss=lambda p, b: transformer.loss(p, cfg, b),
+        prefill=lambda p, b, max_len=None: transformer.prefill(
+            p, cfg, b["tokens"], b.get("image_embeds"), max_len),
+        decode=lambda p, c, t: transformer.decode_step(p, cfg, c, t),
+        init_cache=lambda batch, max_len, enc_len=0:
+            transformer.init_cache(cfg, batch, max_len),
+    )
+
+
+# ------------------------------------------------------------ input specs ---
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> Dict:
+    """Batch ShapeDtypeStructs for one (arch x shape) cell.
+
+    ``train``:  token/label batch (modality stubs included).
+    ``prefill``: prompt batch.
+    ``decode``:  one new token + a cache filled to ``seq_len``.
+    """
+    B, S = spec.global_batch, spec.seq_len
+    d = cfg.d_model
+    act_dt = cfg.dtype
+
+    dec_len = min(WHISPER_DEC_LEN, S)
+    if spec.kind == "train":
+        if cfg.encdec:
+            return {"frames": _sds((B, S, d), act_dt),
+                    "tokens": _sds((B, dec_len), "int32"),
+                    "labels": _sds((B, dec_len), "int32")}
+        if cfg.vlm_stub:
+            P = cfg.num_patches
+            return {"tokens": _sds((B, S - P), "int32"),
+                    "image_embeds": _sds((B, P, d), act_dt),
+                    "labels": _sds((B, S - P), "int32")}
+        return {"tokens": _sds((B, S), "int32"),
+                "labels": _sds((B, S), "int32")}
+
+    if spec.kind == "prefill":
+        if cfg.encdec:
+            return {"frames": _sds((B, S, d), act_dt),
+                    "tokens": _sds((B, dec_len), "int32")}
+        if cfg.vlm_stub:
+            P = cfg.num_patches
+            return {"tokens": _sds((B, S - P), "int32"),
+                    "image_embeds": _sds((B, P, d), act_dt)}
+        return {"tokens": _sds((B, S), "int32")}
+
+    # decode: one token against a seq_len cache
+    api = build(cfg)
+    cache = jax.eval_shape(
+        lambda: api.init_cache(B, S))
+    return {"tokens": _sds((B, 1), "int32"), "cache": cache}
+
+
+def param_shapes(cfg: ModelConfig, spec: Optional[ShapeSpec] = None):
+    """Abstract param pytree (no allocation) for lowering."""
+    api = build(cfg)
+    max_dec = spec.seq_len if (spec and cfg.encdec) else 4096
+    return jax.eval_shape(
+        lambda: api.init(jax.random.PRNGKey(0), max_dec))

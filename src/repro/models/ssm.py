@@ -1,0 +1,158 @@
+"""Mamba-2 (SSD: state-space duality) mixer, chunked for TPU.
+
+The SSD recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+y_t = C_t h_t + D x_t  is evaluated chunk-parallel (arXiv:2405.21060):
+intra-chunk terms as a masked quadratic form (MXU-friendly), inter-chunk
+via a ``lax.scan`` over per-chunk states.  Single-token decode keeps the
+dense state ``[B, H, hd, N]`` plus the causal-conv tail.
+
+Layout: d_inner = expand * d_model; H = d_inner / head_dim heads;
+B/C are shared per group (n_groups, typically 1).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMConfig
+from .layers import causal_conv1d, dot, rms_norm
+
+F32 = jnp.float32
+
+
+def ssm_dims(d_model: int, s: SSMConfig) -> Tuple[int, int, int]:
+    """(d_inner, num_heads, conv_channels)."""
+    din = s.expand * d_model
+    nheads = din // s.head_dim
+    conv_ch = din + 2 * s.n_groups * s.d_state
+    return din, nheads, conv_ch
+
+
+def _split_proj(zxbcdt, d_model, s: SSMConfig):
+    din, nheads, _ = ssm_dims(d_model, s)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [din, din + din + 2 * gn], axis=-1)
+    return z, xbc, dt          # z: [..,din], xbc: [..,din+2gn], dt: [..,H]
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, Dp, chunk: int,
+                state0: Optional[jnp.ndarray] = None):
+    """Chunk-parallel SSD.
+
+    xh [B,S,H,hd]; dt [B,S,H] (softplus applied); A [H] (<0);
+    Bm, Cm [B,S,G,N]; Dp [H].  Returns (y [B,S,H,hd], final_state
+    [B,H,hd,N]).
+    """
+    B, S, H, hd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    R = H // G                                   # heads per group
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // Q
+
+    def chunked(t, extra=()):                    # [B, S, ...] -> [nc, B, Q, ...]
+        return jnp.moveaxis(t.reshape((B, nc, Q) + t.shape[2:]), 1, 0)
+
+    xc, dtc = chunked(xh), chunked(dt)
+    Bc, Cc = chunked(Bm), chunked(Cm)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, N), F32)
+
+    def body(state, xs):
+        xq, dtq, Bq, Cq = xs                     # [B,Q,...]
+        xf = xq.astype(F32)
+        dA = dtq.astype(F32) * A.astype(F32)     # [B,Q,H]
+        cum = jnp.cumsum(dA, axis=1)             # inclusive cumsum
+        # --- intra-chunk (masked quadratic): h_i += Σ_{j<=i} e^{cum_i-cum_j} dt_j B_j x_j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # [B,Q,Q,H]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bqgn,bpgn->bqpg", Cq.astype(F32), Bq.astype(F32),
+                        preferred_element_type=F32)          # [B,Q,Q,G]
+        CB = jnp.repeat(CB, R, axis=3)                       # [B,Q,Q,H]
+        W = CB * L * dtq.astype(F32)[:, None, :, :]          # weight for x_j
+        y_diag = jnp.einsum("bqph,bphd->bqhd", W, xf,
+                            preferred_element_type=F32)
+        # --- inter-chunk: h_i also carries e^{cum_i} * S_in
+        Cq_h = jnp.repeat(Cq.astype(F32), R, axis=2)         # [B,Q,H,N]
+        y_off = jnp.einsum("bqhn,bhdn->bqhd", Cq_h, state,
+                           preferred_element_type=F32)
+        y_off = y_off * jnp.exp(cum)[:, :, :, None]
+        y = y_diag + y_off
+        # --- state update: S_out = e^{cum_Q} S_in + Σ_j e^{cum_Q-cum_j} dt_j B_j⊗x_j
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)         # [B,Q,H]
+        Bq_h = jnp.repeat(Bq.astype(F32), R, axis=2)         # [B,Q,H,N]
+        contrib = jnp.einsum("bqh,bqhd,bqhn->bhdn",
+                             decay_to_end * dtq.astype(F32), xf, Bq_h,
+                             preferred_element_type=F32)
+        state = jnp.exp(cum[:, -1, :])[:, :, None, None] * state + contrib
+        return state, y
+
+    state, ys = jax.lax.scan(body, state0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S + pad, H, hd)[:, :S]
+    y = y + Dp.astype(F32)[None, None, :, None] * xh[:, :S].astype(F32)
+    return y, state
+
+
+def ssd_decode(x1, dt1, A, B1, C1, Dp, state):
+    """Single-token SSD update.
+
+    x1 [B,H,hd]; dt1 [B,H]; B1,C1 [B,G,N]; state [B,H,hd,N].
+    """
+    Bsz, H, hd = x1.shape
+    G = B1.shape[1]
+    R = H // G
+    dA = jnp.exp(dt1.astype(F32) * A.astype(F32))            # [B,H]
+    B_h = jnp.repeat(B1.astype(F32), R, axis=1)              # [B,H,N]
+    C_h = jnp.repeat(C1.astype(F32), R, axis=1)
+    contrib = (dt1.astype(F32)[:, :, None, None]
+               * x1.astype(F32)[..., None] * B_h[:, :, None, :])
+    state = dA[:, :, None, None] * state + contrib
+    y = jnp.einsum("bhdn,bhn->bhd", state, C_h,
+                   preferred_element_type=F32)
+    y = y + Dp.astype(F32)[None, :, None] * x1.astype(F32)
+    return y, state
+
+
+def mamba_mixer(x, p, d_model: int, s: SSMConfig,
+                conv_state=None, ssm_state=None, decode: bool = False):
+    """Full mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    Prefill/train: x [B,S,D], returns (y, (conv_state, ssm_state)).
+    Decode: x [B,1,D] with states threaded through.
+    """
+    din, H, conv_ch = ssm_dims(d_model, s)
+    gn = s.n_groups * s.d_state
+    zxbcdt = dot(x, p["in_proj"].astype(x.dtype)).astype(x.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, d_model, s)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))
+
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [din, din + gn], axis=-1)
+    Bsz, S = x.shape[0], x.shape[1]
+    xh = xs.reshape(Bsz, S, H, s.head_dim)
+    Bm = Bm.reshape(Bsz, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(Bsz, S, s.n_groups, s.d_state)
+
+    if decode:
+        y, ssm_state = ssd_decode(xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                  p["Dp"], ssm_state)
+        y = y[:, None]                                       # [B,1,H,hd]
+    else:
+        y, ssm_state = ssd_chunked(xh, dt, A, Bm, Cm, p["Dp"], s.chunk,
+                                   ssm_state)
+    y = y.reshape(Bsz, S, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                 p["ssm_norm"])
+    out = dot(y, p["out_proj"].astype(x.dtype)).astype(x.dtype)
+    return out, (conv_state, ssm_state)

@@ -1,0 +1,410 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are *grouped* into homogeneous stacks (e.g. kimi-k2 = 1 dense layer
++ 60 MoE layers) so each group is a single ``lax.scan`` over stacked
+params — one compiled layer body per group regardless of depth.
+Per-layer scalars (sliding-window size) ride along as scan inputs, so
+gemma2's local/global alternation is data, not control flow.
+
+Entry points: ``init_params``, ``forward`` (train), ``loss``, ``prefill``
+(returns KV/SSM cache), ``decode_step`` (one token).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import hint
+from .attention import attend, decode_attend
+from .layers import dot, embed, mlp, norm, rms_norm, rotary, softcap, unembed
+from .ssm import mamba_mixer, ssm_dims
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    name: str
+    kind: str              # dense | moe | ssm | hybrid
+    n: int
+    windows: Tuple[int, ...]   # per-layer sliding window (0 = global)
+
+
+def build_groups(cfg: ModelConfig) -> List[GroupSpec]:
+    L = cfg.num_layers
+
+    def windows(n, offset=0):
+        ws = []
+        for i in range(n):
+            li = i + offset
+            if cfg.sliding_window == 0:
+                ws.append(0)
+            elif cfg.window_pattern == -3:     # hymba: first/middle/last global
+                ws.append(0 if li in (0, L // 2, L - 1) else cfg.sliding_window)
+            elif cfg.window_pattern > 0:       # every Nth layer global
+                ws.append(cfg.sliding_window if li % cfg.window_pattern == 0
+                          else 0)
+            else:
+                ws.append(cfg.sliding_window)
+        return tuple(ws)
+
+    if cfg.family == "ssm":
+        return [GroupSpec("blocks", "ssm", L, (0,) * L)]
+    if cfg.family == "hybrid":
+        return [GroupSpec("blocks", "hybrid", L, windows(L))]
+    if cfg.moe is not None:
+        groups = []
+        fd = cfg.first_dense_layers
+        if fd:
+            groups.append(GroupSpec("dense_blocks", "dense", fd, windows(fd)))
+        groups.append(GroupSpec("blocks", "moe", L - fd, windows(L - fd, fd)))
+        return groups
+    return [GroupSpec("blocks", "dense", L, windows(L))]
+
+
+# ------------------------------------------------------------------- init ---
+def _norm_params(d, cfg, key=None):
+    p = {"scale": jnp.zeros((d,), F32) if cfg.norm_type == "rms"
+         else jnp.ones((d,), F32)}
+    if cfg.norm_type == "layer":
+        p["bias"] = jnp.zeros((d,), F32)
+    return p
+
+
+def _attn_params(key, cfg: ModelConfig, dtype):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 0.02
+    p = {
+        "wq": (jax.random.normal(k1, (d, H * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, K * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, K * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H * hd, d)) * s
+               / math.sqrt(2 * cfg.num_layers)).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), F32)
+        p["k_norm"] = jnp.zeros((hd,), F32)
+    return p
+
+
+def _mlp_params(key, d, f, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 0.02
+    p = {"w1": (jax.random.normal(k1, (d, f)) * s).astype(dtype),
+         "w2": (jax.random.normal(k2, (f, d)) * s
+                / math.sqrt(2 * cfg.num_layers)).astype(dtype)}
+    if cfg.gated_mlp:
+        p["w3"] = (jax.random.normal(k3, (d, f)) * s).astype(dtype)
+    return p
+
+
+def _moe_params(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff, m.num_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s = 0.02
+    p = {
+        "router": (jax.random.normal(k1, (d, E)) * s).astype(F32),
+        "ew1": (jax.random.normal(k2, (E, d, f)) * s).astype(dtype),
+        "ew2": (jax.random.normal(k3, (E, f, d)) * s
+                / math.sqrt(2 * cfg.num_layers)).astype(dtype),
+    }
+    if cfg.gated_mlp:
+        p["ew3"] = (jax.random.normal(k4, (E, d, f)) * s).astype(dtype)
+    if m.dense_ff:
+        dp = _mlp_params(k5, d, m.dense_ff, cfg, dtype)
+        p["dw1"], p["dw2"] = dp["w1"], dp["w2"]
+        if cfg.gated_mlp:
+            p["dw3"] = dp["w3"]
+    return p
+
+
+def _mamba_params(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    din, H, conv_ch = ssm_dims(d, s)
+    gn = s.n_groups * s.d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sc = 0.02
+    dt = jnp.exp(jax.random.uniform(k3, (H,), F32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "in_proj": (jax.random.normal(k1, (d, 2 * din + 2 * gn + H)) * sc
+                    ).astype(dtype),
+        "out_proj": (jax.random.normal(k2, (din, d)) * sc
+                     / math.sqrt(2 * cfg.num_layers)).astype(dtype),
+        "conv_w": (jax.random.normal(k4, (s.d_conv, conv_ch)) * sc
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(dt)),               # softplus^-1(dt)
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=F32)),
+        "Dp": jnp.ones((H,), F32),
+        "ssm_norm": jnp.zeros((din,), F32),
+    }
+
+
+def _layer_params(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict = {"ln1": _norm_params(cfg.d_model, cfg)}
+    if kind == "ssm":
+        p["mamba"] = _mamba_params(ks[0], cfg, dtype)
+        return p
+    if kind == "hybrid":
+        p["attn"] = _attn_params(ks[0], cfg, dtype)
+        p["mamba"] = _mamba_params(ks[1], cfg, dtype)
+    else:
+        p["attn"] = _attn_params(ks[0], cfg, dtype)
+    p["ln2"] = _norm_params(cfg.d_model, cfg)
+    if kind == "moe":
+        p["moe"] = _moe_params(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = _mlp_params(ks[2], cfg.d_model, cfg.d_ff, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "final_norm": _norm_params(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[1],
+                                            (cfg.d_model, cfg.vocab))
+                          * 0.02).astype(dtype)
+    for gi, g in enumerate(build_groups(cfg)):
+        lkeys = jax.random.split(jax.random.fold_in(keys[2], gi), g.n)
+        params[g.name] = jax.vmap(
+            lambda k: _layer_params(k, g.kind, cfg, dtype))(lkeys)
+    return params
+
+
+# ---------------------------------------------------------------- forward ---
+def _attention(h, p, cfg: ModelConfig, positions, window,
+               cache_kv=None, pos=None):
+    """Returns (attn_out, (k, v) or updated cache slices)."""
+    B, S, _ = h.shape
+    H, K, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+    q = dot(h, p["wq"].astype(h.dtype))
+    k = dot(h, p["wk"].astype(h.dtype))
+    v = dot(h, p["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd).astype(h.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta).astype(h.dtype)
+
+    if cache_kv is None:                       # train / prefill
+        # Sequence-parallel callers re-shard to head sharding here (an
+        # all-to-all) rather than all-gathering the full K/V sequence.
+        q = hint(q, "attn_q")
+        k = hint(k, "attn_kv")
+        v = hint(v, "attn_kv")
+        out = attend(q, k, v, causal=True, window=window,
+                     softcap=cfg.attn_softcap)
+        out = hint(out, "attn_o")
+        new_kv = (k, v)
+    else:                                      # decode: append then attend
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, pos, 0, 0))
+        out = decode_attend(q, ck, cv, kv_len=pos + 1, window=window,
+                            softcap=cfg.attn_softcap)
+        new_kv = (ck, cv)
+    out = dot(out.reshape(B, S, H * hd), p["wo"].astype(h.dtype))
+    return out.astype(h.dtype), new_kv
+
+
+def _block(x, lp, window, cfg: ModelConfig, kind: str, positions,
+           cache=None, pos=None):
+    """One layer body.  cache: dict slice for this layer (decode) or None.
+    Returns (x, ys) where ys carries cache material."""
+    from .moe import moe_block        # local import to avoid cycles
+
+    h = norm(x, lp["ln1"], cfg.norm_type, cfg.norm_eps)
+    ys = {}
+    if kind == "ssm":
+        y, (cst, sst) = mamba_mixer(
+            h, lp["mamba"], cfg.d_model, cfg.ssm,
+            conv_state=None if cache is None else cache["conv_state"],
+            ssm_state=None if cache is None else cache["ssm_state"],
+            decode=cache is not None)
+        ys["conv_state"], ys["ssm_state"] = cst, sst
+        x = hint(x + y, "residual")
+        return x, ys
+
+    if kind == "hybrid":
+        a, kv = _attention(h, lp["attn"], cfg, positions, window,
+                           cache_kv=None if cache is None
+                           else (cache["k"], cache["v"]), pos=pos)
+        m, (cst, sst) = mamba_mixer(
+            h, lp["mamba"], cfg.d_model, cfg.ssm,
+            conv_state=None if cache is None else cache["conv_state"],
+            ssm_state=None if cache is None else cache["ssm_state"],
+            decode=cache is not None)
+        ys["k"], ys["v"] = kv
+        ys["conv_state"], ys["ssm_state"] = cst, sst
+        x = hint(x + 0.5 * (a + m), "residual")
+    else:
+        a, kv = _attention(h, lp["attn"], cfg, positions, window,
+                           cache_kv=None if cache is None
+                           else (cache["k"], cache["v"]), pos=pos)
+        ys["k"], ys["v"] = kv
+        x = hint(x + a, "residual")
+
+    h2 = norm(x, lp["ln2"], cfg.norm_type, cfg.norm_eps)
+    if kind == "moe":
+        y = moe_block(h2, lp["moe"], cfg.moe, cfg.act, cfg.gated_mlp)
+    else:
+        y = mlp(h2, lp["mlp"], cfg.act, cfg.gated_mlp)
+    x = hint(x + y.astype(x.dtype), "residual")
+    return x, ys
+
+
+def _run_group(x, gparams, g: GroupSpec, cfg: ModelConfig, positions,
+               cache=None, pos=None, collect_cache=False):
+    windows = jnp.asarray(g.windows, jnp.int32)
+
+    def body(carry, xs):
+        if cache is None:
+            lp, w = xs
+            c = None
+        else:
+            lp, w, c = xs
+        out, ys = _block(carry, lp, w, cfg, g.kind, positions, cache=c,
+                         pos=pos)
+        if not collect_cache and cache is None:
+            ys = None
+        return out, ys
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+    xs = (gparams, windows) if cache is None else (gparams, windows, cache)
+    x, ys = jax.lax.scan(body_fn, x, xs,
+                         unroll=g.n if cfg.scan_unroll else 1)
+    return x, ys
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, img_embeds=None):
+    x = embed(tokens, params["embed"], cfg.embed_scale)
+    if cfg.vlm_stub and img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, img_embeds=None):
+    """Training/eval forward -> logits [B, S_total, V]."""
+    x = _embed_inputs(params, cfg, tokens, img_embeds)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = hint(x, "residual")
+    for g in build_groups(cfg):
+        x, _ = _run_group(x, params[g.name], g, cfg, positions)
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = unembed(x, params["embed"] if cfg.tie_embeddings
+                     else params["head"], cfg.tie_embeddings,
+                     cfg.final_softcap)
+    return hint(logits, "logits")
+
+
+def loss(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    logits = forward(params, cfg, batch["tokens"],
+                     batch.get("image_embeds"))
+    labels = batch["labels"]
+    if cfg.vlm_stub and logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]      # drop image positions
+    lp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    return -ll.mean()
+
+
+# ---------------------------------------------------------------- serving ---
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Dict:
+    """Zeroed decode cache; ``pos`` tracks the filled length."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cache: Dict = {"pos": jnp.zeros((), jnp.int32)}
+    for g in build_groups(cfg):
+        c: Dict = {}
+        if g.kind in ("dense", "moe", "hybrid"):
+            c["k"] = jnp.zeros((g.n, batch, max_len, cfg.kv_heads, cfg.hd),
+                               dtype)
+            c["v"] = jnp.zeros_like(c["k"])
+        if g.kind in ("ssm", "hybrid"):
+            din, H, conv_ch = ssm_dims(cfg.d_model, cfg.ssm)
+            c["conv_state"] = jnp.zeros(
+                (g.n, batch, cfg.ssm.d_conv - 1, conv_ch), dtype)
+            c["ssm_state"] = jnp.zeros(
+                (g.n, batch, H, cfg.ssm.head_dim, cfg.ssm.d_state), F32)
+        cache[g.name] = c
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, img_embeds=None,
+            max_len: Optional[int] = None):
+    """Process the prompt; returns (last-token logits, filled cache)."""
+    x = _embed_inputs(params, cfg, tokens, img_embeds)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = hint(x, "residual")
+    cache: Dict = {"pos": jnp.asarray(S, jnp.int32)}
+    for g in build_groups(cfg):
+        x, ys = _run_group(x, params[g.name], g, cfg, positions,
+                           collect_cache=True)
+        c: Dict = {}
+        if "k" in ys:
+            k, v = ys["k"], ys["v"]               # [n, B, S, K, hd]
+            if max_len != S:
+                padded = jnp.zeros(k.shape[:2] + (max_len,) + k.shape[3:],
+                                   k.dtype)
+                k = jax.lax.dynamic_update_slice(
+                    padded, k, (0, 0, 0, 0, 0))
+                v = jax.lax.dynamic_update_slice(
+                    jnp.zeros_like(padded), v, (0, 0, 0, 0, 0))
+            c["k"], c["v"] = k, v
+        if "ssm_state" in ys:
+            c["conv_state"] = ys["conv_state"]
+            c["ssm_state"] = ys["ssm_state"]
+        cache[g.name] = c
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    last = x[:, -1:]
+    logits = unembed(last, params["embed"] if cfg.tie_embeddings
+                     else params["head"], cfg.tie_embeddings,
+                     cfg.final_softcap)
+    return hint(logits, "logits"), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict, tokens):
+    """One decode step: tokens [B, 1] -> (logits [B, 1, V], new cache)."""
+    pos = cache["pos"]
+    x = embed(tokens, params["embed"], cfg.embed_scale)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    new_cache: Dict = {"pos": pos + 1}
+    for g in build_groups(cfg):
+        x, ys = _run_group(x, params[g.name], g, cfg, positions,
+                           cache=cache[g.name], pos=pos)
+        new_cache[g.name] = ys
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = unembed(x, params["embed"] if cfg.tie_embeddings
+                     else params["head"], cfg.tie_embeddings,
+                     cfg.final_softcap)
+    return hint(logits, "logits"), new_cache

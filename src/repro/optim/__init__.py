@@ -1,0 +1,5 @@
+from .optimizers import (Optimizer, adafactor, adamw, clip_by_global_norm,
+                         cosine_schedule, make_optimizer)
+
+__all__ = ["Optimizer", "adafactor", "adamw", "clip_by_global_norm",
+           "cosine_schedule", "make_optimizer"]

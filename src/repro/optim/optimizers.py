@@ -1,0 +1,171 @@
+"""Optimizers (no external deps): AdamW and Adafactor.
+
+* AdamW: fp32 ``m``/``v`` states (sharded like the params via
+  ``state_specs``) — the default for <=100B configs.
+* Adafactor: factored second moment over the trailing two dims, no
+  momentum — required for the giant MoEs (kimi-k2 1T: fp32 Adam states
+  alone would be 8 TB, >16 GB/chip at 256-way sharding).
+
+Updates are computed in fp32 and cast back to the param dtype (bf16
+params act as their own master copy at these batch sizes; the
+roofline/§Perf analysis treats optimizer memory explicitly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable            # params -> state
+    update: Callable          # (grads, state, params) -> (params, state)
+    state_specs: Callable     # param_specs pytree -> state specs pytree
+
+
+def cosine_schedule(base_lr: float, warmup: int = 200,
+                    total: int = 10_000, min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(F32)
+        warm = base_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(F32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale), grads), norm
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          schedule=None, max_grad_norm: float = 1.0) -> Optimizer:
+    sched = schedule or (lambda s: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, F32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(F32)
+        bc2 = 1 - b2 ** step.astype(F32)
+
+        def upd(g, m, v, p):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr_t * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"step": step, "m": new_m, "v": new_v}, gnorm
+
+    def state_specs(params_sds, pspecs):
+        return {"step": P(),
+                "m": pspecs,
+                "v": pspecs}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, weight_decay=0.0,
+              schedule=None, max_grad_norm: float = 1.0) -> Optimizer:
+    sched = schedule or (lambda s: lr)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], F32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+            return {"v": jnp.zeros(p.shape, F32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        beta = 1.0 - (step.astype(F32) + 1.0) ** (-decay)
+
+        def upd(g, v, p):
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1,
+                                               keepdims=True)[..., None],
+                                       eps))
+                u = g / jnp.sqrt(jnp.maximum(denom, eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nvv = beta * v["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(nvv, eps))
+                nv = {"v": nvv}
+            # update clipping (Shazeer & Stern): RMS(u) <= 1
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            if weight_decay:
+                u = u + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr_t * u).astype(p.dtype), nv
+
+        is_state = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        out = jax.tree.map(upd, grads, state["v"], params,
+                           is_leaf=lambda x: is_state(x))
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"step": step, "v": new_v}, gnorm
+
+    def state_specs(params_sds, pspecs):
+        def st(sds, spec):
+            parts = list(spec)
+            parts = parts + [None] * (len(sds.shape) - len(parts))
+            if len(sds.shape) >= 2:
+                # vr drops the last dim's axis; vc the second-to-last's.
+                return {"vr": P(*parts[:-1]),
+                        "vc": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": P(*parts)}
+        return {"step": P(),
+                "v": jax.tree.map(st, params_sds, pspecs)}
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(name: str, lr: float = 3e-4,
+                   schedule=None) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr, schedule=schedule)
+    if name == "adafactor":
+        return adafactor(lr=lr, schedule=schedule)
+    raise ValueError(f"unknown optimizer {name!r}")

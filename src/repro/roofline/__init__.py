@@ -1,0 +1,5 @@
+from .analysis import (HW, collective_bytes_from_hlo, roofline_terms,
+                       summarize_cell)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms",
+           "summarize_cell"]

@@ -1,0 +1,6 @@
+from .engine import (EmbeddingServingEngine, LMServingEngine, ServeStats,
+                     StorageModel, WeightServer)
+from .kvcache import PagedKVCache
+
+__all__ = ["EmbeddingServingEngine", "LMServingEngine", "ServeStats",
+           "StorageModel", "WeightServer", "PagedKVCache"]

@@ -1,0 +1,236 @@
+"""Multi-model serving engine backed by the deduplicated page store.
+
+This is the paper's runtime loop transposed to the TPU memory hierarchy
+(DESIGN.md §2): the **page store** (host DRAM / checkpoint) holds the
+deduplicated pages; the **buffer pool** decides which pages are
+device-resident (HBM); inference touches pages through the pool, so
+shared pages hit for *every* model variant that uses them.
+
+Components:
+  * :class:`StorageModel` — virtual-clock latency model for the backing
+    tier (ssd / hdd / nvme / host-dram), used when a page misses.
+  * :class:`WeightServer` — ModelStore + BufferPool + storage sim; tracks
+    per-model arrival rates (the lambda_i of Eq. 2 flow straight into the
+    pool's eviction policy).  Optional hedged fetches for stragglers.
+  * :class:`EmbeddingServingEngine` — the paper's word2vec / text-
+    classification scenario: requests are token batches; inference
+    gathers embedding rows (touching only the pages their row blocks
+    live on), mean-pools, applies the classifier head.
+  * :class:`LMServingEngine` — serves a (reduced) LM via prefill/decode
+    with per-model weight fetch through the pool; used by the e2e example.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.bufferpool import BufferPool
+from ..core.store import ModelStore
+
+# ------------------------------------------------------------------ storage --
+STORAGE_PRESETS = {
+    # (bandwidth B/s, seek seconds)
+    "hdd": (150e6, 8e-3),
+    "ssd": (500e6, 1e-4),
+    "nvme": (3e9, 2e-5),
+    "dram": (20e9, 1e-6),
+}
+
+
+@dataclasses.dataclass
+class StorageModel:
+    kind: str = "ssd"
+    hedge_after: Optional[float] = None    # straggler hedging deadline (s)
+    jitter: float = 0.0                    # lognormal sigma for tail latency
+    seed: int = 0
+
+    def __post_init__(self):
+        self.bw, self.seek = STORAGE_PRESETS[self.kind]
+        self._rng = np.random.default_rng(self.seed)
+
+    def fetch_seconds(self, nbytes: int) -> float:
+        base = self.seek + nbytes / self.bw
+        if self.jitter:
+            draw = base * float(self._rng.lognormal(0.0, self.jitter))
+            if self.hedge_after is not None and draw > self.hedge_after:
+                # hedged duplicate fetch: take min of two draws
+                draw = min(draw,
+                           self.hedge_after
+                           + base * float(self._rng.lognormal(0.0,
+                                                              self.jitter)))
+            return draw
+        return base
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    fetch_seconds: float = 0.0       # virtual storage time
+    compute_seconds: float = 0.0     # wall compute time
+    pages_fetched: int = 0
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_seconds(self) -> float:
+        return self.fetch_seconds + self.compute_seconds
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self.latencies, p)) if self.latencies \
+            else 0.0
+
+
+# ------------------------------------------------------------- weight serve --
+class WeightServer:
+    """Page-granular weight access through the dedup-aware buffer pool."""
+
+    def __init__(self, store: ModelStore, capacity_pages: int,
+                 policy: str = "optimized_mru",
+                 storage: Optional[StorageModel] = None):
+        self.store = store
+        self.pool: BufferPool = store.make_buffer_pool(capacity_pages, policy)
+        self.storage = storage or StorageModel("ssd")
+        bh, bw = store.cfg.dedup.block_shape
+        self.page_bytes = store.cfg.blocks_per_page * bh * bw * 4
+        self.stats = ServeStats()
+        self._page_cache: Dict[int, np.ndarray] = {}
+        self._pool_arr: Optional[np.ndarray] = None
+
+    def _pages(self) -> np.ndarray:
+        if self._pool_arr is None:
+            self._pool_arr = self.store.page_pool()
+        return self._pool_arr
+
+    def access_pages(self, model: str, page_ids) -> float:
+        """Touch pages through the pool; returns virtual fetch seconds."""
+        t = 0.0
+        for pid in page_ids:
+            hit = self.pool.access(model, pid)
+            if not hit:
+                t += self.storage.fetch_seconds(self.page_bytes)
+                self.stats.pages_fetched += 1
+        self.stats.fetch_seconds += t
+        return t
+
+    def tensor_pages(self, model: str, tensor: str) -> List[int]:
+        return self.store.packing.tensor_pages[(model, tensor)]
+
+    def fetch_tensor(self, model: str, tensor: str) -> np.ndarray:
+        """Access all pages of a tensor, then materialize it."""
+        self.access_pages(model, self.tensor_pages(model, tensor))
+        return self.store.materialize(model, tensor)
+
+    def embedding_rows_pages(self, model: str, tensor: str,
+                             rows: np.ndarray) -> List[int]:
+        """Pages containing the row blocks touched by ``rows`` (the
+        paper's locality win: a batch only faults its own row blocks)."""
+        vt = self.store.virtual_tensor(model, tensor)
+        bh = self.store.cfg.dedup.block_shape[0]
+        gw = vt.grid.grid[1]
+        l = self.store.cfg.blocks_per_page
+        row_blocks = np.unique(rows // bh)
+        logical = (row_blocks[:, None] * gw
+                   + np.arange(gw)[None, :]).reshape(-1)
+        slots = vt.block_map[logical]
+        return sorted(set(int(s) // l for s in slots))
+
+
+# ------------------------------------------------------- embedding serving --
+class EmbeddingServingEngine:
+    """Paper Sec. 7.1.1/7.1.2 scenario: many embedding-model variants."""
+
+    def __init__(self, server: WeightServer,
+                 heads: Dict[str, np.ndarray],
+                 embed_tensor: str = "embedding"):
+        self.server = server
+        self.heads = heads
+        self.embed_tensor = embed_tensor
+        self.queues: Dict[str, deque] = defaultdict(deque)
+        self.stats = ServeStats()
+
+    def submit(self, model: str, docs: np.ndarray) -> None:
+        self.queues[model].append(docs)
+
+    def _infer(self, model: str, docs: np.ndarray) -> np.ndarray:
+        rows = np.unique(docs)
+        pages = self.server.embedding_rows_pages(model, self.embed_tensor,
+                                                 rows)
+        fetch_t = self.server.access_pages(model, pages)
+        t0 = time.perf_counter()
+        emb_rows = self.server.store.materialize_rows(
+            model, self.embed_tensor, rows)
+        idx = np.searchsorted(rows, docs)
+        feats = emb_rows[idx].mean(axis=1)
+        logits = feats @ self.heads[model]
+        compute_t = time.perf_counter() - t0
+        self.stats.fetch_seconds += fetch_t
+        self.stats.compute_seconds += compute_t
+        self.stats.latencies.append(fetch_t + compute_t)
+        self.stats.requests += len(docs)
+        self.stats.batches += 1
+        return logits.argmax(axis=1)
+
+    def run(self, max_batches: Optional[int] = None) -> ServeStats:
+        """Round-robin across model queues (each queue's drain rate is the
+        lambda_i feeding Eq. 2 inside the buffer pool)."""
+        n = 0
+        while any(self.queues.values()):
+            for model in list(self.queues):
+                if not self.queues[model]:
+                    continue
+                self._infer(model, self.queues[model].popleft())
+                n += 1
+                if max_batches and n >= max_batches:
+                    return self.stats
+        return self.stats
+
+
+# --------------------------------------------------------------- LM serving --
+class LMServingEngine:
+    """Serve (reduced) LM variants with batched prefill/decode; weights are
+    faulted in per-tensor through the dedup page pool on model switch."""
+
+    def __init__(self, server: WeightServer, apis: Dict[str, object],
+                 params_template: Dict[str, dict]):
+        self.server = server
+        self.apis = apis
+        self.templates = params_template     # model -> params pytree (np)
+        self.stats = ServeStats()
+        self._resident_model: Optional[str] = None
+        self._params = None
+
+    def _load_model(self, model: str):
+        if self._resident_model == model:
+            return self._params
+        tensors = {}
+        for name in self.server.store.dedup.models[model].tensors:
+            tensors[name] = self.server.fetch_tensor(model, name)
+        self._params = self.templates[model], tensors
+        self._resident_model = model
+        return self._params
+
+    def generate(self, model: str, prompts: np.ndarray,
+                 steps: int = 8) -> Tuple[np.ndarray, float]:
+        import jax.numpy as jnp
+        template, tensors = self._load_model(model)
+        rebuild, api = template["rebuild"], self.apis[model]
+        params = rebuild(tensors)
+        t0 = time.perf_counter()
+        logits, cache = api.prefill(params,
+                                    {"tokens": jnp.asarray(prompts)},
+                                    prompts.shape[1] + steps)
+        out = [np.asarray(logits.argmax(-1))]
+        for _ in range(steps - 1):
+            logits, cache = api.decode(params, cache,
+                                       jnp.asarray(out[-1]).astype("int32"))
+            out.append(np.asarray(logits.argmax(-1)))
+        dt = time.perf_counter() - t0
+        self.stats.compute_seconds += dt
+        self.stats.latencies.append(dt)
+        self.stats.requests += len(prompts)
+        self.stats.batches += 1
+        return np.concatenate(out, axis=1), dt

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# src-layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Smoke tests must see exactly ONE device — never set
+# --xla_force_host_platform_device_count here (dry-run tests spawn
+# subprocesses with REPRO_DRYRUN_DEVICES instead).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", "")

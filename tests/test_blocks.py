@@ -1,0 +1,52 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import blocks as B
+
+
+@given(h=st.integers(1, 90), w=st.integers(1, 90),
+       bh=st.sampled_from([4, 8, 16, 32]), bw=st.sampled_from([4, 8, 16, 32]))
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_2d(h, w, bh, bw):
+    rng = np.random.default_rng(h * 100 + w)
+    x = rng.standard_normal((h, w)).astype(np.float32)
+    blk, grid = B.block_tensor(x, (bh, bw))
+    assert blk.shape == (grid.num_blocks, bh, bw)
+    assert np.array_equal(B.unblock_tensor(blk, grid), x)
+
+
+@pytest.mark.parametrize("shape", [(5,), (7, 11), (3, 4, 5), (2, 3, 4, 5)])
+def test_roundtrip_nd(shape):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(shape).astype(np.float32)
+    blk, grid = B.block_tensor(x, (8, 8))
+    assert np.array_equal(B.unblock_tensor(blk, grid), x)
+
+
+def test_block_order_row_major():
+    x = np.arange(16 * 16, dtype=np.float32).reshape(16, 16)
+    blk, grid = B.block_tensor(x, (8, 8))
+    assert grid.grid == (2, 2)
+    assert np.array_equal(blk[0], x[:8, :8])
+    assert np.array_equal(blk[1], x[:8, 8:])
+    assert np.array_equal(blk[2], x[8:, :8])
+
+
+def test_materialize_with_map():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((32, 32)).astype(np.float32)
+    blk, grid = B.block_tensor(x, (16, 16))
+    pool = blk[[0, 2]]                     # distinct blocks only
+    bmap = np.array([0, 0, 1, 1])          # both col-blocks mapped to one
+    y = B.materialize(pool, bmap, grid)
+    assert np.array_equal(y[:16, :16], x[:16, :16])
+    assert np.array_equal(y[:16, 16:], x[:16, :16])
+
+
+def test_padding_is_zero():
+    x = np.ones((10, 10), np.float32)
+    blk, grid = B.block_tensor(x, (8, 8))
+    assert grid.padded2d == (16, 16)
+    assert blk[3, 2:, 2:].sum() == 0

@@ -1,0 +1,62 @@
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"layer": {"w": jnp.asarray(rng.standard_normal((4, 4)),
+                                       jnp.float32),
+                      "b": jnp.asarray(rng.standard_normal(4),
+                                       jnp.bfloat16)},
+            "step_scale": jnp.asarray(1.5, jnp.float32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    params = _tree(0)
+    opt = {"m": _tree(1)}
+    mgr.save(7, params, opt, extra={"loss": 1.25})
+    p2, o2, manifest = mgr.restore(7, params, opt)
+    for a, b in zip(__import__("jax").tree.leaves(params),
+                    __import__("jax").tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert manifest["extra"]["loss"] == 1.25
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    params = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, params)
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]       # keep=2 garbage-collected
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    params = _tree()
+    mgr.save(5, params)
+    # simulate a crash mid-save: directory without manifest
+    os.makedirs(tmp_path / "step-9")
+    np.savez(tmp_path / "step-9" / "params.npz", x=np.zeros(3))
+    assert mgr.latest_step() == 5          # 9 has no manifest -> ignored
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.restore_latest(_tree()) is None
+
+
+def test_dtype_preserved(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    params = _tree()
+    mgr.save(1, params)
+    p2, _, _ = mgr.restore(1, params)
+    assert p2["layer"]["b"].dtype == jnp.bfloat16

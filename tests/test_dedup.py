@@ -1,0 +1,143 @@
+import numpy as np
+import pytest
+
+from repro.core.dedup import (DedupConfig, Deduplicator, exact_dedup,
+                              minhash_dedup, pairwise_dedup)
+from repro.core.lsh import LSHConfig
+
+
+def _cfg(**kw):
+    base = dict(
+        block_shape=(8, 8),
+        lsh=LSHConfig(num_bands=8, rows_per_band=2, r=1.0,
+                      collision_threshold=6, seed=0),
+        validate_every_k=4,
+        accuracy_drop_threshold=0.1,
+        validate=False,
+    )
+    base.update(kw)
+    return DedupConfig(**base)
+
+
+def _model(seed, shape=(32, 32), scale=1.0):
+    return {"w": (np.random.default_rng(seed)
+                  .standard_normal(shape) * scale).astype(np.float32)}
+
+
+def test_identical_models_fully_dedup():
+    d = Deduplicator(_cfg())
+    m = _model(0)
+    r1 = d.add_model("m1", m)
+    r2 = d.add_model("m2", dict(m))
+    assert r2.deduped_blocks == r2.total_blocks
+    assert d.num_distinct == r1.total_blocks - r1.deduped_blocks
+    assert np.allclose(d.materialize("m2", "w"), m["w"])
+
+
+def test_mapping_is_total_partition():
+    """Every logical block maps to exactly one distinct block (Sec. 4.1
+    conditions 1-2)."""
+    d = Deduplicator(_cfg())
+    d.add_model("a", _model(1))
+    d.add_model("b", _model(2))
+    for m in ("a", "b"):
+        bm = d.models[m].tensors["w"].block_map
+        assert (bm >= 0).all()
+        for did in bm:
+            assert d.distinct[int(did)] is not None
+
+
+def test_accuracy_guard_stops_dedup():
+    """Mock evaluator that tanks when any block changes: Alg. 1 must stop
+    and keep remaining blocks distinct."""
+    base = _model(3, shape=(64, 64))
+    var = {"w": base["w"] + 1e-3}
+
+    def evaluator(tensors):
+        # accuracy tanks the moment any block is replaced by base's rep
+        return 1.0 if np.allclose(tensors["w"], var["w"], atol=1e-4) \
+            else 0.0
+
+    d = Deduplicator(_cfg(validate=True, validate_every_k=2,
+                          accuracy_drop_threshold=0.05,
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=50.0, collision_threshold=1)))
+    d.add_model("base", base, evaluator=lambda t: 1.0)
+    # near-duplicate model; huge r + low threshold force aggressive matching
+    r = d.add_model("var", var, evaluator=evaluator)
+    assert r.stopped
+    # after stopping, remaining blocks are distinct (not replaced)
+    rec = d.materialize("var", "w")
+    n_changed = (np.abs(rec - var["w"]) > 1e-6).sum()
+    assert n_changed < rec.size            # some blocks kept private
+
+
+def test_accuracy_tolerant_evaluator_allows_full_dedup():
+    base = _model(4)
+    d = Deduplicator(_cfg(validate=True,
+                          accuracy_drop_threshold=0.5,
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=50.0, collision_threshold=1)))
+    d.add_model("base", base, evaluator=lambda t: 1.0)
+    r = d.add_model("var", {"w": base["w"] + 1e-3},
+                    evaluator=lambda t: 1.0)
+    assert not r.stopped
+    assert r.deduped_blocks == r.total_blocks
+
+
+def test_remove_model_releases_blocks():
+    d = Deduplicator(_cfg())
+    d.add_model("a", _model(5))
+    n_after_a = d.num_distinct
+    d.add_model("b", _model(6))
+    d.remove_model("b")
+    assert d.num_distinct == n_after_a
+    assert "b" not in d.models
+
+
+def test_update_model_approaches_agree():
+    base = _model(7)
+    for approach in (1, 2):
+        d = Deduplicator(_cfg())
+        d.add_model("m", base)
+        updated = {"w": base["w"] + 0.5}
+        d.update_model("m", updated, approach=approach)
+        assert np.allclose(d.materialize("m", "w"), updated["w"], atol=1e-5)
+
+
+def test_owners_track_sharing():
+    d = Deduplicator(_cfg())
+    m = _model(8)
+    d.add_model("a", m)
+    d.add_model("b", dict(m))
+    owners = d.block_owners()
+    shared = [o for o in owners.values() if len(o) > 1]
+    assert shared, "identical models must share distinct blocks"
+
+
+# ------------------------------------------------------------ baselines ---
+def test_exact_dedup_only_exact():
+    rng = np.random.default_rng(9)
+    a = rng.standard_normal((4, 4)).astype(np.float32)
+    blocks = np.stack([a, a.copy(), a + 1e-6])
+    bmap, n, _ = exact_dedup(blocks)
+    assert n == 2
+    assert bmap[0] == bmap[1] != bmap[2]
+
+
+def test_pairwise_dedup_threshold():
+    rng = np.random.default_rng(10)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    blocks = np.stack([a, a + 1e-4, a + 10.0])
+    bmap, n, _ = pairwise_dedup(blocks, dist_threshold=0.1)
+    assert n == 2
+    assert bmap[0] == bmap[1] != bmap[2]
+
+
+def test_minhash_dedup_runs():
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal((4, 4)).astype(np.float32)
+    blocks = np.stack([a, a.copy(), rng.standard_normal((4, 4)) * 5])
+    bmap, n, dt = minhash_dedup(blocks, num_perm=8)
+    assert bmap[0] == bmap[1]
+    assert n <= 3 and dt >= 0

@@ -1,0 +1,68 @@
+"""Dry-run machinery test: spawns subprocesses with a mini 8-device host
+platform (REPRO_DRYRUN_DEVICES) — the main test process keeps 1 device."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+
+
+def _run_cell(tmp, arch, shape, multi=False):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mini", "--out", tmp]
+    if multi:
+        cmd.append("--multi-pod")
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=540)
+    assert r.returncode == 0, r.stderr[-2000:]
+    mesh = "multi" if multi else "single"
+    path = os.path.join(tmp, f"{arch}__{shape}__{mesh}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+def test_train_cell_single_pod(tmp_path):
+    rec = _run_cell(str(tmp_path), "deepseek-7b", "train_4k")
+    assert rec["status"] == "ok"
+    assert rec["cost_analysis"]["flops"] > 0
+    assert rec["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                           "collective_s")
+    assert rec["collectives"]["total"] > 0          # sharded -> collectives
+    assert rec["memory_analysis"]["argument_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_decode_cell_multi_pod(tmp_path):
+    rec = _run_cell(str(tmp_path), "mamba2-1.3b", "decode_32k", multi=True)
+    assert rec["status"] == "ok"
+    assert rec["meta"]["mesh"] == "2x2x2"
+
+
+@pytest.mark.slow
+def test_skip_rule_recorded(tmp_path):
+    rec = _run_cell(str(tmp_path), "qwen3-14b", "long_500k")
+    assert rec["status"] == "skipped"
+    assert "full-attention" in rec["reason"]
+
+
+def test_main_process_has_one_device():
+    import jax
+    assert jax.device_count() == 1
+
+
+def test_production_mesh_shapes():
+    """Pure metadata check (no devices needed)."""
+    from repro.configs import SHAPES, get_config, list_archs, shape_supported
+    cells = [(a, s) for a in list_archs() for s in SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells if shape_supported(get_config(c[0]),
+                                                    c[1])[0]]
+    assert len(runnable) == 32             # 8 long_500k skips

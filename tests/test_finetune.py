@@ -1,0 +1,55 @@
+import numpy as np
+
+from repro.core.dedup import DedupConfig, Deduplicator
+from repro.core.finetune import (apply_masks, gradient_mask, gradient_masks,
+                                 private_block_mask)
+from repro.core.lsh import LSHConfig
+
+
+def _dedup_pair():
+    cfg = DedupConfig(block_shape=(8, 8),
+                      lsh=LSHConfig(num_bands=8, rows_per_band=2, r=8.0,
+                                    collision_threshold=6),
+                      validate=False)
+    d = Deduplicator(cfg)
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((32, 32)).astype(np.float32)
+    var = base.copy()
+    var[:8, :8] += 5.0                      # one clearly-private block
+    d.add_model("base", {"w": base})
+    d.add_model("var", {"w": var})
+    return d, base, var
+
+
+def test_private_mask_marks_only_private_blocks():
+    d, base, var = _dedup_pair()
+    mask = private_block_mask(d, "var", "w")
+    bm = d.models["var"].tensors["w"].block_map
+    for bid, m in enumerate(mask):
+        owners = d.owners[int(bm[bid])]
+        models = {mm for (mm, _t) in owners}
+        assert (m == 1.0) == (models == {"var"})
+
+
+def test_gradient_mask_freezes_shared_blocks():
+    d, base, var = _dedup_pair()
+    gm = gradient_mask(d, "var", "w")
+    assert gm.shape == (32, 32)
+    # the perturbed block is private -> trainable
+    assert gm[:8, :8].min() == 1.0
+    # shared blocks frozen
+    assert gm.mean() < 1.0
+    grads = {"w": np.ones((32, 32), np.float32)}
+    masked = apply_masks(grads, gradient_masks(d, "var"))
+    assert np.array_equal(masked["w"], gm)
+
+
+def test_finetune_preserves_shared_pages():
+    """Simulated fine-tune: masked updates leave shared blocks bit-equal."""
+    d, base, var = _dedup_pair()
+    gm = gradient_mask(d, "var", "w")
+    current = d.materialize("var", "w")
+    updated = current - 0.1 * gm * np.ones_like(current)
+    # shared regions unchanged
+    assert np.array_equal(updated[gm == 0], current[gm == 0])
+    assert not np.array_equal(updated[gm == 1], current[gm == 1])

@@ -1,0 +1,67 @@
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.lsh import L2LSH, LSHConfig, LSHIndex, estimate_r
+
+
+def _cfg(**kw):
+    base = dict(num_bands=16, rows_per_band=4, r=1.0,
+                collision_threshold=10, seed=0)
+    base.update(kw)
+    return LSHConfig(**base)
+
+
+def test_signature_deterministic():
+    lsh = L2LSH(64, _cfg())
+    x = np.random.default_rng(0).standard_normal((5, 8, 8))
+    s1, s2 = lsh.signatures(x), lsh.signatures(x)
+    assert np.array_equal(s1, s2)
+    assert s1.shape == (5, 64)
+
+
+def test_similar_blocks_collide_dissimilar_dont():
+    rng = np.random.default_rng(1)
+    base = rng.standard_normal(64).astype(np.float32)
+    near = base + rng.standard_normal(64).astype(np.float32) * 0.01
+    far = rng.standard_normal(64).astype(np.float32) * 3
+    idx = LSHIndex(64, _cfg(r=2.0))
+    sigs = idx.lsh.signatures(np.stack([base, near, far]))
+    gid = idx.insert_group(sigs[0], ("m", "t", 0))
+    assert idx.query(sigs[1]) == gid
+    assert idx.query(sigs[2]) is None
+
+
+def test_threshold_monotonic():
+    """Lower collision threshold -> more matches (Tab. 6 behaviour)."""
+    rng = np.random.default_rng(2)
+    base = rng.standard_normal(256).astype(np.float32)
+    variants = base + rng.standard_normal((50, 256)).astype(np.float32) * 0.4
+    matches = {}
+    for thr in (4, 8, 14):
+        idx = LSHIndex(256, _cfg(r=1.5, collision_threshold=thr))
+        s0 = idx.lsh.signatures(base[None])[0]
+        idx.insert_group(s0, ("m", "t", 0))
+        sig = idx.lsh.signatures(variants)
+        matches[thr] = sum(idx.query(s) is not None for s in sig)
+    assert matches[4] >= matches[8] >= matches[14]
+
+
+def test_remove_member_drops_empty_group():
+    idx = LSHIndex(16, _cfg(num_bands=4, rows_per_band=2,
+                            collision_threshold=2))
+    x = np.ones((1, 4, 4), np.float32)
+    s = idx.lsh.signatures(x)[0]
+    gid = idx.insert_group(s, ("m", "t", 0))
+    assert len(idx) == 1
+    assert idx.remove_member(gid, ("m", "t", 0))
+    assert len(idx) == 0
+    assert idx.query(s) is None
+
+
+@given(st.integers(2, 30))
+@settings(max_examples=10, deadline=None)
+def test_estimate_r_positive(n):
+    rng = np.random.default_rng(n)
+    blocks = rng.standard_normal((n, 4, 4))
+    assert estimate_r(blocks) > 0

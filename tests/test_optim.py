@@ -1,0 +1,74 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import (adafactor, adamw, clip_by_global_norm,
+                         cosine_schedule, make_optimizer)
+
+
+def _quadratic_losses(opt, steps=60):
+    target = jnp.asarray(np.random.default_rng(0)
+                         .standard_normal((8, 8)), jnp.float32)
+    params = {"w": jnp.zeros((8, 8), jnp.float32),
+              "b": jnp.zeros((8,), jnp.float32)}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.mean((p["w"] - target) ** 2) + jnp.mean(p["b"] ** 2)
+
+    losses = []
+    for _ in range(steps):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = opt.update(grads, state, params)
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizers_converge(name):
+    opt = make_optimizer(name, lr=5e-2)
+    losses = _quadratic_losses(opt)
+    assert losses[-1] < losses[0] * 0.2
+
+
+def test_grad_clip():
+    grads = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(100.0 * np.sqrt(10), rel=1e-5)
+    cn = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(cn) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert float(s(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(s(jnp.asarray(100))) < 2e-4
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_state_specs_match_state_structure(name):
+    """in_shardings for the dry-run require exact structure match."""
+    opt = make_optimizer(name)
+    params = {"layer": {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,))}}
+    state = opt.init(params)
+    sds = jax.eval_shape(opt.init, params)
+    pspecs = {"layer": {"w": P(None, "model"), "b": P()}}
+    specs = opt.state_specs(
+        jax.eval_shape(lambda p: p, params), pspecs)
+    t1 = jax.tree_util.tree_structure(state)
+    t2 = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert t1 == t2
+
+
+def test_adafactor_memory_smaller_than_adam():
+    params = {"w": jnp.zeros((256, 256))}
+    a = adamw().init(params)
+    f = adafactor().init(params)
+    bytes_a = sum(np.prod(l.shape) * 4 for l in jax.tree.leaves(a["m"]))
+    bytes_f = sum(np.prod(l.shape) * 4
+                  for l in jax.tree.leaves(f["v"]))
+    assert bytes_f < bytes_a / 10

@@ -1,0 +1,106 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pagepack import (alg2_bound, check_coverage,
+                                 equivalent_classes, pack, pack_dedup_base,
+                                 pack_greedy1, pack_greedy2, pack_two_stage)
+
+
+def _random_tensor_sets(draw_seed, k=4, n=40):
+    rng = np.random.default_rng(draw_seed)
+    sets = {}
+    for i in range(k):
+        size = int(rng.integers(1, n))
+        sets[("m", f"t{i}")] = frozenset(
+            int(b) for b in rng.choice(n, size, replace=False))
+    return sets
+
+
+@given(seed=st.integers(0, 1000), l=st.sampled_from([2, 3, 5, 8]),
+       k=st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_coverage_invariant_all_strategies(seed, l, k):
+    """MTPPDP conditions hold for every strategy on random instances."""
+    sets = _random_tensor_sets(seed, k=k)
+    for fn in (pack_greedy1, pack_greedy2, pack_two_stage):
+        res = fn(sets, l)
+        check_coverage(res, sets, l)
+
+
+@given(seed=st.integers(0, 500), l=st.sampled_from([2, 4, 8]))
+@settings(max_examples=30, deadline=None)
+def test_alg2_bound_thm2(seed, l):
+    """Thm. 2: Alg2(P) <= OPT_lower + 2^k - 1."""
+    sets = _random_tensor_sets(seed, k=4)
+    res = pack_greedy1(sets, l)
+    assert res.num_pages <= alg2_bound(sets, l)
+
+
+def test_paper_fig5_example():
+    """Fig. 5/6: blocks 1-16 shared by both tensors, 17-20 private to t1,
+    page limit 4 -> the good packing stores 5 distinct pages
+    (4 shared + 1 private)."""
+    shared = frozenset(range(16))
+    t1 = shared | frozenset(range(16, 20))
+    sets = {("m", "t1"): frozenset(t1), ("m", "t2"): shared}
+    for fn in (pack_greedy1, pack_two_stage):
+        res = fn(sets, 4)
+        check_coverage(res, sets, 4)
+        assert res.num_pages == 5
+
+
+def test_paper_fig7_repacking_wins():
+    """Fig. 7: classes C1 (shared t1,t2), C2 (t2), C6 (t1), page l=2:
+    greedy-1 leaves 3 non-full pages; two-stage packs 2."""
+    sets = {("m", "t1"): frozenset({1, 6}),   # C1={1}, C6={6}
+            ("m", "t2"): frozenset({1, 2})}   # C2={2}
+    g1 = pack_greedy1(sets, 2)
+    ts = pack_two_stage(sets, 2)
+    check_coverage(g1, sets, 2)
+    check_coverage(ts, sets, 2)
+    assert g1.num_pages == 3
+    assert ts.num_pages == 2
+
+
+def test_dedup_base_eliminates_duplicate_pages():
+    seq = np.array([0, 1, 2, 3, 0, 1, 2, 3])
+    seqs = {("m", "a"): seq, ("m", "b"): seq.copy()}
+    res = pack_dedup_base(seqs, 4)
+    sets = {k: frozenset(int(x) for x in v) for k, v in seqs.items()}
+    check_coverage(res, sets, 4)
+    # both tensors repeat the same 4 blocks twice -> one physical page
+    assert res.num_pages == 1
+    assert res.tensor_pages[("m", "a")] == [0, 0]
+
+
+def test_two_stage_not_worse_than_dedup_base():
+    rng = np.random.default_rng(3)
+    shared = list(range(30))
+    sets, seqs = {}, {}
+    for i in range(3):
+        priv = list(range(100 + 10 * i, 105 + 10 * i))
+        blocks = shared + priv
+        sets[("m", f"t{i}")] = frozenset(blocks)
+        seqs[("m", f"t{i}")] = np.array(blocks)
+    ts = pack_two_stage(sets, 8)
+    db = pack_dedup_base(seqs, 8)
+    assert ts.num_pages <= db.num_pages
+
+
+def test_equivalent_classes_partition():
+    sets = {("m", "a"): frozenset({1, 2, 3}),
+            ("m", "b"): frozenset({2, 3, 4})}
+    classes = equivalent_classes(sets)
+    all_blocks = sorted(b for blocks in classes.values() for b in blocks)
+    assert all_blocks == [1, 2, 3, 4]
+    assert frozenset({("m", "a"), ("m", "b")}) in classes
+
+
+def test_pack_dispatch_and_errors():
+    sets = {("m", "a"): frozenset({1})}
+    with pytest.raises(ValueError):
+        pack(sets, 4, "nope")
+    with pytest.raises(ValueError):
+        pack(sets, 4, "dedup_base")        # needs sequences

@@ -1,0 +1,20 @@
+"""Pipeline-parallel (pod axis) schedule test: spawns the module's
+self-check on 8 host devices (main process keeps 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_pipeline_self_check():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["REPRO_PP_DEVICES"] = "8"
+    r = subprocess.run([sys.executable, "-m", "repro.distributed.pipeline"],
+                       capture_output=True, text=True, env=env, timeout=540)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "ok" in r.stdout

@@ -1,0 +1,78 @@
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (_fit_rank, cache_specs, make_recipe,
+                                        param_spec, param_specs,
+                                        sanitize_spec, use_recipe)
+
+
+def test_param_rules():
+    rec = make_recipe("train")
+    assert param_spec("blocks/attn/wq", 3, rec) == P(None, "data", "model")
+    assert param_spec("blocks/attn/wo", 3, rec) == P(None, "model", "data")
+    assert param_spec("blocks/mlp/w2", 3, rec) == P(None, "model", "data")
+    assert param_spec("blocks/moe/ew1", 4, rec) == P(None, "model", "data",
+                                                     None)
+    assert param_spec("embed", 2, rec) == P("model", "data")
+    assert param_spec("blocks/ln1/scale", 2, rec) == P()
+    assert param_spec("blocks/mamba/in_proj", 3, rec) == \
+        P(None, "data", "model")
+    assert param_spec("dec_blocks/cross/cq", 3, rec) == \
+        P(None, "data", "model")
+
+
+def test_param_specs_tree_structure():
+    params = {"embed": np.zeros((16, 8)),
+              "blocks": {"attn": {"wq": np.zeros((2, 8, 8))},
+                         "ln1": {"scale": np.zeros((2, 8))}}}
+    specs = param_specs(params, make_recipe("train"))
+    assert specs["embed"] == P("model", "data")
+    assert specs["blocks"]["attn"]["wq"] == P(None, "data", "model")
+
+
+class _FakeMesh:
+    shape = {"data": 4, "model": 2, "pod": 2}
+
+
+def test_sanitize_spec_drops_nondivisible():
+    mesh = _FakeMesh()
+    assert sanitize_spec(P("data", None), (8, 3), mesh) == P("data", None)
+    assert sanitize_spec(P("data", None), (6, 3), mesh) == P(None, None)
+    assert sanitize_spec(P(("pod", "data"), None), (8, 3), mesh) == \
+        P(("pod", "data"), None)
+    # 4 % (2*4) != 0 but 4 % 2 == 0 -> keep only the leading axis
+    assert sanitize_spec(P(("pod", "data"),), (4,), mesh) == P("pod")
+
+
+def test_fit_rank():
+    assert _fit_rank(P("data", None, "model"), 2) == P("data", "model")
+    assert _fit_rank(P("data",), 3) == P("data", None, None)
+
+
+def test_hint_identity_without_recipe():
+    from repro.distributed.sharding import hint
+    x = np.ones((4, 4))
+    assert hint(x, "residual") is x
+
+
+def test_recipe_modes():
+    for mode in ("train", "prefill", "decode"):
+        rec = make_recipe(mode, multi_pod=True)
+        assert rec.dp == ("pod", "data")
+        assert rec.site("residual") is not None
+    with pytest.raises(ValueError):
+        make_recipe("nope")
+
+
+def test_cache_specs_structure():
+    cache = {"pos": np.zeros(()),
+             "blocks": {"k": np.zeros((2, 1, 8, 2, 4)),
+                        "v": np.zeros((2, 1, 8, 2, 4)),
+                        "ssm_state": np.zeros((2, 1, 4, 4, 4)),
+                        "conv_state": np.zeros((2, 1, 3, 8))}}
+    rec = make_recipe("decode")
+    specs = cache_specs(cache, rec)
+    assert specs["blocks"]["k"] == P(None, ("data",), "model", None, None)
+    assert specs["pos"] == P()

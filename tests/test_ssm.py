@@ -1,0 +1,64 @@
+"""SSD (mamba-2) numerics: chunked scan == naive recurrence == decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import ssd_chunked, ssd_decode
+
+RNG = np.random.default_rng(0)
+
+
+def _naive_ssd(xh, dt, A, Bm, Cm, Dp):
+    B, S, H, hd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    R = H // G
+    state = np.zeros((B, H, hd, N), np.float64)
+    ys = np.zeros((B, S, H, hd), np.float64)
+    for t in range(S):
+        dA = np.exp(dt[:, t] * A)                        # [B,H]
+        Bh = np.repeat(Bm[:, t], R, axis=1)              # [B,H,N]
+        Ch = np.repeat(Cm[:, t], R, axis=1)
+        state = dA[:, :, None, None] * state \
+            + dt[:, t][:, :, None, None] * xh[:, t][..., None] \
+            * Bh[:, :, None, :]
+        ys[:, t] = np.einsum("bhdn,bhn->bhd", state, Ch) \
+            + Dp[None, :, None] * xh[:, t]
+    return ys, state
+
+
+@pytest.mark.parametrize("S,chunk,G", [(16, 4, 1), (24, 8, 2), (7, 16, 1)])
+def test_chunked_matches_naive(S, chunk, G):
+    B, H, hd, N = 2, 4, 8, 8
+    xh = RNG.standard_normal((B, S, H, hd)).astype(np.float32)
+    dt = (RNG.random((B, S, H)) * 0.1 + 0.01).astype(np.float32)
+    A = -(RNG.random(H) * 0.5 + 0.1).astype(np.float32)
+    Bm = RNG.standard_normal((B, S, G, N)).astype(np.float32)
+    Cm = RNG.standard_normal((B, S, G, N)).astype(np.float32)
+    Dp = RNG.random(H).astype(np.float32)
+    y, state = ssd_chunked(jnp.asarray(xh), jnp.asarray(dt), jnp.asarray(A),
+                           jnp.asarray(Bm), jnp.asarray(Cm), jnp.asarray(Dp),
+                           chunk)
+    yn, sn = _naive_ssd(xh, dt, A, Bm, Cm, Dp)
+    np.testing.assert_allclose(np.asarray(y), yn, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), sn, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_continues_chunked():
+    B, S, H, hd, N, G = 1, 12, 2, 4, 4, 1
+    xh = RNG.standard_normal((B, S + 1, H, hd)).astype(np.float32)
+    dt = (RNG.random((B, S + 1, H)) * 0.1 + 0.01).astype(np.float32)
+    A = -(RNG.random(H) * 0.5 + 0.1).astype(np.float32)
+    Bm = RNG.standard_normal((B, S + 1, G, N)).astype(np.float32)
+    Cm = RNG.standard_normal((B, S + 1, G, N)).astype(np.float32)
+    Dp = RNG.random(H).astype(np.float32)
+    y_full, _ = ssd_chunked(*(jnp.asarray(a) for a in
+                              (xh, dt, A, Bm, Cm, Dp)), 4)
+    _, state = ssd_chunked(jnp.asarray(xh[:, :S]), jnp.asarray(dt[:, :S]),
+                           jnp.asarray(A), jnp.asarray(Bm[:, :S]),
+                           jnp.asarray(Cm[:, :S]), jnp.asarray(Dp), 4)
+    y1, _ = ssd_decode(jnp.asarray(xh[:, S]), jnp.asarray(dt[:, S]),
+                       jnp.asarray(A), jnp.asarray(Bm[:, S]),
+                       jnp.asarray(Cm[:, S]), jnp.asarray(Dp), state)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_full[:, S]),
+                               rtol=1e-4, atol=1e-4)

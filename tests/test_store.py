@@ -1,0 +1,102 @@
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (DedupConfig, LSHConfig, ModelStore, StoreConfig,
+                        load_store_tensors)
+from repro.core.pagepack import check_coverage
+
+
+def _store(threshold=6, r=8.0, validate=False, l=4):
+    return ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(16, 16),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=r, collision_threshold=threshold),
+                          validate=validate),
+        blocks_per_page=l))
+
+
+def _variants(n=3, shape=(64, 64), noise=1e-4, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal(shape).astype(np.float32)
+    return {f"m{i}": {"w": base + rng.standard_normal(shape)
+                      .astype(np.float32) * noise * i}
+            for i in range(n)}
+
+
+def test_register_pack_materialize_roundtrip():
+    store = _store()
+    models = _variants()
+    for name, t in models.items():
+        store.register(name, t)
+    pk = store.repack()
+    check_coverage(pk, store.dedup.tensor_sets(), 4)
+    # m0 is the reference model: representatives come from it
+    assert np.allclose(store.materialize("m0", "w"), models["m0"]["w"])
+    # variants reconstruct to within the dedup approximation
+    err = np.abs(store.materialize("m2", "w") - models["m2"]["w"]).max()
+    assert err < 1e-2
+
+
+def test_storage_reduction_for_similar_models():
+    store = _store()
+    for name, t in _variants(4).items():
+        store.register(name, t)
+    assert store.storage_bytes() < store.dense_bytes() / 2
+
+
+def test_virtual_tensor_consistency():
+    store = _store()
+    for name, t in _variants().items():
+        store.register(name, t)
+    vt = store.virtual_tensor("m1", "w")
+    pool = store.page_pool()
+    l = store.cfg.blocks_per_page
+    blocks = pool.reshape(-1, 16, 16)[vt.block_map]
+    from repro.core.blocks import unblock_tensor
+    rec = unblock_tensor(blocks, vt.grid)
+    assert np.allclose(rec, store.materialize("m1", "w"))
+    assert set(vt.page_ids) <= set(range(store.num_pages()))
+
+
+def test_save_load_roundtrip(tmp_path):
+    store = _store()
+    models = _variants()
+    for name, t in models.items():
+        store.register(name, t)
+    manifest = store.save(str(tmp_path))
+    assert os.path.exists(tmp_path / "manifest.json")
+    back = load_store_tensors(str(tmp_path))
+    for name in models:
+        assert np.allclose(back[name]["w"], store.materialize(name, "w"))
+    # content addressing: identical pages share one file
+    page_files = [f for f in os.listdir(tmp_path) if f.startswith("page-")]
+    assert len(page_files) <= store.num_pages()
+    assert len(manifest["pages"]) == store.num_pages()
+
+
+def test_update_and_remove():
+    store = _store()
+    models = _variants()
+    for name, t in models.items():
+        store.register(name, t)
+    p0 = store.num_pages()
+    new_w = {"w": models["m1"]["w"] + 0.5}
+    store.update("m1", new_w, approach=2)
+    assert np.allclose(store.materialize("m1", "w"), new_w["w"], atol=1e-5)
+    store.remove("m1")
+    assert ("m1", "w") not in store.dedup.tensor_sets()
+    check_coverage(store.repack(), store.dedup.tensor_sets(), 4)
+
+
+def test_buffer_pool_wiring():
+    store = _store()
+    for name, t in _variants().items():
+        store.register(name, t)
+    pool = store.make_buffer_pool(4, "optimized_mru")
+    pk = store.packing
+    for name in ("m0", "m1", "m2"):
+        for pid in pk.tensor_pages[(name, "w")]:
+            pool.access(name, pid)
+    assert pool.hits + pool.misses > 0

@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests for the paper's system: the full Fig.-3
+pipeline (dedup detection -> page packing -> caching) with real accuracy
+signals, plus the validation-based Alg. 1 on a live classifier."""
+import numpy as np
+import pytest
+
+from repro.core import (DedupConfig, LSHConfig, ModelStore, StoreConfig,
+                        check_coverage)
+from repro.core.lsh import estimate_r
+from repro.data.pipeline import SyntheticTextTask
+
+
+def _task_store(num_models=4, validate=False, threshold=8, seed=0,
+                drop_t=0.035):
+    task = SyntheticTextTask(vocab=1024, d=32, seed=seed)
+    from repro.core.blocks import block_tensor
+    blocks, _ = block_tensor(task.base_embed, (32, 32))
+    r = estimate_r(blocks, quantile=0.5)
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(32, 32),
+                          lsh=LSHConfig(num_bands=16, rows_per_band=4,
+                                        r=r, collision_threshold=threshold),
+                          validate=validate, validate_every_k=8,
+                          accuracy_drop_threshold=drop_t),
+        blocks_per_page=4))
+    heads, evals = {}, {}
+    for v in range(num_models):
+        name = f"v{v}"
+        emb = task.variant_embedding(v)
+        head = task.train_head(emb, variant=v)
+        docs, labels = task.sample(256, variant=v, seed=seed + 31 + v)
+        heads[name] = head
+
+        def make_eval(head=head, docs=docs, labels=labels):
+            return lambda tensors: task.accuracy(tensors["embedding"],
+                                                 head, docs, labels)
+        evals[name] = make_eval()
+        store.register(name, {"embedding": emb},
+                       evaluator=evals[name] if validate else None)
+    return task, store, heads, evals
+
+
+def test_full_pipeline_no_validation():
+    task, store, heads, evals = _task_store(validate=False)
+    pk = store.repack()
+    check_coverage(pk, store.dedup.tensor_sets(), 4)
+    assert store.storage_bytes() < store.dense_bytes()
+    # every model's accuracy within the paper's 3.5% budget
+    for name, ev in evals.items():
+        acc = ev({"embedding": store.materialize(name, "embedding")})
+        emb = task.variant_embedding(int(name[1:]))
+        acc0 = ev({"embedding": emb})
+        assert acc0 - acc < 0.035, (name, acc0, acc)
+
+
+def test_full_pipeline_with_periodic_validation():
+    """Alg. 1 with a live evaluator: accuracy drop bounded by construction
+    (up to one k-batch of slack, no rollback — Sec. 7.3)."""
+    task, store, heads, evals = _task_store(validate=True, threshold=4,
+                                            drop_t=0.05)
+    for name, ev in evals.items():
+        res = store.dedup.models[name]
+        if res.accuracy_before is not None and res.accuracy_after is not None:
+            # stopped models keep remaining blocks distinct; the recorded
+            # drop may exceed t by at most the last k-batch before the stop
+            assert res.accuracy_before - res.accuracy_after < 0.05 + 0.1
+
+
+def test_validation_stops_limit_dedup():
+    """A stricter accuracy budget must never dedup *more* blocks."""
+    _, strict, _, _ = _task_store(validate=True, threshold=2, drop_t=0.001,
+                                  seed=3)
+    _, loose, _, _ = _task_store(validate=True, threshold=2, drop_t=0.5,
+                                 seed=3)
+    d_strict = sum(m.deduped_blocks for m in strict.dedup.models.values())
+    d_loose = sum(m.deduped_blocks for m in loose.dedup.models.values())
+    assert d_strict <= d_loose
+
+
+def test_more_models_better_amortization():
+    """Storage per model shrinks as more similar variants register."""
+    _, s2, _, _ = _task_store(num_models=2, seed=5)
+    _, s6, _, _ = _task_store(num_models=6, seed=5)
+    per2 = s2.storage_bytes() / 2
+    per6 = s6.storage_bytes() / 6
+    assert per6 < per2
+
+
+def test_compression_composition_table9():
+    """Dedup composes with pruning/quantization (Sec. 7.6.2)."""
+    from repro.core.compress import prune_model, quantize_model
+    task, store, heads, evals = _task_store(num_models=3, seed=7)
+    base_pages = store.num_pages()
+
+    store_q = ModelStore(store.cfg)
+    for v in range(3):
+        emb = quantize_model({"embedding": task.variant_embedding(v)})
+        store_q.register(f"v{v}", emb)
+    # quantization snaps values -> dedup keeps working
+    assert store_q.num_pages() <= base_pages * 1.2
+
+    store_p = ModelStore(store.cfg)
+    for v in range(3):
+        emb = prune_model({"embedding": task.variant_embedding(v)}, 0.5)
+        store_p.register(f"v{v}", emb)
+    assert store_p.num_pages() <= base_pages * 1.2

@@ -1,0 +1,56 @@
+"""Trainer integration: loss decreases, resume continues, elastic re-mesh
+(host-count change) replays deterministic data."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import token_batches
+from repro.launch.train import main as train_main
+
+
+@pytest.mark.slow
+def test_loss_decreases_tiny_lm(tmp_path):
+    # uniform-random token streams sit at the entropy floor (ln V), so the
+    # optimizer smoke test overfits a fixed batch instead
+    out = train_main(["--arch", "deepseek-7b", "--reduced", "--steps", "30",
+                      "--batch", "8", "--seq", "32", "--lr", "3e-3",
+                      "--seed", "1", "--overfit"])
+    losses = out["losses"]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+
+
+@pytest.mark.slow
+def test_resume_continues(tmp_path):
+    ck = str(tmp_path / "ck")
+    train_main(["--arch", "mamba2-1.3b", "--reduced", "--steps", "6",
+                "--batch", "4", "--seq", "16", "--ckpt", ck,
+                "--ckpt-every", "3"])
+    out = train_main(["--arch", "mamba2-1.3b", "--reduced", "--steps", "9",
+                      "--batch", "4", "--seq", "16", "--ckpt", ck,
+                      "--resume", "auto"])
+    assert len(out["losses"]) == 3          # resumed at 6, ran 6..8
+
+
+@pytest.mark.slow
+def test_compressed_grads_track_uncompressed(tmp_path):
+    a = train_main(["--arch", "deepseek-7b", "--reduced", "--steps", "10",
+                    "--batch", "4", "--seq", "16", "--seed", "2"])
+    b = train_main(["--arch", "deepseek-7b", "--reduced", "--steps", "10",
+                    "--batch", "4", "--seq", "16", "--seed", "2",
+                    "--compress-grads"])
+    # int8+EF stays close to the fp32 trajectory
+    assert abs(a["losses"][-1] - b["losses"][-1]) < 0.25
+
+
+def test_data_shards_partition_batch():
+    """Union of host shards == full batch content domain; disjoint streams
+    per host (elastic re-mesh safety)."""
+    full = next(token_batches(97, 8, 16, seed=3, host_index=0,
+                              host_count=1))
+    h0 = next(token_batches(97, 8, 16, seed=3, host_index=0, host_count=2))
+    h1 = next(token_batches(97, 8, 16, seed=3, host_index=1, host_count=2))
+    assert h0["tokens"].shape == (4, 16)
+    assert h1["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    # determinism: regenerating the same (step, host) gives identical data
+    h0b = next(token_batches(97, 8, 16, seed=3, host_index=0, host_count=2))
+    assert np.array_equal(h0["tokens"], h0b["tokens"])
