@@ -1,0 +1,15 @@
+.PHONY: verify test-fast bench example
+
+# Tier-1 verification (ROADMAP.md)
+verify:
+	./scripts/verify.sh
+
+# Everything except the slow subprocess/dry-run tests
+test-fast:
+	./scripts/verify.sh -m "not slow"
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run
+
+example:
+	PYTHONPATH=src python examples/multi_model_serving.py

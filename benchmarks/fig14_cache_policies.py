@@ -1,5 +1,8 @@
 """Fig. 14 analog: cache hit ratio across replacement policies (LRU, MRU,
-LocalitySet-M/L, Optimized-M/L with Eq. 2) on multi-model traffic."""
+LocalitySet-M/L, Optimized-M/L with Eq. 2) on multi-model traffic — now
+crossed with the batch-scheduler axis (round_robin vs dedup_affinity):
+replacement decides who *stays*, scheduling decides who *arrives next*,
+and the two compound."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,20 +12,30 @@ from repro.core.bufferpool import POLICIES
 from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
                                   WeightServer)
 
+SCHEDULERS = ("round_robin", "dedup_affinity")
+
 
 def run() -> list:
     rows: list[Row] = []
     task, store, heads, _ = word2vec_scenario(num_models=6)
     cap = max(2, store.num_pages() // 3)      # pressure: third fits
     for policy in POLICIES:
-        server = WeightServer(store, cap, policy, StorageModel("ssd"))
-        engine = EmbeddingServingEngine(server, heads)
-        rng = np.random.default_rng(5)
-        for b in range(60):
-            v = int(rng.integers(0, 6))
-            docs, _ = task.sample(24, variant=v, seed=300 + b)
-            engine.submit(f"w2v-v{v}", docs)
-        engine.run()
+        hits = {}
+        for sched in SCHEDULERS:
+            server = WeightServer(store, cap, policy, StorageModel("ssd"))
+            engine = EmbeddingServingEngine(server, heads, scheduler=sched,
+                                            overlap=(sched != "round_robin"))
+            rng = np.random.default_rng(5)
+            for b in range(60):
+                v = int(rng.integers(0, 6))
+                docs, _ = task.sample(24, variant=v, seed=300 + b)
+                engine.submit(f"w2v-v{v}", docs)
+            engine.run()
+            hits[sched] = server.pool.hit_ratio
+            rows.append((f"fig14/{policy}/{sched}", 0.0,
+                         f"hit_ratio={server.pool.hit_ratio:.4f}"))
         rows.append((f"fig14/{policy}", 0.0,
-                     f"hit_ratio={server.pool.hit_ratio:.4f}"))
+                     f"hit_ratio={hits['round_robin']:.4f};"
+                     f"affinity_delta="
+                     f"{hits['dedup_affinity'] - hits['round_robin']:+.4f}"))
     return rows

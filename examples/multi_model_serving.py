@@ -13,25 +13,23 @@ import numpy as np
 
 from repro.data.pipeline import SyntheticTextTask
 from repro.launch.serve import build_store
-from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
-                                  WeightServer)
+from repro.serving import (EmbeddingServingEngine, Prefetcher, StorageModel,
+                           WeightServer)
 
 
-def main():
-    task = SyntheticTextTask(vocab=2048, d=64, seed=0)
-    store, heads = build_store(task, num_models=6)
-    print(f"store: {store.num_pages()} pages, "
-          f"{store.dense_bytes() / store.storage_bytes():.2f}x reduction")
-
+def serve_once(store, heads, task, *, scheduler, overlap, prefetch,
+               label):
     # memory-pressured pool on simulated SSD, Eq.-2-aware eviction
     server = WeightServer(store, capacity_pages=store.num_pages() // 2,
                           policy="optimized_mru",
                           storage=StorageModel("ssd", jitter=0.5,
                                                hedge_after=0.002))
-    engine = EmbeddingServingEngine(server, heads)
+    engine = EmbeddingServingEngine(
+        server, heads, scheduler=scheduler,
+        prefetcher=Prefetcher(server) if prefetch else None,
+        overlap=overlap)
 
     rng = np.random.default_rng(1)
-    correct = total = 0
     eval_sets = {}
     for b in range(80):
         v = int(rng.integers(0, 6))
@@ -40,20 +38,40 @@ def main():
         engine.submit(f"word2vec-v{v}", docs)
     stats = engine.run()
 
+    print(f"[{label}]")
+    print(f"  served {stats.requests} requests in {stats.batches} batches")
+    print(f"  cache hit ratio : {server.pool.hit_ratio:.3f}")
+    print(f"  virtual I/O time: {stats.fetch_seconds * 1e3:.2f} ms demand "
+          f"+ {stats.prefetch_seconds * 1e3:.2f} ms prefetch")
+    print(f"  compute time    : {stats.compute_seconds * 1e3:.2f} ms")
+    print(f"  end-to-end      : {stats.makespan_seconds * 1e3:.2f} ms")
+    print(f"  p50 / p99       : {stats.percentile(50) * 1e3:.2f} / "
+          f"{stats.percentile(99) * 1e3:.2f} ms")
+    return stats, eval_sets
+
+
+def main():
+    task = SyntheticTextTask(vocab=2048, d=64, seed=0)
+    store, heads = build_store(task, num_models=6)
+    print(f"store: {store.num_pages()} pages, "
+          f"{store.dense_bytes() / store.storage_bytes():.2f}x reduction")
+
+    serial, eval_sets = serve_once(
+        store, heads, task, scheduler="round_robin", overlap=False,
+        prefetch=False, label="serial round-robin (baseline)")
+    asynch, _ = serve_once(
+        store, heads, task, scheduler="dedup_affinity", overlap=True,
+        prefetch=True, label="async dedup-affinity + prefetch")
+    print(f"end-to-end speedup: "
+          f"{serial.makespan_seconds / asynch.makespan_seconds:.2f}x")
+
     # verify served accuracy against the deduplicated weights
+    correct = total = 0
     for b, (name, docs, labels) in eval_sets.items():
         emb = store.materialize(name, "embedding")
         pred = (emb[docs].mean(axis=1) @ heads[name]).argmax(axis=1)
         correct += int((pred == labels).sum())
         total += len(labels)
-
-    print(f"served {stats.requests} requests in {stats.batches} batches")
-    print(f"cache hit ratio : {server.pool.hit_ratio:.3f}")
-    print(f"virtual I/O time: {stats.fetch_seconds * 1e3:.2f} ms "
-          f"(hedged fetches on)")
-    print(f"compute time    : {stats.compute_seconds * 1e3:.2f} ms")
-    print(f"p50 / p99       : {stats.percentile(50) * 1e3:.2f} / "
-          f"{stats.percentile(99) * 1e3:.2f} ms")
     print(f"accuracy        : {correct / total:.3f}")
 
 

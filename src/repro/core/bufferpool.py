@@ -75,6 +75,8 @@ class BufferPool:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.prefetches = 0          # pages admitted by prefetch()
+        self.prefetch_declined = 0   # prefetch offers the policy refused
         self._lambda: Dict[ModelId, float] = defaultdict(float)
         self._last_access: Dict[ModelId, int] = {}
         self._set_lambda: Dict[Hashable, float] = defaultdict(float)
@@ -88,18 +90,32 @@ class BufferPool:
 
     def reset_stats(self) -> None:
         self.hits = self.misses = self.evictions = 0
+        self.prefetches = self.prefetch_declined = 0
+
+    def model_rates(self) -> Dict[ModelId, float]:
+        """Per-model arrival-rate estimates (the lambda_i of Eq. 2), as
+        maintained online from the demand access stream.  The serving
+        prefetcher keys its model-hotness ranking off these."""
+        return dict(self._lambda)
+
+    def resident_pages(self) -> Set[PageId]:
+        return set(self.resident)
 
     # -------------------------------------------------------------- access --
-    def access(self, model: ModelId, page: PageId) -> bool:
-        """Record an access; returns True on hit.  Loads the page on miss,
-        evicting per policy when over capacity."""
-        self.tick += 1
-        self._update_rate(model)
+    def _ensure_meta(self, model: ModelId, page: PageId) -> _PageMeta:
         m = self.meta.get(page)
         if m is None:
             m = self.meta[page] = _PageMeta(
                 locality_set=self.page_locality.get(page, page),
                 sharers=self.page_sharers.get(page, frozenset([model])))
+        return m
+
+    def access(self, model: ModelId, page: PageId) -> bool:
+        """Record an access; returns True on hit.  Loads the page on miss,
+        evicting per policy when over capacity."""
+        self.tick += 1
+        self._update_rate(model)
+        m = self._ensure_meta(model, page)
         self._update_set_rate(m.locality_set)
         m.last_tick = self.tick
         m.freq += 1
@@ -155,35 +171,76 @@ class BufferPool:
         ordered = [p for p in self.resident if p in pages]
         return ordered[-1] if inner == "mru" else ordered[0]
 
-    def _evict_one(self) -> None:
+    def _pick_victim(self) -> PageId:
         pol = self.cfg.policy
         if pol == "lru":
-            victim = next(iter(self.resident))
-        elif pol == "mru":
-            victim = next(reversed(self.resident))
-        elif pol == "lfu":
-            victim = min(self.resident, key=lambda p: (self.meta[p].freq,
-                                                       self.meta[p].last_tick))
-        else:
-            inner = "mru" if pol.endswith("mru") else "lru"
-            by_set: Dict[Hashable, Set[PageId]] = defaultdict(set)
-            for p in self.resident:
-                by_set[self.meta[p].locality_set].add(p)
-            best, best_cost = None, None
-            for ls, pages in by_set.items():
-                cand = self._victim_in_set(pages, inner)
-                if pol.startswith("optimized"):
-                    pr = self._p_reuse_eq2(cand)     # Eq. 2 (shared-page aware)
-                else:
-                    pr = self._p_reuse_set(ls)       # original locality-set
-                cost = self._cost(pr)
-                if best_cost is None or cost < best_cost:
-                    best, best_cost = cand, cost
-            victim = best
+            return next(iter(self.resident))
+        if pol == "mru":
+            return next(reversed(self.resident))
+        if pol == "lfu":
+            return min(self.resident, key=lambda p: (self.meta[p].freq,
+                                                     self.meta[p].last_tick))
+        inner = "mru" if pol.endswith("mru") else "lru"
+        by_set: Dict[Hashable, Set[PageId]] = defaultdict(set)
+        for p in self.resident:
+            by_set[self.meta[p].locality_set].add(p)
+        best, best_cost = None, None
+        for ls, pages in by_set.items():
+            cand = self._victim_in_set(pages, inner)
+            if pol.startswith("optimized"):
+                pr = self._p_reuse_eq2(cand)     # Eq. 2 (shared-page aware)
+            else:
+                pr = self._p_reuse_set(ls)       # original locality-set
+            cost = self._cost(pr)
+            if best_cost is None or cost < best_cost:
+                best, best_cost = cand, cost
+        return best
+
+    def _evict_one(self) -> None:
+        victim = self._pick_victim()
         del self.resident[victim]
         self.evictions += 1
         if self.on_evict:
             self.on_evict(victim)
+
+    # ----------------------------------------------------------- prefetch --
+    def prefetch(self, model: ModelId, page: PageId) -> bool:
+        """Speculatively bring ``page`` resident for ``model``.
+
+        Prefetch-aware admission: unlike :meth:`access`, this records no
+        hit/miss (those stats measure demand traffic only), does not
+        advance the virtual clock, and does not bump the lambda_i
+        estimates — a prefetch is the pool acting on its own prediction,
+        not a model arrival.  When the pool is full, the page is admitted
+        only if the policy's would-be victim has a *lower* Eq.-1 eviction
+        cost than the prefetched page — prefetching must never displace a
+        page the policy believes is hotter.
+
+        Returns True iff the page was actually loaded (caller charges the
+        storage fetch time); False if already resident or declined.
+        """
+        if page in self.resident:
+            return False
+        m = self._ensure_meta(model, page)
+        while len(self.resident) >= self.cfg.capacity_pages:
+            victim = self._pick_victim()
+            if self._cost(self._p_reuse_eq2(victim)) \
+                    >= self._cost(self._p_reuse_eq2(page)):
+                self.prefetch_declined += 1
+                return False
+            self._evict_one()
+        # Insert where the policy's victim selection looks FIRST (the MRU
+        # end for *mru policies, the LRU end otherwise): a prefetched page
+        # has not been *used* yet, so until a demand access promotes it,
+        # it must stay the most evictable page — not the most protected.
+        self.resident[page] = None
+        self.resident.move_to_end(page,
+                                  last=self.cfg.policy.endswith("mru"))
+        m.last_tick = max(m.last_tick, 0)
+        self.prefetches += 1
+        if self.on_load:
+            self.on_load(page)
+        return True
 
 
 def run_trace(pool: BufferPool, trace) -> float:

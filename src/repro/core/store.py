@@ -155,15 +155,33 @@ class ModelStore:
                              sorted(set(pk.tensor_pages[(model, tensor)])))
 
     # ------------------------------------------------------------- serving --
+    def page_sharers(self) -> Dict[int, frozenset]:
+        """page id -> models whose tensors live (partly) on that page.
+        This is the sharing structure Eq. 2 superposes rates over, and
+        what the dedup-affinity scheduler co-schedules on."""
+        sharers: Dict[int, set] = {}
+        for (m, t), pids in self.packing.tensor_pages.items():
+            for p in pids:
+                sharers.setdefault(p, set()).add(m)
+        return {p: frozenset(ms) for p, ms in sharers.items()}
+
+    def model_pages(self, model: str) -> List[int]:
+        """All pages the model's tensors touch (its page working set)."""
+        pk = self.packing
+        pages: set = set()
+        for (m, t), pids in pk.tensor_pages.items():
+            if m == model:
+                pages.update(pids)
+        return sorted(pages)
+
     def make_buffer_pool(self, capacity_pages: int,
                          policy: str = "optimized_mru", **kw) -> BufferPool:
         pk = self.packing
-        sharers: Dict[int, set] = {}
+        sharers = self.page_sharers()
         locality: Dict[int, frozenset] = {}
         owners: Dict[int, set] = {}
         for (m, t), pids in pk.tensor_pages.items():
             for p in pids:
-                sharers.setdefault(p, set()).add(m)
                 owners.setdefault(p, set()).add((m, t))
         for p, ts in owners.items():
             locality[p] = frozenset(ts)          # locality set = equivalence class

@@ -1,0 +1,13 @@
+"""Pallas version-compat helpers (leaf module: no intra-package imports,
+so kernel modules and ops.py can both depend on it in any load order)."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (jax >= 0.5) vs ``pltpu.TPUCompilerParams``
+    (jax 0.4.x)."""
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

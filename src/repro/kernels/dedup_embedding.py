@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import tpu_compiler_params
+
 
 def _kernel(ids_ref, rbmap_ref, w_ref, o_ref, *, bv: int):
     t = pl.program_id(0)
@@ -51,7 +53,7 @@ def dedup_embedding(ids, pool, row_block_map, *, bd: int = 512,
         functools.partial(_kernel, bv=bv),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), pool.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "parallel")),
         interpret=interpret,
     )

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import tpu_compiler_params
+
 F32 = jnp.float32
 
 
@@ -74,7 +76,7 @@ def dedup_matmul(x, pool, block_map, *, bm: int = 128,
         functools.partial(_kernel, nk=nkb),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from ._compat import tpu_compiler_params  # re-export: version-compat shim
 from .dedup_embedding import dedup_embedding as _dedup_embedding
 from .dedup_matmul import dedup_matmul as _dedup_matmul
 from .flash_attention import flash_attention as _flash_attention
@@ -83,4 +84,4 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 
 
 __all__ = ["dedup_matmul", "dedup_embedding", "lsh_signature",
-           "flash_attention", "ref"]
+           "flash_attention", "ref", "tpu_compiler_params"]

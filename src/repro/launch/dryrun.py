@@ -35,7 +35,7 @@ from ..distributed.sharding import (ShardingRecipe, cache_specs, make_recipe,
 from ..models import build, input_specs, param_shapes
 from ..optim import make_optimizer
 from ..roofline.analysis import collective_bytes_from_hlo, roofline_terms
-from .mesh import make_mini_mesh, make_production_mesh
+from .mesh import make_mini_mesh, make_production_mesh, set_mesh_compat
 from .steps import make_serve_step, make_train_step
 
 DEFAULT_OUT = "experiments/dryrun"
@@ -247,7 +247,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool = False,
     api = build(cfg)
     record: Dict = {"meta": meta, "status": "ok"}
     t0 = time.time()
-    with jax.set_mesh(mesh), use_recipe(recipe):
+    with set_mesh_compat(mesh), use_recipe(recipe):
         params_sds = param_shapes(cfg, spec)
         pspecs = param_specs(params_sds, recipe)
         params_in = _shard_sds(params_sds, pspecs, mesh)
@@ -322,6 +322,8 @@ def lower_cell(arch: str, shape: str, multi_pod: bool = False,
         record["memory_analysis"] = {"error": str(e)}
     try:
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):     # jax 0.4.x: [dict]
+            cost = cost[0] if cost else {}
         record["cost_analysis"] = {
             k: float(v) for k, v in cost.items()
             if k in ("flops", "transcendentals", "bytes accessed")

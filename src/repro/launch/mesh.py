@@ -2,22 +2,48 @@
 
 A FUNCTION, not a module-level constant, so importing this module never
 touches jax device state (smoke tests must keep seeing 1 CPU device).
+
+Version compat: ``jax.sharding.AxisType`` and ``jax.make_mesh``'s
+``axis_types=`` kwarg only exist on newer jax; on 0.4.x we fall back to a
+plain mesh (all axes behave as the old default, which is what Auto means).
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if _AXIS_TYPE is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+        except TypeError:        # jax with AxisType but older make_mesh
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh_compat(mesh):
+    """``jax.set_mesh`` context where available; on older jax the Mesh
+    object itself is the context manager that activates it."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        ctx = set_mesh(mesh)
+        # jax.set_mesh is a context manager in recent releases; guard in
+        # case a version makes it a plain setter returning None.
+        return ctx if hasattr(ctx, "__enter__") else contextlib.nullcontext()
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    try:
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except TypeError:            # older jax without axis_types kwarg
-        return jax.make_mesh(shape, axes)
+    return make_mesh_compat(shape, axes)
 
 
 def make_mini_mesh(*, multi_pod: bool = False, devices_per_axis: int = 2):
@@ -25,9 +51,4 @@ def make_mini_mesh(*, multi_pod: bool = False, devices_per_axis: int = 2):
     d = devices_per_axis
     shape = (2, d, d) if multi_pod else (d, d)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    try:
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except TypeError:
-        return jax.make_mesh(shape, axes)
+    return make_mesh_compat(shape, axes)

@@ -19,6 +19,8 @@ from ..core.lsh import estimate_r
 from ..data.pipeline import SyntheticTextTask
 from ..serving.engine import (EmbeddingServingEngine, ServeStats,
                               StorageModel, WeightServer)
+from ..serving.prefetch import Prefetcher
+from ..serving.scheduler import SCHEDULERS
 
 
 def build_store(task: SyntheticTextTask, num_models: int,
@@ -54,9 +56,18 @@ def main(argv=None):
     ap.add_argument("--policy", default="optimized_mru")
     ap.add_argument("--storage", default="ssd",
                     choices=list(("ssd", "hdd", "nvme", "dram")))
+    ap.add_argument("--scheduler", default="round_robin",
+                    choices=sorted(SCHEDULERS))
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffer grouped fetches against compute")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="lambda-driven page prefetching (implies --overlap:"
+                         " speculation only pays off hidden under compute)")
     ap.add_argument("--vocab", type=int, default=2048)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.prefetch:
+        args.overlap = True
 
     task = SyntheticTextTask(vocab=args.vocab, seed=args.seed)
     store, heads = build_store(task, args.models)
@@ -68,7 +79,10 @@ def main(argv=None):
 
     server = WeightServer(store, args.capacity_pages, args.policy,
                           StorageModel(args.storage))
-    engine = EmbeddingServingEngine(server, heads)
+    engine = EmbeddingServingEngine(
+        server, heads, scheduler=args.scheduler,
+        prefetcher=Prefetcher(server) if args.prefetch else None,
+        overlap=args.overlap)
     rng = np.random.default_rng(args.seed + 9)
     correct = total = 0
     for b in range(args.batches):
@@ -79,9 +93,12 @@ def main(argv=None):
         engine.submit(name, docs)
     stats: ServeStats = engine.run()
     print(f"[serve] batches={stats.batches} requests={stats.requests} "
+          f"scheduler={args.scheduler} overlap={args.overlap} "
           f"hit_ratio={server.pool.hit_ratio:.3f} "
           f"fetch={stats.fetch_seconds*1e3:.1f}ms "
+          f"prefetch={stats.prefetch_seconds*1e3:.1f}ms "
           f"compute={stats.compute_seconds*1e3:.1f}ms "
+          f"makespan={stats.makespan_seconds*1e3:.1f}ms "
           f"p50={stats.percentile(50)*1e3:.2f}ms "
           f"p99={stats.percentile(99)*1e3:.2f}ms")
     return stats, server

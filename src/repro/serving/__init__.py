@@ -1,6 +1,13 @@
-from .engine import (EmbeddingServingEngine, LMServingEngine, ServeStats,
-                     StorageModel, WeightServer)
+from .engine import (EmbeddingServingEngine, FetchComputeTimeline,
+                     LMServingEngine, ServeStats, StorageModel, WeightServer)
 from .kvcache import PagedKVCache
+from .prefetch import Prefetcher, PrefetchStats
+from .scheduler import (SCHEDULERS, BatchScheduler, DedupAffinityScheduler,
+                        FifoScheduler, RoundRobinScheduler, ScheduledBatch,
+                        make_scheduler)
 
-__all__ = ["EmbeddingServingEngine", "LMServingEngine", "ServeStats",
-           "StorageModel", "WeightServer", "PagedKVCache"]
+__all__ = ["EmbeddingServingEngine", "FetchComputeTimeline",
+           "LMServingEngine", "ServeStats", "StorageModel", "WeightServer",
+           "PagedKVCache", "Prefetcher", "PrefetchStats", "SCHEDULERS",
+           "BatchScheduler", "DedupAffinityScheduler", "FifoScheduler",
+           "RoundRobinScheduler", "ScheduledBatch", "make_scheduler"]

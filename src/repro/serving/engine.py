@@ -8,28 +8,35 @@ shared pages hit for *every* model variant that uses them.
 
 Components:
   * :class:`StorageModel` — virtual-clock latency model for the backing
-    tier (ssd / hdd / nvme / host-dram), used when a page misses.
+    tier (ssd / hdd / nvme / host-dram), used when a page misses.  Group
+    fetches amortize the seek across a batch's misses.
+  * :class:`FetchComputeTimeline` — double-buffered virtual clock: batch
+    t's group fetch occupies the storage channel while batch t-1 still
+    computes, so Eq. 1/Eq. 2 hit-ratio wins translate into latency wins.
   * :class:`WeightServer` — ModelStore + BufferPool + storage sim; tracks
     per-model arrival rates (the lambda_i of Eq. 2 flow straight into the
     pool's eviction policy).  Optional hedged fetches for stragglers.
   * :class:`EmbeddingServingEngine` — the paper's word2vec / text-
-    classification scenario: requests are token batches; inference
-    gathers embedding rows (touching only the pages their row blocks
-    live on), mean-pools, applies the classifier head.
-  * :class:`LMServingEngine` — serves a (reduced) LM via prefill/decode
-    with per-model weight fetch through the pool; used by the e2e example.
+    classification scenario, now scheduler-driven: batch order is a
+    policy (fifo / round_robin / dedup_affinity, see
+    ``serving/scheduler.py``), and an optional λ-driven
+    :class:`~repro.serving.prefetch.Prefetcher` pulls hot models' pages
+    ahead of demand.
+  * :class:`LMServingEngine` — serves (reduced) LM variants via
+    prefill/decode with per-model weight fetch through the pool; the
+    same scheduler/timeline machinery applies per model-switch.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict, deque
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.bufferpool import BufferPool
 from ..core.store import ModelStore
+from .scheduler import BatchScheduler, ScheduledBatch, make_scheduler
 
 # ------------------------------------------------------------------ storage --
 STORAGE_PRESETS = {
@@ -52,8 +59,7 @@ class StorageModel:
         self.bw, self.seek = STORAGE_PRESETS[self.kind]
         self._rng = np.random.default_rng(self.seed)
 
-    def fetch_seconds(self, nbytes: int) -> float:
-        base = self.seek + nbytes / self.bw
+    def _draw(self, base: float) -> float:
         if self.jitter:
             draw = base * float(self._rng.lognormal(0.0, self.jitter))
             if self.hedge_after is not None and draw > self.hedge_after:
@@ -65,19 +71,73 @@ class StorageModel:
             return draw
         return base
 
+    def fetch_seconds(self, nbytes: int) -> float:
+        return self._draw(self.seek + nbytes / self.bw)
+
+    def fetch_group_seconds(self, nbytes: int, n: int) -> float:
+        """Virtual time for ``n`` pages issued as ONE grouped request:
+        a single seek plus pipelined transfers (the scheduler issues a
+        batch's misses together instead of page-at-a-time)."""
+        if n <= 0:
+            return 0.0
+        return self._draw(self.seek + n * nbytes / self.bw)
+
+    def transfer_seconds(self, nbytes: int) -> float:
+        """One seek-less pipelined transfer (a follow-on page inside an
+        already-open group); jitter/hedging apply per transfer."""
+        return self._draw(nbytes / self.bw)
+
+
+@dataclasses.dataclass
+class FetchComputeTimeline:
+    """Two-channel virtual clock.  The fetch channel serializes storage
+    traffic (demand groups + prefetches); a batch's compute starts once
+    both its fetch group completed and the previous compute finished —
+    i.e. fetch(t) overlaps compute(t-1), the classic double buffer."""
+    fetch_clock: float = 0.0
+    compute_clock: float = 0.0
+
+    def advance(self, fetch_t: float, compute_t: float
+                ) -> Tuple[float, float]:
+        """Account one batch; returns (issue_time, completion_time)."""
+        issue = self.fetch_clock
+        self.fetch_clock += fetch_t
+        start_compute = max(self.fetch_clock, self.compute_clock)
+        self.compute_clock = start_compute + compute_t
+        return issue, self.compute_clock
+
+    def charge_fetch(self, seconds: float) -> None:
+        """Occupy the fetch channel without a compute phase (prefetch)."""
+        self.fetch_clock += seconds
+
+    @property
+    def makespan(self) -> float:
+        return max(self.fetch_clock, self.compute_clock)
+
 
 @dataclasses.dataclass
 class ServeStats:
     requests: int = 0
     batches: int = 0
-    fetch_seconds: float = 0.0       # virtual storage time
+    fetch_seconds: float = 0.0       # virtual storage time (demand)
     compute_seconds: float = 0.0     # wall compute time
+    prefetch_seconds: float = 0.0    # virtual storage time (speculative)
     pages_fetched: int = 0
+    prefetch_pages: int = 0
+    timeline_seconds: float = 0.0    # double-buffered makespan (async runs)
     latencies: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:
-        return self.fetch_seconds + self.compute_seconds
+        """Serial cost: every storage second plus every compute second."""
+        return self.fetch_seconds + self.prefetch_seconds \
+            + self.compute_seconds
+
+    @property
+    def makespan_seconds(self) -> float:
+        """End-to-end virtual time: the overlapped timeline when the
+        engine ran async, the serial sum otherwise."""
+        return self.timeline_seconds or self.total_seconds
 
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies, p)) if self.latencies \
@@ -106,13 +166,27 @@ class WeightServer:
         return self._pool_arr
 
     def access_pages(self, model: str, page_ids) -> float:
-        """Touch pages through the pool; returns virtual fetch seconds."""
+        """Touch pages through the pool one at a time (serial baseline:
+        every miss pays its own seek, inline); returns virtual seconds."""
         t = 0.0
         for pid in page_ids:
             hit = self.pool.access(model, pid)
             if not hit:
                 t += self.storage.fetch_seconds(self.page_bytes)
                 self.stats.pages_fetched += 1
+        self.stats.fetch_seconds += t
+        return t
+
+    def access_pages_grouped(self, model: str, page_ids) -> float:
+        """Touch pages through the pool, issuing all misses as ONE group
+        fetch (single seek, pipelined transfer) — the async scheduler's
+        per-batch demand fetch.  Returns the group's virtual seconds."""
+        misses = 0
+        for pid in page_ids:
+            if not self.pool.access(model, pid):
+                misses += 1
+        t = self.storage.fetch_group_seconds(self.page_bytes, misses)
+        self.stats.pages_fetched += misses
         self.stats.fetch_seconds += t
         return t
 
@@ -140,26 +214,74 @@ class WeightServer:
 
 
 # ------------------------------------------------------- embedding serving --
-class EmbeddingServingEngine:
-    """Paper Sec. 7.1.1/7.1.2 scenario: many embedding-model variants."""
+class _PrefetchingEngine:
+    """Shared scheduler-engine plumbing: the per-batch prefetch step.
+    Subclasses provide ``prefetcher``, ``overlap``, ``timeline``,
+    ``stats``."""
+
+    def _maybe_prefetch(self) -> None:
+        """Speculative I/O rides the fetch channel *under* compute,
+        budgeted to the channel's idle headroom (compute clock minus
+        fetch clock) so it never delays a demand fetch by more than one
+        in-flight page transfer.  On a serial engine there is no idle
+        channel to hide speculation in — every prefetched second would
+        add to the makespan — so a prefetcher without ``overlap`` is
+        deliberately inert."""
+        if self.prefetcher is None or not self.overlap:
+            return
+        budget = self.timeline.compute_clock - self.timeline.fetch_clock
+        if budget <= 0:
+            return
+        pf_t = self.prefetcher.step(budget)
+        self.timeline.charge_fetch(pf_t)
+        self.stats.prefetch_seconds += pf_t
+        self.stats.prefetch_pages = self.prefetcher.stats.issued
+
+
+class EmbeddingServingEngine(_PrefetchingEngine):
+    """Paper Sec. 7.1.1/7.1.2 scenario: many embedding-model variants.
+
+    ``scheduler``: a policy name (``fifo`` / ``round_robin`` /
+    ``dedup_affinity``) or a :class:`BatchScheduler` instance.
+    ``overlap=True`` switches demand fetches to grouped issue and runs
+    them on the double-buffered timeline (fetch(t) ∥ compute(t-1));
+    ``prefetcher`` (optional) additionally pulls hot models' pages during
+    compute.  Defaults reproduce the old serial round-robin engine.
+    """
 
     def __init__(self, server: WeightServer,
                  heads: Dict[str, np.ndarray],
-                 embed_tensor: str = "embedding"):
+                 embed_tensor: str = "embedding",
+                 scheduler="round_robin",
+                 prefetcher=None,
+                 overlap: bool = False):
         self.server = server
         self.heads = heads
         self.embed_tensor = embed_tensor
-        self.queues: Dict[str, deque] = defaultdict(deque)
+        self.scheduler: BatchScheduler = make_scheduler(scheduler)
+        self.prefetcher = prefetcher
+        self.overlap = overlap
+        self.timeline = FetchComputeTimeline()
         self.stats = ServeStats()
 
     def submit(self, model: str, docs: np.ndarray) -> None:
-        self.queues[model].append(docs)
-
-    def _infer(self, model: str, docs: np.ndarray) -> np.ndarray:
+        """Queue a request batch; its page working set is estimated here
+        (pure page-map arithmetic, no weight access) so the scheduler can
+        do affinity placement without touching storage."""
         rows = np.unique(docs)
         pages = self.server.embedding_rows_pages(model, self.embed_tensor,
                                                  rows)
-        fetch_t = self.server.access_pages(model, pages)
+        self.scheduler.submit(model, docs, pages=pages)
+
+    def _infer(self, batch: ScheduledBatch) -> np.ndarray:
+        model, docs = batch.model, batch.payload
+        rows = np.unique(docs)
+        pages = sorted(batch.pages) if batch.pages is not None else \
+            self.server.embedding_rows_pages(model, self.embed_tensor, rows)
+        if self.overlap:
+            fetch_t = self.server.access_pages_grouped(model, pages)
+        else:
+            fetch_t = self.server.access_pages(model, pages)
         t0 = time.perf_counter()
         emb_rows = self.server.store.materialize_rows(
             model, self.embed_tensor, rows)
@@ -167,56 +289,87 @@ class EmbeddingServingEngine:
         feats = emb_rows[idx].mean(axis=1)
         logits = feats @ self.heads[model]
         compute_t = time.perf_counter() - t0
+
+        if self.overlap:
+            issue, done = self.timeline.advance(fetch_t, compute_t)
+            self.stats.latencies.append(done - issue)
+        else:
+            # serial: fetch then compute on one channel; the timeline is
+            # left untouched so makespan_seconds falls back to the sum
+            self.stats.latencies.append(fetch_t + compute_t)
         self.stats.fetch_seconds += fetch_t
         self.stats.compute_seconds += compute_t
-        self.stats.latencies.append(fetch_t + compute_t)
         self.stats.requests += len(docs)
         self.stats.batches += 1
         return logits.argmax(axis=1)
 
     def run(self, max_batches: Optional[int] = None) -> ServeStats:
-        """Round-robin across model queues (each queue's drain rate is the
-        lambda_i feeding Eq. 2 inside the buffer pool)."""
+        """Drain the scheduler (each queue's drain rate is the lambda_i
+        feeding Eq. 2 inside the buffer pool)."""
         n = 0
-        while any(self.queues.values()):
-            for model in list(self.queues):
-                if not self.queues[model]:
-                    continue
-                self._infer(model, self.queues[model].popleft())
-                n += 1
-                if max_batches and n >= max_batches:
-                    return self.stats
+        while self.scheduler.pending():
+            batch = self.scheduler.next_batch(
+                self.server.pool.resident_pages())
+            if batch is None:
+                break
+            self._infer(batch)
+            self._maybe_prefetch()
+            n += 1
+            if max_batches and n >= max_batches:
+                break
+        if self.overlap:
+            self.stats.timeline_seconds = self.timeline.makespan
         return self.stats
 
 
 # --------------------------------------------------------------- LM serving --
-class LMServingEngine:
+class LMServingEngine(_PrefetchingEngine):
     """Serve (reduced) LM variants with batched prefill/decode; weights are
-    faulted in per-tensor through the dedup page pool on model switch."""
+    faulted in through the dedup page pool on model switch.
+
+    ``generate`` keeps the direct call path; ``submit``/``run`` drive the
+    same scheduler/timeline machinery as the embedding engine, with a
+    model switch's whole page working set issued as one fetch group."""
 
     def __init__(self, server: WeightServer, apis: Dict[str, object],
-                 params_template: Dict[str, dict]):
+                 params_template: Dict[str, dict],
+                 scheduler="fifo", prefetcher=None, overlap: bool = False):
         self.server = server
         self.apis = apis
         self.templates = params_template     # model -> params pytree (np)
+        self.scheduler: BatchScheduler = make_scheduler(scheduler)
+        self.prefetcher = prefetcher
+        self.overlap = overlap
+        self.timeline = FetchComputeTimeline()
         self.stats = ServeStats()
         self._resident_model: Optional[str] = None
         self._params = None
 
-    def _load_model(self, model: str):
+    def _load_model(self, model: str, grouped: bool = False) -> float:
+        """Fault the model's weights through the pool; returns the
+        virtual fetch seconds (0 when already resident)."""
         if self._resident_model == model:
-            return self._params
-        tensors = {}
-        for name in self.server.store.dedup.models[model].tensors:
-            tensors[name] = self.server.fetch_tensor(model, name)
+            return 0.0
+        if grouped:
+            fetch_t = self.server.access_pages_grouped(
+                model, self.server.store.model_pages(model))
+            tensors = {
+                name: self.server.store.materialize(model, name)
+                for name in self.server.store.dedup.models[model].tensors}
+        else:
+            t0 = self.server.stats.fetch_seconds
+            tensors = {}
+            for name in self.server.store.dedup.models[model].tensors:
+                tensors[name] = self.server.fetch_tensor(model, name)
+            fetch_t = self.server.stats.fetch_seconds - t0
         self._params = self.templates[model], tensors
         self._resident_model = model
-        return self._params
+        return fetch_t
 
-    def generate(self, model: str, prompts: np.ndarray,
-                 steps: int = 8) -> Tuple[np.ndarray, float]:
+    def _compute(self, model: str, prompts: np.ndarray, steps: int
+                 ) -> Tuple[np.ndarray, float]:
         import jax.numpy as jnp
-        template, tensors = self._load_model(model)
+        template, tensors = self._params
         rebuild, api = template["rebuild"], self.apis[model]
         params = rebuild(tensors)
         t0 = time.perf_counter()
@@ -229,8 +382,48 @@ class LMServingEngine:
                                        jnp.asarray(out[-1]).astype("int32"))
             out.append(np.asarray(logits.argmax(-1)))
         dt = time.perf_counter() - t0
+        return np.concatenate(out, axis=1), dt
+
+    def generate(self, model: str, prompts: np.ndarray,
+                 steps: int = 8) -> Tuple[np.ndarray, float]:
+        self._load_model(model)
+        out, dt = self._compute(model, prompts, steps)
         self.stats.compute_seconds += dt
         self.stats.latencies.append(dt)
         self.stats.requests += len(prompts)
         self.stats.batches += 1
-        return np.concatenate(out, axis=1), dt
+        return out, dt
+
+    # -- scheduler-driven serving -------------------------------------------
+    def submit(self, model: str, prompts: np.ndarray, steps: int = 8) -> None:
+        self.scheduler.submit(model, (prompts, steps),
+                              pages=self.server.store.model_pages(model))
+
+    def run(self, max_batches: Optional[int] = None) -> ServeStats:
+        n = 0
+        results = []
+        while self.scheduler.pending():
+            batch = self.scheduler.next_batch(
+                self.server.pool.resident_pages())
+            if batch is None:
+                break
+            prompts, steps = batch.payload
+            fetch_t = self._load_model(batch.model, grouped=self.overlap)
+            out, compute_t = self._compute(batch.model, prompts, steps)
+            if self.overlap:
+                issue, done = self.timeline.advance(fetch_t, compute_t)
+                self.stats.latencies.append(done - issue)
+            else:
+                self.stats.latencies.append(fetch_t + compute_t)
+            self.stats.fetch_seconds += fetch_t
+            self.stats.compute_seconds += compute_t
+            self.stats.requests += len(prompts)
+            self.stats.batches += 1
+            results.append(out)
+            self._maybe_prefetch()
+            n += 1
+            if max_batches and n >= max_batches:
+                break
+        if self.overlap:
+            self.stats.timeline_seconds = self.timeline.makespan
+        return self.stats

@@ -1,0 +1,108 @@
+"""λ-driven page prefetcher (paper Eq. 2, used *ahead* of demand).
+
+The buffer pool already estimates each model's arrival rate lambda_i
+online (it feeds Eq. 2's superposed-Poisson reuse probability).  The
+prefetcher reuses those same estimates in the other direction: the
+hottest models are the ones whose pages are most likely to be demanded
+next, so during a batch's *compute* phase it pulls their missing pages
+into the pool — the virtual storage time lands on the fetch channel,
+where the engine's double-buffered timeline overlaps it with compute.
+
+Admission goes through :meth:`BufferPool.prefetch`, which never counts a
+hit/miss (demand-traffic stats stay clean) and refuses to displace pages
+the eviction policy rates hotter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["PrefetchStats", "Prefetcher"]
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    issued: int = 0            # pages actually loaded ahead of demand
+    declined: int = 0          # offers the pool's admission refused
+    seconds: float = 0.0       # virtual storage time spent prefetching
+
+
+class Prefetcher:
+    """Plans and issues page prefetches for a :class:`WeightServer`.
+
+    ``hot_models``: how many of the highest-lambda models to prefetch for.
+    ``max_pages_per_step``: page budget per :meth:`step` call (one call
+    per served batch keeps the fetch channel from drowning in
+    speculation).
+    """
+
+    def __init__(self, server, hot_models: int = 2,
+                 max_pages_per_step: int = 4):
+        self.server = server
+        self.hot_models = hot_models
+        self.max_pages_per_step = max_pages_per_step
+        self.stats = PrefetchStats()
+        # model -> its page working set, from the store's packing
+        self._model_pages: Dict[str, List[int]] = {
+            m: server.store.model_pages(m)
+            for m in server.store.dedup.models}
+        sharers = server.store.page_sharers()
+        self._n_sharers = {p: len(ms) for p, ms in sharers.items()}
+
+    # -- planning ------------------------------------------------------------
+    def plan(self) -> List[Tuple[str, int]]:
+        """(model, page) prefetch candidates, hottest model first; within
+        a model, most-shared pages first (they serve several queues)."""
+        rates = self.server.pool.model_rates()
+        if not rates:
+            return []
+        hot = sorted(rates, key=rates.get, reverse=True)[: self.hot_models]
+        resident = self.server.pool.resident_pages()
+        out: List[Tuple[str, int]] = []
+        seen = set()
+        for m in hot:
+            missing = [p for p in self._model_pages.get(m, ())
+                       if p not in resident and p not in seen]
+            missing.sort(key=lambda p: (-self._n_sharers.get(p, 1), p))
+            for p in missing:
+                out.append((m, p))
+                seen.add(p)
+                if len(out) >= self.max_pages_per_step:
+                    return out
+        return out
+
+    # -- execution -----------------------------------------------------------
+    def step(self, budget_s: Optional[float] = None) -> float:
+        """Issue one planning round of prefetches; returns the virtual
+        storage seconds consumed (the engine charges them to the fetch
+        channel, overlapped with compute).
+
+        ``budget_s`` caps the storage time spent.  The *actual* (jittered)
+        cost is accumulated page by page and issuing stops as soon as the
+        next expected transfer would overrun, so a slow draw can exceed
+        the budget by at most one in-flight page transfer — the engine
+        passes the fetch channel's idle headroom, keeping speculation off
+        the demand path.  The round still amortizes like ONE grouped
+        fetch: a single seek, then seek-less per-page transfers —
+        page-at-a-time prefetching would pay a seek per page and lose to
+        the demand path's own group amortization."""
+        storage = self.server.storage
+        base_transfer = self.server.page_bytes / storage.bw
+        issued = 0
+        t = 0.0
+        for model, page in self.plan():
+            cost_floor = (storage.seek if issued == 0 else 0.0) \
+                + base_transfer
+            if budget_s is not None and t + cost_floor > budget_s:
+                break
+            if self.server.pool.prefetch(model, page):
+                if issued == 0:
+                    t += storage.fetch_seconds(self.server.page_bytes)
+                else:
+                    t += storage.transfer_seconds(self.server.page_bytes)
+                issued += 1
+            else:
+                self.stats.declined += 1
+        self.stats.issued += issued
+        self.stats.seconds += t
+        return t

@@ -1,0 +1,43 @@
+"""Import `given` / `settings` / `st` from here instead of `hypothesis`.
+
+When hypothesis is installed this re-exports the real thing.  When it is
+not (it's an optional dev dependency, see pyproject.toml), property tests
+degrade to per-test skips via ``pytest.importorskip`` at call time — the
+rest of the module still collects and runs.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `hypothesis.strategies`: any strategy expression
+        evaluated at decoration time resolves to an inert placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Deliberately NOT functools.wraps: pytest must see a
+            # zero-argument signature, not the strategy parameters.
+            def run():
+                pytest.importorskip("hypothesis")
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

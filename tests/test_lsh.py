@@ -1,6 +1,5 @@
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.lsh import L2LSH, LSHConfig, LSHIndex, estimate_r
 

@@ -1,7 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.pagepack import (alg2_bound, check_coverage,
                                  equivalent_classes, pack, pack_dedup_base,

@@ -1,0 +1,227 @@
+"""Scheduler / prefetcher / overlapped-timeline tests (deterministic).
+
+The load-bearing scenario is two *disjoint* model groups (a0,a1 vs b0,b1):
+variants within a group dedup onto the same pages, groups share nothing.
+Interleaved traffic (a,b,a,b,...) makes round-robin thrash a pool sized
+for one group, while dedup-affinity co-schedules sharers back-to-back.
+"""
+import numpy as np
+import pytest
+
+from repro.core import DedupConfig, LSHConfig, ModelStore, StoreConfig
+from repro.core.lsh import estimate_r
+from repro.core.blocks import block_tensor
+from repro.serving import (DedupAffinityScheduler, EmbeddingServingEngine,
+                           FetchComputeTimeline, FifoScheduler, Prefetcher,
+                           RoundRobinScheduler, StorageModel, WeightServer,
+                           make_scheduler)
+
+
+def _two_group_store(d=64, rows=256, block=(32, 32), blocks_per_page=2):
+    """Two bases far apart in L2; two variants per base differing on a few
+    row blocks -> heavy intra-group page sharing, zero inter-group."""
+    rng = np.random.default_rng(0)
+    base_a = rng.standard_normal((rows, d)).astype(np.float32)
+    base_b = (rng.standard_normal((rows, d)) + 8.0).astype(np.float32)
+    blocks, _ = block_tensor(base_a, block)
+    r = estimate_r(blocks, quantile=0.5)
+    cfg = StoreConfig(
+        dedup=DedupConfig(block_shape=block,
+                          lsh=LSHConfig(num_bands=16, rows_per_band=4, r=r,
+                                        collision_threshold=8),
+                          validate=False),
+        blocks_per_page=blocks_per_page)
+    store = ModelStore(cfg)
+    heads = {}
+    hr = np.random.default_rng(1)
+    for g, base in (("a", base_a), ("b", base_b)):
+        for v in range(2):
+            emb = base.copy()
+            emb[v * 32:(v + 1) * 32] += 50.0 + v     # private row blocks
+            name = f"{g}{v}"
+            store.register(name, {"embedding": emb})
+            heads[name] = hr.standard_normal((d, 8)).astype(np.float32)
+    return store, heads
+
+
+def _interleaved_trace(models, batches=24, doc_len=6, rows=256, seed=3):
+    rng = np.random.default_rng(seed)
+    out = []
+    for b in range(batches):
+        m = models[b % len(models)]
+        docs = rng.integers(0, rows, size=(8, doc_len))
+        out.append((m, docs))
+    return out
+
+
+def _run_engine(store, heads, trace, scheduler, capacity, overlap=False,
+                prefetcher=False, storage="hdd", policy="optimized_mru"):
+    server = WeightServer(store, capacity, policy, StorageModel(storage))
+    engine = EmbeddingServingEngine(
+        server, heads, scheduler=scheduler,
+        prefetcher=Prefetcher(server) if prefetcher else None,
+        overlap=overlap)
+    for model, docs in trace:
+        engine.submit(model, docs)
+    stats = engine.run()
+    return stats, server
+
+
+# ------------------------------------------------------------ the big two ---
+def test_dedup_affinity_beats_round_robin_hit_ratio():
+    """On an interleaved shared-page trace with a pool sized for one model
+    group, affinity scheduling must not lose to round-robin — and here it
+    strictly wins, because co-scheduled sharers reuse resident pages."""
+    store, heads = _two_group_store()
+    # capacity: one group's working set fits, both don't
+    group_pages = len(set(store.model_pages("a0"))
+                      | set(store.model_pages("a1")))
+    cap = max(2, group_pages)
+    assert cap < store.num_pages()
+    trace = _interleaved_trace(["a0", "b0", "a1", "b1"])
+
+    _, srv_rr = _run_engine(store, heads, trace, "round_robin", cap)
+    _, srv_aff = _run_engine(store, heads, trace, "dedup_affinity", cap)
+    assert srv_aff.pool.hit_ratio >= srv_rr.pool.hit_ratio
+    assert srv_aff.pool.hit_ratio > srv_rr.pool.hit_ratio + 0.05
+
+
+def test_overlap_never_slower_than_serial():
+    """Double-buffered fetch/compute must never report more end-to-end
+    virtual time than the serial engine on the same trace."""
+    store, heads = _two_group_store()
+    cap = max(2, store.num_pages() // 2)
+    trace = _interleaved_trace(["a0", "b0", "a1", "b1"])
+
+    s_serial, _ = _run_engine(store, heads, trace, "round_robin", cap,
+                              overlap=False)
+    s_async, _ = _run_engine(store, heads, trace, "round_robin", cap,
+                             overlap=True)
+    # within-run invariant: the overlapped makespan never exceeds the
+    # serial sum of its own channels
+    assert s_async.makespan_seconds <= s_async.total_seconds + 1e-12
+    # cross-run: same trace, same pool decisions; storage is hdd so the
+    # (deterministic) virtual fetch time dwarfs wall-clock compute noise
+    assert s_async.makespan_seconds < s_serial.makespan_seconds
+    assert s_serial.makespan_seconds == pytest.approx(
+        s_serial.total_seconds)
+
+
+# ------------------------------------------------------------- schedulers ---
+def test_fifo_preserves_arrival_order():
+    s = FifoScheduler()
+    for i, m in enumerate("abcab"):
+        s.submit(m, i)
+    assert [s.next_batch().payload for _ in range(5)] == [0, 1, 2, 3, 4]
+    assert s.next_batch() is None
+
+
+def test_round_robin_matches_legacy_sweep_order():
+    s = RoundRobinScheduler()
+    for i, m in enumerate(["a", "a", "b", "b", "c"]):
+        s.submit(m, i)
+    got = [(s.next_batch().model) for _ in range(5)]
+    assert got == ["a", "b", "c", "a", "b"]
+
+
+def test_affinity_prefers_resident_overlap_and_never_starves():
+    s = DedupAffinityScheduler(max_defer=2)
+    s.submit("a", 0, pages=[1, 2])
+    s.submit("b", 1, pages=[8, 9])
+    s.submit("a", 2, pages=[1, 3])
+    s.submit("a", 3, pages=[2, 3])
+    resident = {1, 2, 3}
+    # a overlaps resident fully, b not at all
+    assert s.next_batch(resident).model == "a"
+    assert s.next_batch(resident).model == "a"
+    # b deferred twice -> starvation bound forces it despite zero overlap
+    assert s.next_batch(resident).model == "b"
+    assert s.next_batch(resident).model == "a"
+    assert s.next_batch(resident) is None
+
+
+def test_make_scheduler_factory():
+    assert isinstance(make_scheduler("fifo"), FifoScheduler)
+    sched = RoundRobinScheduler()
+    assert make_scheduler(sched) is sched
+    with pytest.raises(ValueError):
+        make_scheduler("nope")
+
+
+# ------------------------------------------------------------- timeline ----
+def test_timeline_double_buffer_math():
+    tl = FetchComputeTimeline()
+    issue, done = tl.advance(2.0, 3.0)        # fetch 0-2, compute 2-5
+    assert (issue, done) == (0.0, 5.0)
+    issue, done = tl.advance(1.0, 1.0)        # fetch 2-3 ∥ compute, c 5-6
+    assert (issue, done) == (2.0, 6.0)
+    assert tl.makespan == 6.0
+    tl.charge_fetch(10.0)                     # prefetch occupies channel
+    assert tl.fetch_clock == 13.0
+    assert tl.makespan == 13.0
+
+
+# ------------------------------------------------------------- prefetcher ---
+def test_pool_prefetch_does_not_pollute_demand_stats():
+    store, _ = _two_group_store()
+    pool = store.make_buffer_pool(capacity_pages=store.num_pages())
+    pages = store.model_pages("a0")
+    assert pool.prefetch("a0", pages[0]) is True
+    assert pool.prefetch("a0", pages[0]) is False      # already resident
+    assert (pool.hits, pool.misses) == (0, 0)
+    assert pool.prefetches == 1
+    # a later demand access of the prefetched page is a HIT
+    assert pool.access("a0", pages[0]) is True
+    assert (pool.hits, pool.misses) == (1, 0)
+
+
+def test_pool_prefetch_declines_hotter_victims():
+    store, _ = _two_group_store()
+    pool = store.make_buffer_pool(capacity_pages=2)
+    hot = store.model_pages("a0")[:2]
+    for p in hot:                       # demand-resident, hot model
+        pool.access("a0", p)
+        pool.access("a1", p)
+    cold = [p for p in store.model_pages("b0") if p not in hot][0]
+    # b0 has ~zero lambda: its page cannot displace the a-group's pages
+    assert pool.prefetch("b0", cold) is False
+    assert pool.prefetch_declined == 1
+    assert set(hot) <= pool.resident_pages()
+
+
+def test_prefetched_page_stays_most_evictable_under_mru():
+    """An unused speculative page must be the policy's FIRST victim, even
+    under MRU-family policies whose victims come from the MRU end."""
+    store, _ = _two_group_store()
+    pool = store.make_buffer_pool(capacity_pages=3, policy="mru")
+    a = store.model_pages("a0")
+    pool.access("a0", a[0])
+    pool.access("a0", a[1])
+    cold = store.model_pages("b0")[0]
+    assert pool.prefetch("b0", cold) is True        # into the free slot
+    pool.access("a0", a[2])                          # miss -> must evict
+    assert cold not in pool.resident_pages()         # ...the unused page
+    assert {a[0], a[1], a[2]} == pool.resident_pages()
+
+
+def test_prefetcher_budget_respected():
+    store, heads = _two_group_store()
+    server = WeightServer(store, store.num_pages(), "optimized_mru",
+                          StorageModel("hdd"))
+    # warm lambda for a0 so the prefetcher has a hot model to target
+    server.access_pages("a0", store.model_pages("a0")[:1])
+    pf = Prefetcher(server, max_pages_per_step=64)
+    t = pf.step(budget_s=0.0)
+    assert t == 0.0 and pf.stats.issued == 0
+    t = pf.step(budget_s=1.0)           # hdd: seek 8ms, room for many
+    assert 0.0 < t <= 1.0
+    assert pf.stats.issued > 0
+
+
+def test_lambda_rates_exposed():
+    store, _ = _two_group_store()
+    pool = store.make_buffer_pool(capacity_pages=4)
+    for p in store.model_pages("a0"):
+        pool.access("a0", p)
+    rates = pool.model_rates()
+    assert rates.get("a0", 0.0) > 0.0
