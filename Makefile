@@ -1,4 +1,4 @@
-.PHONY: verify test-fast bench example
+.PHONY: verify test-fast bench bench-smoke example
 
 # Tier-1 verification (ROADMAP.md)
 verify:
@@ -10,6 +10,11 @@ test-fast:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run
+
+# Fast numpy-vs-device serving comparison -> BENCH_serving.json
+# (run by scripts/verify.sh so the perf trajectory is tracked per PR)
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_serving_backends --smoke
 
 example:
 	PYTHONPATH=src python examples/multi_model_serving.py

@@ -16,6 +16,7 @@ MODULES = [
     "fig8_latency_curves",
     "fig13_validation_overheads",
     "fig14_cache_policies",
+    "bench_serving_backends",
     "roofline_table",
 ]
 

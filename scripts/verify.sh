@@ -1,5 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the ROADMAP.md command, from any cwd.
+# Tier-1 verification: the ROADMAP.md command, from any cwd, followed by
+# the serving-backend smoke benchmark (emits BENCH_serving.json so the
+# numpy-vs-device perf trajectory is tracked from every verify run).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serving_backends --smoke

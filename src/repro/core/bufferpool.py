@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import OrderedDict, defaultdict
-from typing import Callable, Dict, Hashable, Iterable, Optional, Set
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Set
 
 PageId = Hashable
 ModelId = Hashable
@@ -81,6 +81,7 @@ class BufferPool:
         self._last_access: Dict[ModelId, int] = {}
         self._set_lambda: Dict[Hashable, float] = defaultdict(float)
         self._set_last: Dict[Hashable, int] = {}
+        self._pinned: Set[PageId] = set()
 
     # ------------------------------------------------------------- metrics --
     @property
@@ -100,6 +101,16 @@ class BufferPool:
 
     def resident_pages(self) -> Set[PageId]:
         return set(self.resident)
+
+    def invalidate_resident(self) -> None:
+        """Drop every resident page *without* charging evictions: the
+        backing store was repacked, so page ids no longer name the same
+        bytes.  ``on_evict`` still fires per page so an attached device
+        slab frees its slots."""
+        for page in list(self.resident):
+            del self.resident[page]
+            if self.on_evict:
+                self.on_evict(page)
 
     # -------------------------------------------------------------- access --
     def _ensure_meta(self, model: ModelId, page: PageId) -> _PageMeta:
@@ -131,6 +142,25 @@ class BufferPool:
         if self.on_load:
             self.on_load(page)
         return False
+
+    def access_group(self, model: ModelId, pages: Iterable[PageId]
+                     ) -> List[bool]:
+        """Touch a batch's whole page working set atomically: the group is
+        *pinned* for the duration, so a later miss in the same group can
+        never evict an earlier member (which would tear a device-resident
+        working set mid-batch).  Raises ValueError when the group cannot
+        possibly co-reside — callers fall back to unpinned access.
+        Returns the per-page hit flags."""
+        pages = list(pages)
+        if len(set(pages)) > self.cfg.capacity_pages:
+            raise ValueError(
+                f"group of {len(set(pages))} pages exceeds pool capacity "
+                f"{self.cfg.capacity_pages}")
+        self._pinned = set(pages)
+        try:
+            return [self.access(model, p) for p in pages]
+        finally:
+            self._pinned = set()
 
     def _update_rate(self, model: ModelId) -> None:
         last = self._last_access.get(model)
@@ -173,16 +203,20 @@ class BufferPool:
 
     def _pick_victim(self) -> PageId:
         pol = self.cfg.policy
+        evictable = [p for p in self.resident if p not in self._pinned]
+        if not evictable:
+            raise RuntimeError("every resident page is pinned; "
+                               "group exceeds usable capacity")
         if pol == "lru":
-            return next(iter(self.resident))
+            return evictable[0]
         if pol == "mru":
-            return next(reversed(self.resident))
+            return evictable[-1]
         if pol == "lfu":
-            return min(self.resident, key=lambda p: (self.meta[p].freq,
-                                                     self.meta[p].last_tick))
+            return min(evictable, key=lambda p: (self.meta[p].freq,
+                                                 self.meta[p].last_tick))
         inner = "mru" if pol.endswith("mru") else "lru"
         by_set: Dict[Hashable, Set[PageId]] = defaultdict(set)
-        for p in self.resident:
+        for p in evictable:
             by_set[self.meta[p].locality_set].add(p)
         best, best_cost = None, None
         for ls, pages in by_set.items():

@@ -47,24 +47,39 @@ class ModelStore:
         self.dedup = Deduplicator(self.cfg.dedup)
         self._pack: Optional[PackResult] = None
         self._slot_of_block: Dict[int, Tuple[int, int]] = {}  # did -> (page, slot)
+        # Packing generation: bumped on every repack().  Downstream caches
+        # (WeightServer._pool_arr, DevicePagePool remaps, Prefetcher page
+        # sets) key their validity on this counter, so a model update can
+        # never leave a consumer serving a stale pool array.
+        self.pack_generation = 0
+        self._stack: Optional[np.ndarray] = None          # distinct blocks
+        self._vt_cache: Dict[TensorRef, VirtualTensor] = {}
+        self._page_pool_cache: Dict[str, Tuple[int, np.ndarray]] = {}
+
+    def _mutate(self) -> None:
+        """Invalidate everything derived from dedup state / packing."""
+        self._pack = None
+        self._stack = None
+        self._vt_cache.clear()
+        self._page_pool_cache.clear()
 
     # ------------------------------------------------------------ pipeline --
     def register(self, model: str, tensors: Mapping[str, np.ndarray],
                  evaluator: Optional[Evaluator] = None,
                  layers=None) -> DedupResult:
         res = self.dedup.add_model(model, dict(tensors), evaluator, layers)
-        self._pack = None                        # packing is now stale
+        self._mutate()                           # packing is now stale
         return res
 
     def remove(self, model: str) -> None:
         self.dedup.remove_model(model)
-        self._pack = None
+        self._mutate()
 
     def update(self, model: str, tensors: Mapping[str, np.ndarray],
                evaluator: Optional[Evaluator] = None,
                approach: int = 2) -> DedupResult:
         res = self.dedup.update_model(model, dict(tensors), evaluator, approach)
-        self._pack = None
+        self._mutate()
         return res
 
     def repack(self) -> PackResult:
@@ -82,6 +97,9 @@ class ModelStore:
                 # A block may appear in several pages (Alg. 3 copies); keep
                 # the first placement as canonical.
                 self._slot_of_block.setdefault(did, (pid, slot))
+        self._vt_cache.clear()
+        self._page_pool_cache.clear()
+        self.pack_generation += 1
         return self._pack
 
     @property
@@ -89,6 +107,13 @@ class ModelStore:
         if self._pack is None:
             self.repack()
         return self._pack
+
+    def packing_current(self, generation: int) -> bool:
+        """True iff page ids minted under ``generation`` are still valid:
+        the store is packed and has not been repacked since.  Consumers
+        holding derived page sets (queued batches, model-switch caches)
+        gate on this before trusting them."""
+        return self._pack is not None and self.pack_generation == generation
 
     # ----------------------------------------------------------- accessors --
     def num_pages(self) -> int:
@@ -113,46 +138,102 @@ class ModelStore:
     def materialize(self, model: str, tensor: str) -> np.ndarray:
         return self.dedup.materialize(model, tensor)
 
+    def _distinct_stack(self) -> np.ndarray:
+        """[len(distinct), bh, bw] float32 stack of the distinct blocks
+        (tombstones as zeros), cached until the next register/update/remove.
+        All the vectorized gathers below index into this one array."""
+        if self._stack is None \
+                or self._stack.shape[0] != len(self.dedup.distinct):
+            self._stack = self.dedup.pool(np.float32)
+        return self._stack
+
     def materialize_rows(self, model: str, tensor: str,
                          rows: np.ndarray) -> np.ndarray:
         """Gather only the requested rows (2-D tensors): the serving path's
-        partial materialization — touches just the row blocks involved."""
+        partial materialization — touches just the row blocks involved.
+        Fully vectorized: one fancy-index gather pulls exactly the
+        requested rows out of the stacked distinct-block array."""
         e = self.dedup.models[model].tensors[tensor]
         bh, bw = e.grid.block_shape
         gw = e.grid.grid[1]
+        width = e.grid.shape2d[1]
         rows = np.asarray(rows)
         rb = rows // bh
         off = rows % bh
-        out = np.empty((len(rows), e.grid.shape2d[1]), np.float32)
-        for j in range(gw):
-            dids = e.block_map[rb * gw + j]
-            cols = slice(j * bw, min((j + 1) * bw, e.grid.shape2d[1]))
-            width = cols.stop - cols.start
-            for i, (did, o) in enumerate(zip(dids, off)):
-                out[i, cols] = self.dedup.distinct[int(did)][o, :width]
-        return out
+        stack = self._distinct_stack()
+        dids = e.block_map[rb[:, None] * gw + np.arange(gw)[None, :]]
+        out = stack[dids, off[:, None], :]           # [n, gw, bw] rows only
+        return np.ascontiguousarray(
+            out.reshape(len(rows), gw * bw)[:, :width], dtype=np.float32)
+
+    def _page_slot_ids(self) -> np.ndarray:
+        """[num_pages, blocks_per_page] distinct-id matrix of the packing
+        (-1 marks an unfilled slot in a non-full page)."""
+        pk = self.packing
+        l = self.cfg.blocks_per_page
+        ids = np.full((pk.num_pages, l), -1, dtype=np.int64)
+        for pid, page in enumerate(pk.pages):
+            ids[pid, :len(page)] = page
+        return ids
 
     def page_pool(self, dtype=np.float32) -> np.ndarray:
-        """[num_pages, blocks_per_page, bh, bw] physical page array."""
-        bh, bw = self.cfg.dedup.block_shape
-        l = self.cfg.blocks_per_page
-        pool = np.zeros((self.packing.num_pages, l, bh, bw), dtype=dtype)
-        for pid, page in enumerate(self.packing.pages):
-            for slot, did in enumerate(page):
-                pool[pid, slot] = self.dedup.distinct[did]
+        """[num_pages, blocks_per_page, bh, bw] physical page array.
+
+        Built by one vectorized gather from the distinct-block stack and
+        cached per packing generation, so repeated callers (WeightServer,
+        benchmarks) never re-run the old nested Python loops."""
+        pk = self.packing
+        key = np.dtype(dtype).str
+        hit = self._page_pool_cache.get(key)
+        if hit is not None and hit[0] == self.pack_generation:
+            return hit[1]
+        ids = self._page_slot_ids()
+        pool = self._distinct_stack()[np.clip(ids, 0, None)].astype(
+            dtype, copy=True)
+        pool[ids < 0] = 0
+        self._page_pool_cache[key] = (self.pack_generation, pool)
         return pool
+
+    def page_array(self, pid: int, dtype=np.float32) -> np.ndarray:
+        """One physical page [blocks_per_page, bh, bw] — what a device
+        page pool transfers host->HBM on a buffer-pool miss, without
+        building the whole pool array."""
+        bh, bw = self.cfg.dedup.block_shape
+        page = self.packing.pages[pid]
+        out = np.zeros((self.cfg.blocks_per_page, bh, bw), dtype=dtype)
+        out[:len(page)] = self._distinct_stack()[np.asarray(page)]
+        return out
 
     def virtual_tensor(self, model: str, tensor: str) -> VirtualTensor:
         """Indirection view used by the Pallas dedup kernels: block_map maps
-        each logical block to a flat slot ``page * l + slot``."""
+        each logical block to a flat slot ``page * l + slot``.
+
+        Slot-remap contract: every flat slot lies inside one of the
+        tensor's *own* cover pages (``page_ids``), so a consumer that
+        faults exactly ``page_ids`` resident (e.g. the device page pool)
+        can always rewrite the map into its slot space.  The flat map is
+        vectorized and cached per packing generation."""
         pk = self.packing
+        key: TensorRef = (model, tensor)
+        hit = self._vt_cache.get(key)
+        if hit is not None:
+            return hit
         e = self.dedup.models[model].tensors[tensor]
         l = self.cfg.blocks_per_page
-        flat = np.array([self._slot_of_block[int(d)][0] * l
-                         + self._slot_of_block[int(d)][1]
-                         for d in e.block_map], dtype=np.int32)
-        return VirtualTensor(e.grid, e.dtype, flat,
-                             sorted(set(pk.tensor_pages[(model, tensor)])))
+        page_ids = sorted(set(pk.tensor_pages[key]))
+        # did -> flat slot, restricted to this tensor's cover pages
+        # (first placement in page-id order wins, matching _slot_of_block).
+        slot_arr = np.full(len(self.dedup.distinct), -1, dtype=np.int64)
+        for pid in reversed(page_ids):
+            page = pk.pages[pid]
+            slot_arr[np.asarray(page, dtype=np.int64)] = \
+                pid * l + np.arange(len(page))
+        flat = slot_arr[e.block_map].astype(np.int32)
+        assert (flat >= 0).all(), \
+            f"tensor {key}: block map escapes its cover pages"
+        vt = VirtualTensor(e.grid, e.dtype, flat, page_ids)
+        self._vt_cache[key] = vt
+        return vt
 
     # ------------------------------------------------------------- serving --
     def page_sharers(self) -> Dict[int, frozenset]:
@@ -174,8 +255,11 @@ class ModelStore:
                 pages.update(pids)
         return sorted(pages)
 
-    def make_buffer_pool(self, capacity_pages: int,
-                         policy: str = "optimized_mru", **kw) -> BufferPool:
+    def page_metadata(self) -> Tuple[Dict[int, frozenset],
+                                     Dict[int, frozenset]]:
+        """(page_sharers, page_locality) for the current packing — the
+        Eq.-2 sharing structure and the locality-set (equivalence-class)
+        grouping the pool policies consume."""
         pk = self.packing
         sharers = self.page_sharers()
         locality: Dict[int, frozenset] = {}
@@ -185,8 +269,17 @@ class ModelStore:
                 owners.setdefault(p, set()).add((m, t))
         for p, ts in owners.items():
             locality[p] = frozenset(ts)          # locality set = equivalence class
+        return sharers, locality
+
+    def make_buffer_pool(self, capacity_pages: int,
+                         policy: str = "optimized_mru",
+                         on_load=None, on_evict=None, **kw) -> BufferPool:
+        """``on_load``/``on_evict`` attach a backing tier (e.g. the device
+        page pool's host->HBM transfers) to the policy simulator."""
+        sharers, locality = self.page_metadata()
         return BufferPool(PoolConfig(capacity_pages, policy, **kw),
-                          page_sharers=sharers, page_locality=locality)
+                          page_sharers=sharers, page_locality=locality,
+                          on_load=on_load, on_evict=on_evict)
 
     # --------------------------------------------------------- persistence --
     def save(self, path: str) -> Dict:

@@ -50,6 +50,25 @@ def dedup_embedding(ids, pool, row_block_map):
     return out.reshape(lead + (out.shape[-1],))
 
 
+def dedup_embedding_striped(ids, pool, block_map, width=None):
+    """Row gather from a 2-D virtual tensor stored as ``(bh, bw)`` blocks.
+
+    The plain ``dedup_embedding`` kernel assumes row blocks spanning the
+    full model dimension (``pool [n, bv, D]``).  Storage blocks are square
+    tiles, so a row of the virtual tensor crosses ``gw`` column stripes:
+    this adapter runs the kernel once per stripe against the same resident
+    pool — each stripe's ``block_map[:, j]`` is its own row-block map —
+    and concatenates, trimming the ragged last stripe to ``width``.
+
+    ids [B]; pool [n_blocks, bh, bw]; block_map [gh, gw] int32.
+    Returns [B, width or gw*bw].
+    """
+    gh, gw = block_map.shape
+    outs = [dedup_embedding(ids, pool, block_map[:, j]) for j in range(gw)]
+    out = outs[0] if gw == 1 else jnp.concatenate(outs, axis=1)
+    return out if width is None else out[:, :width]
+
+
 def lsh_signature(blocks, proj, bias, r: float):
     n, dim = blocks.shape
     blocks = blocks.reshape(n, dim).astype(jnp.float32)
@@ -83,5 +102,5 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
     return out[:, :Sq]
 
 
-__all__ = ["dedup_matmul", "dedup_embedding", "lsh_signature",
-           "flash_attention", "ref", "tpu_compiler_params"]
+__all__ = ["dedup_matmul", "dedup_embedding", "dedup_embedding_striped",
+           "lsh_signature", "flash_attention", "ref", "tpu_compiler_params"]

@@ -58,6 +58,11 @@ def main(argv=None):
                     choices=list(("ssd", "hdd", "nvme", "dram")))
     ap.add_argument("--scheduler", default="round_robin",
                     choices=sorted(SCHEDULERS))
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "device"),
+                    help="numpy: host materialization (policy simulator); "
+                         "device: serve through the HBM page slab via the "
+                         "Pallas dedup kernels (DESIGN.md §3)")
     ap.add_argument("--overlap", action="store_true",
                     help="double-buffer grouped fetches against compute")
     ap.add_argument("--prefetch", action="store_true",
@@ -78,7 +83,7 @@ def main(argv=None):
           f"reduction={dense_bytes/max(1, dedup_bytes):.2f}x")
 
     server = WeightServer(store, args.capacity_pages, args.policy,
-                          StorageModel(args.storage))
+                          StorageModel(args.storage), backend=args.backend)
     engine = EmbeddingServingEngine(
         server, heads, scheduler=args.scheduler,
         prefetcher=Prefetcher(server) if args.prefetch else None,
@@ -92,8 +97,15 @@ def main(argv=None):
                                    seed=args.seed + 100 + b)
         engine.submit(name, docs)
     stats: ServeStats = engine.run()
+    if args.backend == "device":
+        print(f"[device] slab={server.device_pool.capacity} pages "
+              f"loads={server.device_pool.loads} "
+              f"evicts={server.device_pool.evicts} "
+              f"device_batches={stats.device_batches} "
+              f"dense_fallbacks={stats.dense_fallbacks}")
     print(f"[serve] batches={stats.batches} requests={stats.requests} "
           f"scheduler={args.scheduler} overlap={args.overlap} "
+          f"backend={args.backend} "
           f"hit_ratio={server.pool.hit_ratio:.3f} "
           f"fetch={stats.fetch_seconds*1e3:.1f}ms "
           f"prefetch={stats.prefetch_seconds*1e3:.1f}ms "

@@ -1,3 +1,4 @@
+from .device_pool import DevicePagePool
 from .engine import (EmbeddingServingEngine, FetchComputeTimeline,
                      LMServingEngine, ServeStats, StorageModel, WeightServer)
 from .kvcache import PagedKVCache
@@ -6,8 +7,9 @@ from .scheduler import (SCHEDULERS, BatchScheduler, DedupAffinityScheduler,
                         FifoScheduler, RoundRobinScheduler, ScheduledBatch,
                         make_scheduler)
 
-__all__ = ["EmbeddingServingEngine", "FetchComputeTimeline",
-           "LMServingEngine", "ServeStats", "StorageModel", "WeightServer",
-           "PagedKVCache", "Prefetcher", "PrefetchStats", "SCHEDULERS",
-           "BatchScheduler", "DedupAffinityScheduler", "FifoScheduler",
-           "RoundRobinScheduler", "ScheduledBatch", "make_scheduler"]
+__all__ = ["DevicePagePool", "EmbeddingServingEngine",
+           "FetchComputeTimeline", "LMServingEngine", "ServeStats",
+           "StorageModel", "WeightServer", "PagedKVCache", "Prefetcher",
+           "PrefetchStats", "SCHEDULERS", "BatchScheduler",
+           "DedupAffinityScheduler", "FifoScheduler", "RoundRobinScheduler",
+           "ScheduledBatch", "make_scheduler"]

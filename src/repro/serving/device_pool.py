@@ -1,0 +1,337 @@
+"""Device-resident page pool: the HBM tier of the paper's buffer pool.
+
+The paper pages deduplicated blocks between disk and DRAM; on TPU the
+same two tiers are host DRAM (the ModelStore's distinct-block arrays)
+and HBM (DESIGN.md §2).  :class:`DevicePagePool` is the HBM side:
+
+  * a **fixed preallocated slab** ``[capacity_pages, blocks_per_page,
+    bh, bw]`` living on the accelerator — page loads are real
+    ``jax.device_put`` + ``dynamic_update_slice`` transfers, not numpy
+    copies;
+  * a **physical→slot remap**: :meth:`remap` rewrites a
+    ``ModelStore.virtual_tensor`` flat block map (physical slot space,
+    ``page * l + slot``) into slab-slot space (``slab_slot * l + slot``)
+    with one vectorized lookup, cached per (packing, slab) generation;
+  * **compute entry points** — :meth:`gather_rows`, :meth:`virtual_matmul`,
+    :meth:`unblock` — that run the Pallas dedup kernels (or their jitted
+    XLA equivalents off-TPU) directly against the resident slab, so
+    inference never densifies weights on the host.
+
+The pool is driven by :class:`~repro.core.bufferpool.BufferPool` through
+its ``on_load``/``on_evict`` callbacks: the policy simulator stays the
+single source of truth for *which* pages are resident, and this class
+keeps the invariant ``slab occupied slots == pool resident set``.
+
+Kernel mode — how :meth:`gather_rows` / :meth:`virtual_matmul` execute:
+
+  * ``"pallas"``: the Pallas dedup kernels (interpret-mode off-TPU —
+    the correctness path the equivalence tests exercise).
+  * ``"xla"``: jitted XLA gathers, the same math lowered without Pallas
+    (the right choice on GPU).
+  * ``"host"``: numpy gathers against a *host mirror* of the slab.  Off
+    accelerator the "HBM" tier physically lives in host DRAM, so the
+    mirror — maintained page-for-page with the slab — is the honest
+    fast path there: same slot remap, same residency invariant, zero
+    per-batch weight densification; interpret-mode Pallas and eager XLA
+    gathers are correctness tools, not performance paths, on CPU.
+  * ``"auto"`` (default): Pallas on TPU, host mirror otherwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.blocks import BlockGrid
+from ..core.store import ModelStore, VirtualTensor
+from ..kernels import ops
+
+__all__ = ["DevicePagePool"]
+
+
+# --------------------------------------------------------- jitted XLA paths --
+@functools.partial(jax.jit, static_argnames=("bh", "width"))
+def _gather_rows_xla(slab, bmap2d, rows, *, bh: int, width: int):
+    """Row gather without densifying: the slab is viewed as a flat stack
+    of block *rows* ([S*l*bh, bw]) and exactly the requested rows are
+    gathered — the XLA lowering of what dedup_embedding does via DMA."""
+    S, l, _, bw = slab.shape
+    flat_rows = slab.reshape(S * l * bh, bw)
+    rb, off = rows // bh, rows % bh
+    dev = bmap2d[rb]                                  # [n, gw]
+    out = flat_rows[dev * bh + off[:, None]]          # [n, gw, bw]
+    return out.reshape(out.shape[0], -1)[:, :width]
+
+
+@functools.partial(jax.jit, static_argnames=("grid",))
+def _unblock_xla(slab, dev_map, *, grid: BlockGrid):
+    """Reassemble a full tensor from resident slab blocks on device
+    (the LM-serving load path: zero host-side materialization)."""
+    S, l, bh, bw = slab.shape
+    gh, gw = grid.grid
+    blocks = jnp.take(slab.reshape(S * l, bh, bw), dev_map, axis=0)
+    x2 = (blocks.reshape(gh, gw, bh, bw)
+                .transpose(0, 2, 1, 3)
+                .reshape(gh * bh, gw * bw))
+    return x2[:grid.shape2d[0], :grid.shape2d[1]].reshape(grid.tensor_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("grid",))
+def _matmul_xla(slab, bmap2d, x, *, grid: BlockGrid):
+    W = _unblock_xla(slab, bmap2d.reshape(-1), grid=grid)
+    W = W.reshape(grid.shape2d)
+    return jnp.matmul(x[..., :grid.shape2d[0]], W,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _pad_pow2(n: int, floor: int = 8) -> int:
+    p = floor
+    while p < n:
+        p <<= 1
+    return p
+
+
+class DevicePagePool:
+    """Fixed-capacity HBM slab of deduplicated pages + slot remap."""
+
+    def __init__(self, store: ModelStore, capacity_pages: int,
+                 dtype=jnp.float32, kernel_mode: str = "auto"):
+        if kernel_mode not in ("auto", "pallas", "xla", "host"):
+            raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
+        self.store = store
+        bh, bw = store.cfg.dedup.block_shape
+        self.block_shape = (bh, bw)
+        self.blocks_per_page = store.cfg.blocks_per_page
+        self.capacity = int(capacity_pages)
+        self.dtype = dtype
+        self.kernel_mode = kernel_mode
+        # The preallocated HBM slab. jnp.zeros commits the allocation on
+        # the default device up front; every load is an in-place-style
+        # functional update of this one buffer.  In host mode the mirror
+        # below is the tier's physical backing, so the device buffer is
+        # never allocated at all.
+        self.slab = None if self.mode() == "host" else jnp.zeros(
+            (self.capacity, self.blocks_per_page, bh, bw), dtype)
+        # Host mirror, kept page-for-page identical with the slab: the
+        # "host" kernel mode computes from it, and off-accelerator it is
+        # the physical backing of the tier anyway.
+        self.host_slab = np.zeros(
+            (self.capacity, self.blocks_per_page, bh, bw), np.float32)
+        self.slot_of: Dict[int, int] = {}        # physical page id -> slot
+        self._free: List[int] = list(range(self.capacity - 1, -1, -1))
+        # page id -> slot as an int64 array (-1 = absent), maintained O(1)
+        # per load/evict so per-batch remaps are pure vectorized lookups
+        self._page_to_slot = np.full(store.packing.num_pages, -1,
+                                     dtype=np.int64)
+        self.generation = 0                      # bumped on load/evict/flush
+        self.loads = 0
+        self.evicts = 0
+        # (model, tensor) -> (pack_gen, slab_gen, dev_map np.int32,
+        #                     complete: no -1 holes)
+        self._remap_cache: Dict[Tuple[str, str],
+                                Tuple[int, int, np.ndarray, bool]] = {}
+
+    # ------------------------------------------------------ page movement --
+    def load(self, pid: int) -> None:
+        """BufferPool ``on_load``: transfer one page host->device into a
+        free slab slot.  In host mode the mirror *is* the device tier
+        (host DRAM), so the jnp slab is left untouched — pallas/xla modes
+        do the real ``device_put`` + ``dynamic_update_slice`` transfer."""
+        if pid in self.slot_of:
+            return
+        slot = self._free.pop()
+        page = self.store.page_array(pid, dtype=np.float32)
+        if self.mode() != "host":
+            self.slab = jax.lax.dynamic_update_slice(
+                self.slab, jax.device_put(page[None].astype(self.dtype)),
+                (slot, 0, 0, 0))
+        self.host_slab[slot] = page
+        self.slot_of[pid] = slot
+        self._page_to_slot[pid] = slot
+        self.generation += 1
+        self.loads += 1
+
+    def evict(self, pid: int) -> None:
+        """BufferPool ``on_evict``: release the page's slot.  The slab
+        bytes are left in place — a slot without a slot_of entry is
+        unreachable through any remap, so no scrub is needed."""
+        slot = self.slot_of.pop(pid, None)
+        if slot is None:
+            return
+        self._free.append(slot)
+        self._page_to_slot[pid] = -1
+        self.generation += 1
+        self.evicts += 1
+
+    def flush(self) -> None:
+        """Forget every resident page (store repacked: page ids renamed,
+        and the page-id universe may have changed size)."""
+        self.slot_of.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._page_to_slot = np.full(self.store.packing.num_pages, -1,
+                                     dtype=np.int64)
+        self._remap_cache.clear()
+        self.generation += 1
+
+    # ----------------------------------------------------------- queries --
+    def resident_pages(self) -> Set[int]:
+        return set(self.slot_of)
+
+    def occupied_slots(self) -> Set[int]:
+        return set(self.slot_of.values())
+
+    def flat_pool(self) -> jnp.ndarray:
+        """Kernel view of the slab: [capacity*blocks_per_page, bh, bw]."""
+        bh, bw = self.block_shape
+        return self.slab.reshape(self.capacity * self.blocks_per_page,
+                                 bh, bw)
+
+    def slot_page(self, slot: int) -> np.ndarray:
+        """Host copy of one slab slot (tests / debugging)."""
+        if self.mode() == "host":
+            return self.host_slab[slot].copy()
+        return np.asarray(self.slab[slot])
+
+    def mode(self) -> str:
+        """Resolved compute mode: pallas | xla | host."""
+        if self.kernel_mode != "auto":
+            return self.kernel_mode
+        return "pallas" if jax.default_backend() == "tpu" else "host"
+
+    def use_pallas(self) -> bool:
+        return self.mode() == "pallas"
+
+    # ------------------------------------------------------------- remap --
+    def remap(self, vt: VirtualTensor,
+              key: Optional[Tuple[str, str]] = None,
+              strict: bool = True) -> Optional[np.ndarray]:
+        """Rewrite a virtual tensor's physical flat block map into slab
+        slot space with one vectorized lookup (cached per packing + slab
+        generation under ``key``).
+
+        ``strict=True`` returns None when *any* of the tensor's pages is
+        not resident (whole-tensor consumers: unblock / virtual_matmul).
+        ``strict=False`` returns the map with ``-1`` holes for absent
+        pages — a row-gather caller that has already faulted its batch's
+        pages (and verified them via :meth:`pages_resident`) only touches
+        resident entries, so partial residency still serves off the slab.
+        """
+        hit = self._remap_cache.get(key) if key is not None else None
+        if hit is not None and hit[0] == self.store.pack_generation \
+                and hit[1] == self.generation:
+            dev_map, complete = hit[2], hit[3]
+        else:
+            l = self.blocks_per_page
+            slots = self._page_to_slot[vt.block_map // l]
+            holes = slots < 0
+            dev_map = np.where(holes, -1,
+                               slots * l + vt.block_map % l).astype(np.int32)
+            complete = not holes.any()
+            if key is not None:
+                self._remap_cache[key] = (self.store.pack_generation,
+                                          self.generation, dev_map, complete)
+        if strict and not complete:
+            return None
+        return dev_map
+
+    def pages_resident(self, pages) -> bool:
+        return all(p in self.slot_of for p in pages)
+
+    # ------------------------------------------------------------ compute --
+    def gather_rows(self, dev_map: np.ndarray, grid: BlockGrid,
+                    rows: np.ndarray, pad: bool = False):
+        """Rows of the virtual 2-D tensor, gathered from the resident
+        slab.  Pallas mode runs ``dedup_embedding`` per column stripe;
+        xla mode one jitted gather; host mode a numpy fancy-index gather
+        from the slab mirror (returns np.ndarray).
+
+        For the jit modes ``rows`` is padded to a power-of-two bucket so
+        caches stay warm across varying batch row counts; ``pad=True``
+        returns the padded ``[bucket, width]`` array (rows past ``n`` are
+        row-0 garbage) so *downstream* jits also see stable shapes —
+        indices into the first ``n`` rows are unaffected."""
+        bh, bw = self.block_shape
+        gh, gw = grid.grid
+        width = grid.shape2d[1]
+        rows = np.asarray(rows)
+        n = len(rows)
+        bmap2d = dev_map.reshape(gh, gw)
+        # Partial remaps carry -1 holes; negative indexing would silently
+        # wrap to the wrong slab bytes, so a touched hole (the caller's
+        # page set failed to cover its rows) must surface as None — the
+        # engines then take the host fallback instead of serving garbage.
+        if n and (bmap2d[np.unique(rows // bh)] < 0).any():
+            return None
+        mode = self.mode()
+        if mode == "host":
+            S, l = self.capacity, self.blocks_per_page
+            flat_rows = self.host_slab.reshape(S * l * bh, bw)   # view
+            rb, off = rows // bh, rows % bh
+            out = flat_rows[bmap2d[rb] * bh + off[:, None]]      # [n, gw, bw]
+            return out.reshape(n, gw * bw)[:, :width]
+        # Pad with a *requested* row, not row 0: under partial residency
+        # row 0's block may be absent and must never be touched.
+        ids = np.full(_pad_pow2(max(n, 1)), rows[0] if n else 0, np.int32)
+        ids[:n] = rows
+        if mode == "pallas":
+            out = ops.dedup_embedding_striped(
+                jnp.asarray(ids), self.flat_pool(), jnp.asarray(bmap2d),
+                width=width)
+        else:
+            out = _gather_rows_xla(self.slab, jnp.asarray(bmap2d),
+                                   jnp.asarray(ids), bh=bh, width=width)
+        return out if pad else out[:n]
+
+    def virtual_matmul(self, dev_map: np.ndarray, grid: BlockGrid, x):
+        """``x @ W_virtual`` with W never densified: dedup_matmul streams
+        slab blocks through the scalar-prefetched block map (pallas);
+        host mode runs the same k-loop blockwise in numpy against the
+        slab mirror."""
+        bh, bw = self.block_shape
+        gh, gw = grid.grid
+        K, N = grid.shape2d
+        bmap2d = dev_map.reshape(gh, gw)
+        mode = self.mode()
+        if mode == "host":
+            S, l = self.capacity, self.blocks_per_page
+            blocks = self.host_slab.reshape(S * l, bh, bw)
+            x = np.asarray(x, dtype=np.float32)
+            xp = x
+            if x.shape[-1] != gh * bh:
+                assert x.shape[-1] == K, (x.shape, K)
+                xp = np.zeros(x.shape[:-1] + (gh * bh,), np.float32)
+                xp[..., :K] = x
+            y = np.zeros(x.shape[:-1] + (gw * bw,), np.float32)
+            for j in range(gw):                  # the kernel's (j, k) loops
+                acc = y[..., j * bw:(j + 1) * bw]
+                for k in range(gh):
+                    acc += xp[..., k * bh:(k + 1) * bh] \
+                        @ blocks[bmap2d[k, j]]
+            return y[..., :N]
+        if mode == "pallas":
+            pad = gh * bh - x.shape[-1]
+            if pad:
+                widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+                x = jnp.pad(x, widths)
+            bm = 128 if jax.default_backend() == "tpu" else 8
+            y = ops.dedup_matmul(x, self.flat_pool(), jnp.asarray(bmap2d),
+                                 bm=bm)
+            return y[..., :N]
+        if x.shape[-1] != gh * bh:      # _matmul_xla slices x to K itself
+            assert x.shape[-1] == K, (x.shape, K)
+        return _matmul_xla(self.slab, jnp.asarray(bmap2d), x, grid=grid)
+
+    def unblock(self, dev_map: np.ndarray, grid: BlockGrid):
+        """Full tensor reassembled from resident slab blocks (the LM
+        model-switch path; np from the mirror in host mode, on-device
+        otherwise)."""
+        if self.mode() == "host":
+            from ..core.blocks import unblock_tensor
+            S, l = self.capacity, self.blocks_per_page
+            bh, bw = self.block_shape
+            blocks = self.host_slab.reshape(S * l, bh, bw)[dev_map]
+            return unblock_tensor(blocks, grid)
+        return _unblock_xla(self.slab, jnp.asarray(dev_map), grid=grid)

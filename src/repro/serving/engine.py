@@ -16,6 +16,11 @@ Components:
   * :class:`WeightServer` — ModelStore + BufferPool + storage sim; tracks
     per-model arrival rates (the lambda_i of Eq. 2 flow straight into the
     pool's eviction policy).  Optional hedged fetches for stragglers.
+    ``backend="device"`` attaches a :class:`~repro.serving.device_pool.
+    DevicePagePool`: buffer-pool loads/evicts become real host->HBM page
+    transfers into a preallocated slab, and the engines compute through
+    the Pallas dedup kernels against the resident slab instead of
+    re-densifying weights in numpy (DESIGN.md §3).
   * :class:`EmbeddingServingEngine` — the paper's word2vec / text-
     classification scenario, now scheduler-driven: batch order is a
     policy (fifo / round_robin / dedup_affinity, see
@@ -125,6 +130,9 @@ class ServeStats:
     pages_fetched: int = 0
     prefetch_pages: int = 0
     timeline_seconds: float = 0.0    # double-buffered makespan (async runs)
+    overlapped: bool = False         # engine ran with overlap=True
+    device_batches: int = 0          # batches computed against the HBM slab
+    dense_fallbacks: int = 0         # device batches that fell back to host
     latencies: List[float] = dataclasses.field(default_factory=list)
 
     @property
@@ -136,8 +144,17 @@ class ServeStats:
     @property
     def makespan_seconds(self) -> float:
         """End-to-end virtual time: the overlapped timeline when the
-        engine ran async, the serial sum otherwise."""
-        return self.timeline_seconds or self.total_seconds
+        engine ran async, the serial sum otherwise.  An overlapped run
+        whose timeline never advanced is a bug in the engine loop — it
+        must never be papered over with the serial sum."""
+        if self.overlapped:
+            if self.batches and self.timeline_seconds <= 0.0:
+                raise RuntimeError(
+                    "overlap=True but the fetch/compute timeline never "
+                    "advanced; refusing to report the serial sum as an "
+                    "overlapped makespan")
+            return self.timeline_seconds
+        return self.total_seconds
 
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies, p)) if self.latencies \
@@ -146,31 +163,87 @@ class ServeStats:
 
 # ------------------------------------------------------------- weight serve --
 class WeightServer:
-    """Page-granular weight access through the dedup-aware buffer pool."""
+    """Page-granular weight access through the dedup-aware buffer pool.
+
+    ``backend="numpy"`` (default) keeps the pool as a policy simulator
+    and materializes weights on the host.  ``backend="device"`` attaches
+    a :class:`DevicePagePool`: every pool load/evict moves a real page
+    into/out of a preallocated HBM slab, and the ``device_*`` accessors
+    compute through the Pallas dedup kernels against that slab.
+    ``kernel_mode`` is forwarded to the device pool ("auto": Pallas on
+    TPU, host-mirror numpy gathers elsewhere; "pallas" forces
+    interpret-mode kernels on CPU — the equivalence-test path; "xla"
+    jitted XLA gathers, for GPUs.  See DevicePagePool's docstring).
+    """
 
     def __init__(self, store: ModelStore, capacity_pages: int,
                  policy: str = "optimized_mru",
-                 storage: Optional[StorageModel] = None):
+                 storage: Optional[StorageModel] = None,
+                 backend: str = "numpy", kernel_mode: str = "auto"):
+        if backend not in ("numpy", "device"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.store = store
-        self.pool: BufferPool = store.make_buffer_pool(capacity_pages, policy)
+        self.backend = backend
+        self.device_pool = None
+        on_load = on_evict = None
+        if backend == "device":
+            from .device_pool import DevicePagePool
+            self.device_pool = DevicePagePool(store, capacity_pages,
+                                              kernel_mode=kernel_mode)
+            on_load = self.device_pool.load
+            on_evict = self.device_pool.evict
+        self.pool: BufferPool = store.make_buffer_pool(
+            capacity_pages, policy, on_load=on_load, on_evict=on_evict)
         self.storage = storage or StorageModel("ssd")
         bh, bw = store.cfg.dedup.block_shape
         self.page_bytes = store.cfg.blocks_per_page * bh * bw * 4
         self.stats = ServeStats()
-        self._page_cache: Dict[int, np.ndarray] = {}
         self._pool_arr: Optional[np.ndarray] = None
+        self._pool_gen = store.pack_generation   # make_buffer_pool packed
+
+    def _sync_store(self) -> None:
+        """Detect a repack (model registered/updated/removed since the
+        last access) and drop every stale consumer: the cached host pool
+        array, the pool's resident set and the device slab all refer to
+        page ids from the previous packing."""
+        self.store.packing                       # force repack if stale
+        if self._pool_gen == self.store.pack_generation:
+            return
+        self.pool.invalidate_resident()          # fires on_evict -> slab
+        if self.device_pool is not None:
+            self.device_pool.flush()
+        sharers, locality = self.store.page_metadata()
+        self.pool.page_sharers = sharers
+        self.pool.page_locality = locality
+        self.pool.meta.clear()                   # per-page meta is stale too
+        self._pool_arr = None
+        self._pool_gen = self.store.pack_generation
 
     def _pages(self) -> np.ndarray:
+        self._sync_store()
         if self._pool_arr is None:
             self._pool_arr = self.store.page_pool()
         return self._pool_arr
 
+    def _access(self, model: str, page_ids) -> List[bool]:
+        """Device backend touches a batch's pages as a pinned group so
+        same-batch misses cannot tear the slab-resident working set; a
+        group too large for the pool falls back to unpinned access (the
+        compute path then falls back to the host)."""
+        if self.backend == "device":
+            try:
+                return self.pool.access_group(model, page_ids)
+            except ValueError:
+                pass
+        return [self.pool.access(model, pid) for pid in page_ids]
+
     def access_pages(self, model: str, page_ids) -> float:
         """Touch pages through the pool one at a time (serial baseline:
         every miss pays its own seek, inline); returns virtual seconds."""
+        self._sync_store()
+        page_ids = list(page_ids)
         t = 0.0
-        for pid in page_ids:
-            hit = self.pool.access(model, pid)
+        for hit in self._access(model, page_ids):
             if not hit:
                 t += self.storage.fetch_seconds(self.page_bytes)
                 self.stats.pages_fetched += 1
@@ -181,10 +254,9 @@ class WeightServer:
         """Touch pages through the pool, issuing all misses as ONE group
         fetch (single seek, pipelined transfer) — the async scheduler's
         per-batch demand fetch.  Returns the group's virtual seconds."""
-        misses = 0
-        for pid in page_ids:
-            if not self.pool.access(model, pid):
-                misses += 1
+        self._sync_store()
+        page_ids = list(page_ids)
+        misses = sum(not hit for hit in self._access(model, page_ids))
         t = self.storage.fetch_group_seconds(self.page_bytes, misses)
         self.stats.pages_fetched += misses
         self.stats.fetch_seconds += t
@@ -212,8 +284,80 @@ class WeightServer:
         slots = vt.block_map[logical]
         return sorted(set(int(s) // l for s in slots))
 
+    # ------------------------------------------------- device (HBM) path --
+    def _device_map(self, model: str, tensor: str):
+        vt = self.store.virtual_tensor(model, tensor)
+        dev_map = self.device_pool.remap(vt, key=(model, tensor))
+        return vt, dev_map
+
+    def device_gather_rows(self, model: str, tensor: str, rows,
+                           pad: bool = False, pages=None):
+        """[n, width] rows of the tensor gathered straight from the HBM
+        slab via the dedup-embedding kernel path; None when the required
+        pages are not resident (caller falls back to the host).
+
+        ``pages``: the page set covering ``rows`` (what the caller just
+        faulted).  When given, only those pages must be resident — the
+        working set may exceed the slab as long as each batch fits; when
+        omitted, the tensor's whole page set must be resident."""
+        self._sync_store()
+        vt = self.store.virtual_tensor(model, tensor)
+        if pages is not None:
+            if not self.device_pool.pages_resident(pages):
+                return None
+            dev_map = self.device_pool.remap(vt, key=(model, tensor),
+                                             strict=False)
+        else:
+            dev_map = self.device_pool.remap(vt, key=(model, tensor))
+            if dev_map is None:
+                return None
+        return self.device_pool.gather_rows(dev_map, vt.grid, rows, pad=pad)
+
+    def device_matmul(self, model: str, tensor: str, x):
+        """``x @ W_virtual`` through dedup_matmul against the slab; None
+        when the tensor's pages are not all resident."""
+        self._sync_store()
+        vt, dev_map = self._device_map(model, tensor)
+        if dev_map is None:
+            return None
+        return self.device_pool.virtual_matmul(dev_map, vt.grid, x)
+
+    def device_tensor(self, model: str, tensor: str):
+        """Whole tensor reassembled on device from resident slab blocks
+        (LM model-switch path: no host densification); None when not all
+        pages are resident."""
+        self._sync_store()
+        vt, dev_map = self._device_map(model, tensor)
+        if dev_map is None:
+            return None
+        return self.device_pool.unblock(dev_map, vt.grid)
+
 
 # ------------------------------------------------------- embedding serving --
+def jnp_asarray(x):
+    import jax.numpy as jnp
+    return jnp.asarray(x)
+
+
+_TOK_LOGITS = None
+
+
+def _tok_logits(emb_tokens, head):
+    """Jitted mean-pool + head for the device path: one fused XLA program
+    instead of separate host passes.  Built lazily so importing the
+    engine never pulls in jax."""
+    global _TOK_LOGITS
+    if _TOK_LOGITS is None:
+        import jax
+
+        @jax.jit
+        def f(emb_tokens, head):
+            return emb_tokens.mean(axis=1) @ head
+
+        _TOK_LOGITS = f
+    return _TOK_LOGITS(emb_tokens, head)
+
+
 class _PrefetchingEngine:
     """Shared scheduler-engine plumbing: the per-batch prefetch step.
     Subclasses provide ``prefetcher``, ``overlap``, ``timeline``,
@@ -262,7 +406,9 @@ class EmbeddingServingEngine(_PrefetchingEngine):
         self.prefetcher = prefetcher
         self.overlap = overlap
         self.timeline = FetchComputeTimeline()
-        self.stats = ServeStats()
+        self.stats = ServeStats(overlapped=overlap)
+        self.last_logits: Optional[np.ndarray] = None  # test/debug hook
+        self._dev_heads: Dict[str, object] = {}        # model -> jnp head
 
     def submit(self, model: str, docs: np.ndarray) -> None:
         """Queue a request batch; its page working set is estimated here
@@ -271,28 +417,65 @@ class EmbeddingServingEngine(_PrefetchingEngine):
         rows = np.unique(docs)
         pages = self.server.embedding_rows_pages(model, self.embed_tensor,
                                                  rows)
-        self.scheduler.submit(model, docs, pages=pages)
+        self.scheduler.submit(model, docs, pages=pages,
+                              pages_gen=self.server.store.pack_generation)
+
+    def _head_dev(self, model: str):
+        head = self._dev_heads.get(model)
+        if head is None:
+            head = self._dev_heads[model] = jnp_asarray(self.heads[model])
+        return head
 
     def _infer(self, batch: ScheduledBatch) -> np.ndarray:
         model, docs = batch.model, batch.payload
-        rows = np.unique(docs)
-        pages = sorted(batch.pages) if batch.pages is not None else \
-            self.server.embedding_rows_pages(model, self.embed_tensor, rows)
+        # Page ids cached at submit() die with the packing they were
+        # minted under: recompute after any repack (model update between
+        # submit and run) instead of faulting ids that now name other
+        # bytes — or nothing.  The generation travels on the batch, so
+        # later submits can't alias an older batch's ids as current.
+        if batch.pages is not None and batch.pages_gen is not None \
+                and self.server.store.packing_current(batch.pages_gen):
+            pages = sorted(batch.pages)
+        else:
+            pages = self.server.embedding_rows_pages(
+                model, self.embed_tensor, np.unique(docs))
         if self.overlap:
             fetch_t = self.server.access_pages_grouped(model, pages)
         else:
             fetch_t = self.server.access_pages(model, pages)
         t0 = time.perf_counter()
-        emb_rows = self.server.store.materialize_rows(
-            model, self.embed_tensor, rows)
-        idx = np.searchsorted(rows, docs)
-        feats = emb_rows[idx].mean(axis=1)
-        logits = feats @ self.heads[model]
+        logits = None
+        if self.server.backend == "device":
+            # Hot path: the batch's token rows come straight off the
+            # resident slab through the dedup kernel path — no unique/
+            # scatter bookkeeping, no host materialization of any weight.
+            flat = docs.reshape(-1)
+            emb = self.server.device_gather_rows(model, self.embed_tensor,
+                                                 flat, pad=True, pages=pages)
+            if emb is None:
+                self.stats.dense_fallbacks += 1
+            else:
+                emb = emb[:flat.size].reshape(docs.shape + (emb.shape[-1],))
+                if isinstance(emb, np.ndarray):
+                    logits = emb.mean(axis=1) @ self.heads[model]
+                else:
+                    logits = np.asarray(_tok_logits(emb,
+                                                    self._head_dev(model)))
+                self.stats.device_batches += 1
+        if logits is None:
+            rows = np.unique(docs)
+            emb_rows = self.server.store.materialize_rows(
+                model, self.embed_tensor, rows)
+            idx = np.searchsorted(rows, docs)
+            feats = emb_rows[idx].mean(axis=1)
+            logits = feats @ self.heads[model]
         compute_t = time.perf_counter() - t0
+        self.last_logits = logits
 
         if self.overlap:
             issue, done = self.timeline.advance(fetch_t, compute_t)
             self.stats.latencies.append(done - issue)
+            self.stats.timeline_seconds = self.timeline.makespan
         else:
             # serial: fetch then compute on one channel; the timeline is
             # left untouched so makespan_seconds falls back to the sum
@@ -341,29 +524,57 @@ class LMServingEngine(_PrefetchingEngine):
         self.prefetcher = prefetcher
         self.overlap = overlap
         self.timeline = FetchComputeTimeline()
-        self.stats = ServeStats()
+        self.stats = ServeStats(overlapped=overlap)
         self._resident_model: Optional[str] = None
         self._params = None
+        self._params_gen = -1          # packing generation of _params
 
     def _load_model(self, model: str, grouped: bool = False) -> float:
         """Fault the model's weights through the pool; returns the
-        virtual fetch seconds (0 when already resident)."""
-        if self._resident_model == model:
+        virtual fetch seconds (0 when already resident).
+
+        On the device backend the model switch never densifies on the
+        host: the page working set is faulted into the HBM slab and each
+        tensor is reassembled *on device* from resident slab blocks
+        (``WeightServer.device_tensor``).  Falls back to host
+        materialization only if the slab cannot hold the working set."""
+        if self._resident_model == model and \
+                self.server.store.packing_current(self._params_gen):
             return 0.0
-        if grouped:
+        names = list(self.server.store.dedup.models[model].tensors)
+        if self.server.backend == "device":
+            pages = self.server.store.model_pages(model)
+            if grouped:
+                fetch_t = self.server.access_pages_grouped(model, pages)
+            else:
+                fetch_t = self.server.access_pages(model, pages)
+            tensors = {}
+            for name in names:
+                dt = self.server.device_tensor(model, name)
+                if dt is None:
+                    tensors = None
+                    break
+                tensors[name] = dt
+            if tensors is None:
+                self.stats.dense_fallbacks += 1
+                tensors = {name: self.server.store.materialize(model, name)
+                           for name in names}
+            else:
+                self.stats.device_batches += 1
+        elif grouped:
             fetch_t = self.server.access_pages_grouped(
                 model, self.server.store.model_pages(model))
-            tensors = {
-                name: self.server.store.materialize(model, name)
-                for name in self.server.store.dedup.models[model].tensors}
+            tensors = {name: self.server.store.materialize(model, name)
+                       for name in names}
         else:
             t0 = self.server.stats.fetch_seconds
             tensors = {}
-            for name in self.server.store.dedup.models[model].tensors:
+            for name in names:
                 tensors[name] = self.server.fetch_tensor(model, name)
             fetch_t = self.server.stats.fetch_seconds - t0
         self._params = self.templates[model], tensors
         self._resident_model = model
+        self._params_gen = self.server.store.pack_generation
         return fetch_t
 
     def _compute(self, model: str, prompts: np.ndarray, steps: int
@@ -386,8 +597,13 @@ class LMServingEngine(_PrefetchingEngine):
 
     def generate(self, model: str, prompts: np.ndarray,
                  steps: int = 8) -> Tuple[np.ndarray, float]:
-        self._load_model(model)
+        fetch_t = self._load_model(model)
         out, dt = self._compute(model, prompts, steps)
+        if self.overlap:
+            # keep the timeline live on the direct call path too, so
+            # makespan_seconds stays well-defined for overlap engines
+            self.timeline.advance(fetch_t, dt)
+            self.stats.timeline_seconds = self.timeline.makespan
         self.stats.compute_seconds += dt
         self.stats.latencies.append(dt)
         self.stats.requests += len(prompts)
@@ -397,7 +613,8 @@ class LMServingEngine(_PrefetchingEngine):
     # -- scheduler-driven serving -------------------------------------------
     def submit(self, model: str, prompts: np.ndarray, steps: int = 8) -> None:
         self.scheduler.submit(model, (prompts, steps),
-                              pages=self.server.store.model_pages(model))
+                              pages=self.server.store.model_pages(model),
+                              pages_gen=self.server.store.pack_generation)
 
     def run(self, max_batches: Optional[int] = None) -> ServeStats:
         n = 0
@@ -413,6 +630,7 @@ class LMServingEngine(_PrefetchingEngine):
             if self.overlap:
                 issue, done = self.timeline.advance(fetch_t, compute_t)
                 self.stats.latencies.append(done - issue)
+                self.stats.timeline_seconds = self.timeline.makespan
             else:
                 self.stats.latencies.append(fetch_t + compute_t)
             self.stats.fetch_seconds += fetch_t

@@ -42,17 +42,32 @@ class Prefetcher:
         self.hot_models = hot_models
         self.max_pages_per_step = max_pages_per_step
         self.stats = PrefetchStats()
+        self._gen = None
+        self._refresh()
+
+    def _refresh(self) -> None:
+        """(Re)derive the per-model page working sets from the store's
+        *current* packing.  Keyed on ``pack_generation`` so a model
+        update/repack mid-serve can never leave the prefetcher pulling
+        page ids from the previous packing (which now name other bytes —
+        or nothing)."""
+        self.server.store.packing                # force repack if stale
+        gen = self.server.store.pack_generation
+        if gen == self._gen:
+            return
         # model -> its page working set, from the store's packing
         self._model_pages: Dict[str, List[int]] = {
-            m: server.store.model_pages(m)
-            for m in server.store.dedup.models}
-        sharers = server.store.page_sharers()
+            m: self.server.store.model_pages(m)
+            for m in self.server.store.dedup.models}
+        sharers = self.server.store.page_sharers()
         self._n_sharers = {p: len(ms) for p, ms in sharers.items()}
+        self._gen = gen
 
     # -- planning ------------------------------------------------------------
     def plan(self) -> List[Tuple[str, int]]:
         """(model, page) prefetch candidates, hottest model first; within
         a model, most-shared pages first (they serve several queues)."""
+        self._refresh()
         rates = self.server.pool.model_rates()
         if not rates:
             return []

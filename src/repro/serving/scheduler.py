@@ -37,6 +37,7 @@ class ScheduledBatch:
     payload: object                    # engine-specific (docs, prompts, ...)
     seq: int                           # global arrival order
     pages: Optional[frozenset] = None  # estimated page working set
+    pages_gen: Optional[int] = None    # packing generation pages came from
 
 
 class BatchScheduler:
@@ -48,10 +49,14 @@ class BatchScheduler:
         self._seq = 0
 
     # -- submission ----------------------------------------------------------
-    def submit(self, model: str, payload, pages: Optional[Iterable] = None
-               ) -> ScheduledBatch:
+    def submit(self, model: str, payload, pages: Optional[Iterable] = None,
+               pages_gen: Optional[int] = None) -> ScheduledBatch:
+        """``pages_gen`` records which ``ModelStore.pack_generation`` the
+        page ids were minted under; engines use it to spot batches whose
+        cached working set a later repack has invalidated."""
         b = ScheduledBatch(model, payload, self._seq,
-                           frozenset(pages) if pages is not None else None)
+                           frozenset(pages) if pages is not None else None,
+                           pages_gen)
         self._seq += 1
         self._enqueue(b)
         return b

@@ -1,0 +1,299 @@
+"""Device-resident page pool: slab residency invariants, device-vs-numpy
+logit equivalence (Pallas interpret + host-mirror modes), slot-remap
+contract, and stale-cache invalidation on model updates."""
+import numpy as np
+import pytest
+
+from repro.core import DedupConfig, LSHConfig, ModelStore, StoreConfig
+from repro.core.bufferpool import BufferPool, PoolConfig
+from repro.data.pipeline import SyntheticTextTask
+from repro.launch.serve import build_store
+from repro.serving.engine import (EmbeddingServingEngine, ServeStats,
+                                  StorageModel, WeightServer)
+
+
+def _scenario(vocab=512, d=32, num_models=3, block=(32, 32), l=4, seed=0):
+    task = SyntheticTextTask(vocab=vocab, d=d, seed=seed)
+    store, heads = build_store(task, num_models=num_models,
+                               block_shape=block, blocks_per_page=l)
+    return task, store, heads
+
+
+def _run_batches(engine, task, num_models, batches=6, batch=16, seed=0):
+    """Drive the engine one batch at a time, returning per-batch logits."""
+    out = []
+    for b in range(batches):
+        v = b % num_models
+        docs, _ = task.sample(batch, variant=v, seed=seed + 100 + b)
+        engine.submit(f"word2vec-v{v}", docs)
+        engine.run(max_batches=1)
+        out.append(engine.last_logits.copy())
+    return out
+
+
+# ------------------------------------------------------------ equivalence --
+@pytest.mark.parametrize("kernel_mode", ["host", "pallas"])
+def test_device_backend_matches_numpy_logits(kernel_mode):
+    """Acceptance: backend="device" logits == numpy logits (atol 1e-5),
+    pallas mode exercising the interpret-mode dedup kernels on CPU."""
+    task, store, heads = _scenario(vocab=256 if kernel_mode == "pallas"
+                                   else 512)
+    n = 3
+
+    def serve(backend):
+        server = WeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"), backend=backend,
+                              kernel_mode=kernel_mode)
+        engine = EmbeddingServingEngine(server, heads)
+        logits = _run_batches(engine, task, n,
+                              batches=4 if kernel_mode == "pallas" else 6,
+                              batch=8 if kernel_mode == "pallas" else 16)
+        return logits, engine.stats
+
+    ref, _ = serve("numpy")
+    dev, stats = serve("device")
+    assert stats.device_batches == len(dev)
+    assert stats.dense_fallbacks == 0
+    for a, b in zip(ref, dev):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_device_hot_path_never_materializes(monkeypatch):
+    """Acceptance: zero calls to dedup.materialize / materialize_rows on
+    the steady-state device hot path."""
+    task, store, heads = _scenario()
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"), backend="device")
+    engine = EmbeddingServingEngine(server, heads)
+    _run_batches(engine, task, 3, batches=3)     # warm: slab + jit caches
+
+    calls = {"n": 0}
+
+    def bump(*a, **k):
+        calls["n"] += 1
+        raise AssertionError("host materialization on device hot path")
+
+    monkeypatch.setattr(store.dedup, "materialize", bump)
+    monkeypatch.setattr(store, "materialize_rows", bump)
+    _run_batches(engine, task, 3, batches=6, seed=50)
+    assert calls["n"] == 0
+    assert engine.stats.dense_fallbacks == 0
+
+
+def test_partial_residency_still_serves_from_device():
+    """The slab only needs the *batch's* pages, not the whole tensor:
+    with capacity far below the total working set every batch still
+    computes off the slab (fig-8 regime)."""
+    task, store, heads = _scenario(vocab=1024, num_models=4)
+    server = WeightServer(store, 2, storage=StorageModel("dram"),
+                          backend="device")
+    # find a capacity that fits single batches but not the working set
+    docs, _ = task.sample(16, variant=0, seed=7)
+    batch_pages = len(server.embedding_rows_pages(
+        "word2vec-v0", "embedding", np.unique(docs)))
+    cap = min(store.num_pages() - 1, batch_pages + 2)
+    server = WeightServer(store, cap, storage=StorageModel("dram"),
+                          backend="device")
+    engine = EmbeddingServingEngine(server, heads)
+    _run_batches(engine, task, 4, batches=8)
+    assert engine.stats.device_batches > 0
+    assert server.pool.misses > 0                # pages churned
+
+
+# ------------------------------------------------------- slab invariants --
+def test_slab_residency_matches_pool_under_churn():
+    """Invariant: the pool's resident set == the slab's occupied slots
+    (and slot contents == the physical pages) under access/prefetch/evict
+    churn."""
+    _, store, _ = _scenario(num_models=4)
+    cap = max(2, store.num_pages() // 3)
+    server = WeightServer(store, cap, storage=StorageModel("dram"),
+                          backend="device")
+    pool, dev = server.pool, server.device_pool
+    models = list(store.dedup.models)
+    rng = np.random.default_rng(0)
+    npages = store.num_pages()
+    for step in range(300):
+        m = models[int(rng.integers(len(models)))]
+        p = int(rng.integers(npages))
+        if rng.random() < 0.25:
+            pool.prefetch(m, p)
+        else:
+            pool.access(m, p)
+        assert pool.resident_pages() == dev.resident_pages()
+        occ = dev.occupied_slots()
+        assert len(occ) == len(dev.slot_of)              # slots unique
+        assert len(occ) + len(dev._free) == dev.capacity
+        assert len(pool.resident) <= cap
+    for pid, slot in dev.slot_of.items():
+        np.testing.assert_array_equal(dev.slot_page(slot),
+                                      store.page_array(pid))
+
+
+def test_access_group_pins_members():
+    """A later miss in a pinned group must never evict an earlier member;
+    an impossible group raises instead of thrashing."""
+    pool = BufferPool(PoolConfig(3, "mru"))
+    hits = pool.access_group("m", [0, 1, 2])
+    assert hits == [False] * 3
+    # all three must survive their own group's misses
+    assert pool.resident_pages() == {0, 1, 2}
+    pool.access_group("m", [3, 4, 1])
+    assert {3, 4, 1} <= pool.resident_pages()
+    with pytest.raises(ValueError):
+        pool.access_group("m", [0, 1, 2, 3])
+
+
+def test_remap_contract_covers_tensor_pages():
+    """Slot-remap contract: every flat slot of a virtual tensor lies in
+    one of its own cover pages, so faulting page_ids guarantees a full
+    remap."""
+    _, store, _ = _scenario(num_models=3)
+    for m in store.dedup.models:
+        vt = store.virtual_tensor(m, "embedding")
+        l = store.cfg.blocks_per_page
+        assert set(int(s) // l for s in vt.block_map) <= set(vt.page_ids)
+        server = WeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"), backend="device")
+        server.access_pages(m, vt.page_ids)
+        assert server.device_pool.remap(vt) is not None
+
+
+# ------------------------------------------------- staleness / invalidation --
+def test_model_update_invalidates_pool_and_slab():
+    """Satellite: a model update must repack and flush every consumer —
+    WeightServer's cached pool array, the buffer pool's resident set and
+    the device slab — so both backends serve the *new* weights."""
+    task, store, heads = _scenario()
+    servers = {b: WeightServer(store, store.num_pages(),
+                               storage=StorageModel("dram"), backend=b)
+               for b in ("numpy", "device")}
+    engines = {b: EmbeddingServingEngine(s, heads)
+               for b, s in servers.items()}
+    for b in engines:
+        _run_batches(engines[b], task, 3, batches=3)
+    gen0 = store.pack_generation
+    arr0 = servers["numpy"]._pages()
+
+    new_emb = task.variant_embedding(0) + 0.25
+    store.update("word2vec-v0", {"embedding": new_emb})
+
+    logits = {}
+    for b in engines:
+        docs, _ = task.sample(16, variant=0, seed=999)
+        engines[b].submit("word2vec-v0", docs)
+        engines[b].run(max_batches=1)
+        logits[b] = engines[b].last_logits
+    assert store.pack_generation > gen0
+    assert servers["numpy"]._pool_arr is not arr0          # refreshed
+    np.testing.assert_allclose(logits["numpy"], logits["device"], atol=1e-5)
+    # and the served weights really are the updated ones
+    got = store.materialize("word2vec-v0", "embedding")
+    np.testing.assert_allclose(got, new_emb, atol=1e-4)
+    # slab was flushed and refilled from the *new* packing
+    dev = servers["device"].device_pool
+    for pid, slot in dev.slot_of.items():
+        np.testing.assert_array_equal(dev.slot_page(slot),
+                                      store.page_array(pid))
+
+
+def test_update_between_submit_and_run_recomputes_pages():
+    """Page ids cached in a queued batch die with their packing: a model
+    update between submit() and run() must not fault stale ids (wrong
+    bytes on the device slab) — both backends still agree afterwards."""
+    task, store, heads = _scenario()
+    logits = {}
+    for b in ("numpy", "device"):
+        server = WeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"), backend=b)
+        engine = EmbeddingServingEngine(server, heads)
+        _run_batches(engine, task, 3, batches=3)          # warm
+        docs, _ = task.sample(16, variant=0, seed=321)
+        engine.submit("word2vec-v0", docs)                # old packing
+        store.update("word2vec-v0",
+                     {"embedding": task.variant_embedding(0) + 0.125})
+        engine.run(max_batches=1)                         # new packing
+        logits[b] = engine.last_logits
+    np.testing.assert_allclose(logits["numpy"], logits["device"],
+                               atol=1e-5)
+
+
+def test_post_repack_submit_cannot_alias_older_batch_pages():
+    """submit(A) -> repack -> submit(B) -> run: B's fresh generation must
+    not launder A's stale page ids past the guard (the generation rides
+    on each batch).  Device logits must equal ground truth from the
+    updated store for both batches."""
+    task, store, heads = _scenario()
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"), backend="device")
+    engine = EmbeddingServingEngine(server, heads)
+    _run_batches(engine, task, 3, batches=3)              # warm
+    docs_a, _ = task.sample(16, variant=0, seed=77)
+    docs_b, _ = task.sample(16, variant=1, seed=78)
+    engine.submit("word2vec-v0", docs_a)                  # old packing
+    store.update("word2vec-v0",
+                 {"embedding": task.variant_embedding(0) + 0.125})
+    engine.submit("word2vec-v1", docs_b)                  # new packing
+    out = {}
+    for _ in range(2):
+        batch = engine.scheduler.next_batch(server.pool.resident_pages())
+        engine._infer(batch)
+        out[batch.model] = engine.last_logits
+    for model, docs in (("word2vec-v0", docs_a), ("word2vec-v1", docs_b)):
+        emb = store.materialize(model, "embedding")
+        expect = emb[docs].mean(axis=1) @ heads[model]
+        np.testing.assert_allclose(out[model], expect, atol=1e-5)
+
+
+def test_materialize_rows_matches_full_materialize():
+    """Vectorized materialize_rows (satellite) == full materialization,
+    including ragged column edges."""
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(16, 16),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=8.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=4))
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((70, 40)).astype(np.float32)   # ragged both dims
+    store.register("m0", {"w": w})
+    rows = np.array([0, 1, 15, 16, 63, 69])
+    got = store.materialize_rows("m0", "w", rows)
+    np.testing.assert_allclose(got, store.materialize("m0", "w")[rows])
+
+
+# ------------------------------------------------------------- serve stats --
+def test_makespan_refuses_zero_overlapped_timeline():
+    s = ServeStats(overlapped=True, batches=3, fetch_seconds=1.0)
+    with pytest.raises(RuntimeError):
+        s.makespan_seconds
+    s.timeline_seconds = 2.0
+    assert s.makespan_seconds == 2.0
+    serial = ServeStats(batches=3, fetch_seconds=1.0, compute_seconds=0.5)
+    assert serial.makespan_seconds == pytest.approx(1.5)
+
+
+def test_device_matmul_and_tensor_match_dense():
+    """dedup_matmul / on-device unblock against the slab == dense math."""
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(16, 16),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=8.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=4))
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((64, 40)).astype(np.float32)
+    store.register("m0", {"w": base})
+    store.register("m1", {"w": base + 1e-5})
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+    for km in ("host", "pallas"):
+        server = WeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"),
+                              backend="device", kernel_mode=km)
+        server.access_pages("m1", store.model_pages("m1"))
+        dense = store.materialize("m1", "w")
+        y = server.device_matmul("m1", "w", x)
+        np.testing.assert_allclose(np.asarray(y), x @ dense,
+                                   rtol=1e-4, atol=1e-4)
+        t = server.device_tensor("m1", "w")
+        np.testing.assert_allclose(np.asarray(t), dense, atol=1e-6)
