@@ -11,8 +11,9 @@ test-fast:
 bench:
 	PYTHONPATH=src python -m benchmarks.run
 
-# Fast numpy-vs-device serving comparison -> BENCH_serving.json
-# (run by scripts/verify.sh so the perf trajectory is tracked per PR)
+# Fast numpy-vs-device serving comparison -> BENCH_serving.json, plus the
+# storage-backend axis (local vs sqlite vs objsim) -> BENCH_storage.json
+# (run by scripts/verify.sh so the perf trajectories are tracked per PR)
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_serving_backends --smoke
 

@@ -314,6 +314,42 @@ class Deduplicator:
             res.accuracy_after = float(evaluator(self.materialize_all(model)))
         return res
 
+    # ------------------------------------------- reopened-store hydration --
+    def rebuild_index(self) -> None:
+        """Reconstruct the LSH index + group bookkeeping from the current
+        distinct blocks and block maps (a store reopened from a
+        :mod:`repro.storage` backend persists blocks and maps, not the
+        index).  Signatures are recomputed vectorized under the *current*
+        LSH config, so subsequent ``add_model``/``update_model`` calls
+        dedup incrementally against the reloaded blocks exactly as if
+        the store had never left memory."""
+        bh, bw = self.cfg.block_shape
+        self.index = LSHIndex(bh * bw, self.cfg.lsh)
+        self._gid_to_did.clear()
+        self._did_to_gid.clear()
+        self.owners = [dict() for _ in self.distinct]
+        live = [did for did, b in enumerate(self.distinct) if b is not None]
+        if not live:
+            return
+        members_of: Dict[int, List[Tuple[str, str, int]]] = \
+            {did: [] for did in live}
+        for m, res in self.models.items():
+            for name, e in res.tensors.items():
+                for bid, did in enumerate(e.block_map):
+                    did = int(did)
+                    members_of[did].append((m, name, bid))
+                    ref = (m, name)
+                    self.owners[did][ref] = self.owners[did].get(ref, 0) + 1
+        sigs = self.index.lsh.signatures(
+            np.stack([self.distinct[did] for did in live]))
+        for sig, did in zip(sigs, live):
+            members = members_of[did] or [("__orphan__", "__orphan__", did)]
+            gid = self.index.insert_group(sig, members[0])
+            for ref in members[1:]:
+                self.index.add_member(gid, ref)
+            self._gid_to_did[gid] = did
+            self._did_to_gid[did] = gid
+
     # ---------------------------------------------------- pagepack interface --
     def tensor_sets(self) -> Dict[TensorRef, frozenset]:
         """(model, tensor) -> frozenset of distinct ids (input to Sec. 5)."""

@@ -1,26 +1,31 @@
 """ModelStore: the end-to-end deduplicated model repository (paper Fig. 3).
 
 register -> dedup (Sec. 4) -> pack pages (Sec. 5) -> serve via buffer pool
-(Sec. 6).  The on-disk format doubles as the system's *checkpoint* format:
-content-addressed pages + per-model block maps + a JSON manifest, so a new
-model variant ships only its private pages (DESIGN.md §2, changed
-assumption 4).
+(Sec. 6).  Persistence goes through a pluggable
+:class:`~repro.storage.PageBackend` (local dir / SQLite / object-store
+sim): ``save(backend)`` writes content-addressed pages in the store's
+native page dtype plus a relational manifest, and ``ModelStore.open``
+returns a *live* store whose pages stay paged in the backend and are
+faulted in grouped on demand — the serving tiers (buffer pool, HBM slab)
+source pages straight through it (DESIGN.md §2/§4).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-import json
-import os
-import tempfile
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Set, Tuple
 
 import numpy as np
 
-from .blocks import BlockGrid, unblock_tensor
+from .blocks import BlockGrid, make_grid
 from .bufferpool import BufferPool, PoolConfig
-from .dedup import DedupConfig, DedupResult, Deduplicator, Evaluator
+from .dedup import (DedupConfig, DedupResult, Deduplicator, Evaluator,
+                    TensorEntry)
+from .lsh import LSHConfig
 from .pagepack import PackResult, check_coverage, pack
+# storage is a lower layer (numpy-only, never imports core):
+# the manifest version and dtype resolution live there once
+from ..storage.backend import MANIFEST_VERSION, resolve_dtype
 
 TensorRef = Tuple[str, str]
 
@@ -30,6 +35,10 @@ class StoreConfig:
     dedup: DedupConfig = dataclasses.field(default_factory=DedupConfig)
     blocks_per_page: int = 16           # page size limit "l"
     pack_strategy: str = "two_stage"
+    # dtype pages are *persisted* in: "auto" = the common dtype of the
+    # registered tensors when uniform (fp16 models round-trip bit-exact
+    # through fp16 pages instead of a float32 detour), float32 otherwise.
+    page_dtype: str = "auto"
 
 
 @dataclasses.dataclass
@@ -55,6 +64,14 @@ class ModelStore:
         self._stack: Optional[np.ndarray] = None          # distinct blocks
         self._vt_cache: Dict[TensorRef, VirtualTensor] = {}
         self._page_pool_cache: Dict[str, Tuple[int, np.ndarray]] = {}
+        # Backend attachment (set by ModelStore.open / save): pages not
+        # yet faulted from the backend, their content hashes, and whether
+        # the LSH index still needs rebuilding before the next mutation.
+        self._backend = None                     # Optional[PageBackend]
+        self._page_hash: List[str] = []          # pid -> content hash
+        self._unfetched: Set[int] = set()        # pids still in the backend
+        self._persisted_page_dtype = np.dtype(np.float32)
+        self._index_stale = False
 
     def _mutate(self) -> None:
         """Invalidate everything derived from dedup state / packing."""
@@ -63,36 +80,60 @@ class ModelStore:
         self._vt_cache.clear()
         self._page_pool_cache.clear()
 
+    def _hydrate(self) -> None:
+        """Make an opened store fully mutable: fault every remaining page
+        out of the backend and rebuild the LSH index so incremental dedup
+        (register/update/remove) sees the reloaded blocks.  Serving paths
+        never need this — they stay lazily paged."""
+        if self._backend is None:
+            return
+        self.fault_all()
+        if self._index_stale:
+            self.dedup.rebuild_index()
+            self._index_stale = False
+
     # ------------------------------------------------------------ pipeline --
     def register(self, model: str, tensors: Mapping[str, np.ndarray],
                  evaluator: Optional[Evaluator] = None,
                  layers=None) -> DedupResult:
+        self._hydrate()
         res = self.dedup.add_model(model, dict(tensors), evaluator, layers)
         self._mutate()                           # packing is now stale
         return res
 
     def remove(self, model: str) -> None:
+        self._hydrate()
         self.dedup.remove_model(model)
         self._mutate()
 
     def update(self, model: str, tensors: Mapping[str, np.ndarray],
                evaluator: Optional[Evaluator] = None,
                approach: int = 2) -> DedupResult:
+        self._hydrate()
         res = self.dedup.update_model(model, dict(tensors), evaluator, approach)
         self._mutate()
         return res
 
     def repack(self) -> PackResult:
         """(Re)run Sec.-5 page packing over the current distinct blocks."""
+        self._hydrate()      # page ids are about to be renamed: the lazy
+        self._page_hash = [] # backend mapping below dies with them
         tensor_sets = self.dedup.tensor_sets()
         seqs = {(m, t): self.dedup.models[m].tensors[t].block_map
                 for m in self.dedup.models
                 for t in self.dedup.models[m].tensors}
-        self._pack = pack(tensor_sets, self.cfg.blocks_per_page,
-                          self.cfg.pack_strategy, tensor_seqs=seqs)
-        check_coverage(self._pack, tensor_sets, self.cfg.blocks_per_page)
+        pk = pack(tensor_sets, self.cfg.blocks_per_page,
+                  self.cfg.pack_strategy, tensor_seqs=seqs)
+        check_coverage(pk, tensor_sets, self.cfg.blocks_per_page)
+        self._install_pack(pk)
+        return self._pack
+
+    def _install_pack(self, pk: PackResult) -> None:
+        """Adopt a packing (freshly computed or loaded from a manifest)
+        and invalidate every packing-derived cache."""
+        self._pack = pk
         self._slot_of_block = {}
-        for pid, page in enumerate(self._pack.pages):
+        for pid, page in enumerate(pk.pages):
             for slot, did in enumerate(page):
                 # A block may appear in several pages (Alg. 3 copies); keep
                 # the first placement as canonical.
@@ -100,7 +141,6 @@ class ModelStore:
         self._vt_cache.clear()
         self._page_pool_cache.clear()
         self.pack_generation += 1
-        return self._pack
 
     @property
     def packing(self) -> PackResult:
@@ -114,6 +154,61 @@ class ModelStore:
         holding derived page sets (queued batches, model-switch caches)
         gate on this before trusting them."""
         return self._pack is not None and self.pack_generation == generation
+
+    # ------------------------------------------------------ backend paging --
+    @property
+    def backend(self):
+        """The attached :class:`~repro.storage.PageBackend` (None for a
+        purely in-memory store)."""
+        return self._backend
+
+    def fault_pages(self, page_ids) -> int:
+        """Fault not-yet-resident pages out of the attached backend with
+        ONE grouped ``get_pages`` call (the serving miss path: a batch's
+        misses share a single backend round trip).  No-op for in-memory
+        stores and already-faulted pages.  Returns pages fetched."""
+        if self._backend is None or not self._unfetched:
+            return 0
+        want = sorted(p for p in set(int(p) for p in page_ids)
+                      if p in self._unfetched)
+        if not want:
+            return 0
+        got = self._backend.get_pages([self._page_hash[p] for p in want])
+        for pid in want:
+            page = np.asarray(got[self._page_hash[pid]])
+            if page.dtype.kind == "V":
+                # a backend that can't self-describe extension dtypes
+                # (.npy files of bfloat16 pages come back as void bytes)
+                # defers to the manifest's page_dtype for interpretation
+                page = page.view(self._persisted_page_dtype)
+            blocks = page.astype(np.float32)     # working copies are fp32
+            for slot, did in enumerate(self._pack.pages[pid]):
+                if self.dedup.distinct[did] is None:
+                    self.dedup.distinct[did] = np.array(blocks[slot],
+                                                        copy=True)
+            self._unfetched.discard(pid)
+        self._stack = None                       # stack is now stale
+        return len(want)
+
+    def fault_all(self) -> int:
+        """Fault every remaining page (host-densification paths)."""
+        if not self._unfetched:
+            return 0
+        return self.fault_pages(list(self._unfetched))
+
+    def native_page_dtype(self) -> np.dtype:
+        """The dtype pages are persisted in: ``cfg.page_dtype`` when set,
+        else the registered tensors' common dtype when uniform and a
+        narrow float (fp16/bf16/fp32 round-trip bit-exact), else fp32."""
+        if self.cfg.page_dtype != "auto":
+            return resolve_dtype(self.cfg.page_dtype)
+        dts = {np.dtype(e.dtype) for res in self.dedup.models.values()
+               for e in res.tensors.values()}
+        if len(dts) == 1:
+            dt = dts.pop()
+            if dt.name in ("float16", "bfloat16", "float32"):
+                return dt
+        return np.dtype(np.float32)
 
     # ----------------------------------------------------------- accessors --
     def num_pages(self) -> int:
@@ -136,12 +231,20 @@ class ModelStore:
         return pages * l * bh * bw * itemsize
 
     def materialize(self, model: str, tensor: str) -> np.ndarray:
+        if self._unfetched:
+            # fault only this tensor's cover pages (stays paged per model)
+            self.fault_pages(self.packing.tensor_pages[(model, tensor)])
         return self.dedup.materialize(model, tensor)
 
     def _distinct_stack(self) -> np.ndarray:
         """[len(distinct), bh, bw] float32 stack of the distinct blocks
         (tombstones as zeros), cached until the next register/update/remove.
-        All the vectorized gathers below index into this one array."""
+        All the vectorized gathers below index into this one array.  On a
+        backend-attached store this is the host-densification path, so it
+        faults everything still paged (unfetched blocks must never be
+        silently read as tombstone zeros)."""
+        if self._unfetched:
+            self.fault_all()
         if self._stack is None \
                 or self._stack.shape[0] != len(self.dedup.distinct):
             self._stack = self.dedup.pool(np.float32)
@@ -152,7 +255,12 @@ class ModelStore:
         """Gather only the requested rows (2-D tensors): the serving path's
         partial materialization — touches just the row blocks involved.
         Fully vectorized: one fancy-index gather pulls exactly the
-        requested rows out of the stacked distinct-block array."""
+        requested rows out of the stacked distinct-block array.
+
+        On a backend-attached store only the pages covering the touched
+        blocks are faulted (one grouped get), so the numpy serving path
+        stays paged per batch instead of densifying the whole store on
+        its first request."""
         e = self.dedup.models[model].tensors[tensor]
         bh, bw = e.grid.block_shape
         gw = e.grid.grid[1]
@@ -160,10 +268,19 @@ class ModelStore:
         rows = np.asarray(rows)
         rb = rows // bh
         off = rows % bh
-        stack = self._distinct_stack()
         dids = e.block_map[rb[:, None] * gw + np.arange(gw)[None, :]]
-        out = stack[dids, off[:, None], :]           # [n, gw, bw] rows only
-        return np.ascontiguousarray(
+        if self._unfetched:
+            uniq = np.unique(dids)
+            self.fault_pages({self._slot_of_block[int(d)][0] for d in uniq})
+        if self._unfetched:
+            # other pages still live in the backend: gather through a
+            # small sub-stack of just the touched distinct blocks
+            uniq = np.unique(dids)
+            sub = np.stack([self.dedup.distinct[int(d)] for d in uniq])
+            out = sub[np.searchsorted(uniq, dids), off[:, None], :]
+        else:
+            out = self._distinct_stack()[dids, off[:, None], :]
+        return np.ascontiguousarray(            # [n, gw, bw] rows only
             out.reshape(len(rows), gw * bw)[:, :width], dtype=np.float32)
 
     def _page_slot_ids(self) -> np.ndarray:
@@ -197,10 +314,22 @@ class ModelStore:
     def page_array(self, pid: int, dtype=np.float32) -> np.ndarray:
         """One physical page [blocks_per_page, bh, bw] — what a device
         page pool transfers host->HBM on a buffer-pool miss, without
-        building the whole pool array."""
+        building the whole pool array.  On a backend-attached store the
+        page is faulted from the backend on first touch (the HBM slab
+        sources its pages straight through the storage tier)."""
         bh, bw = self.cfg.dedup.block_shape
         page = self.packing.pages[pid]
         out = np.zeros((self.cfg.blocks_per_page, bh, bw), dtype=dtype)
+        if self._unfetched:
+            self.fault_pages([pid])
+        if self._unfetched:
+            # other pages still live in the backend: assemble this page
+            # from its own blocks without densifying the whole stack
+            for slot, did in enumerate(page):
+                b = self.dedup.distinct[did]
+                if b is not None:
+                    out[slot] = b
+            return out
         out[:len(page)] = self._distinct_stack()[np.asarray(page)]
         return out
 
@@ -282,58 +411,167 @@ class ModelStore:
                           on_load=on_load, on_evict=on_evict)
 
     # --------------------------------------------------------- persistence --
-    def save(self, path: str) -> Dict:
-        """Content-addressed save: page files named by sha256; manifest JSON
-        committed atomically last (crash-safe restart point)."""
-        os.makedirs(path, exist_ok=True)
+    def save(self, dest=None) -> Dict:
+        """Persist the store through a :class:`~repro.storage.PageBackend`.
+
+        ``dest`` may be a backend instance, a storage URL (``file://``,
+        ``sqlite://``, ``objsim://``), a bare directory path (deprecated
+        legacy spelling, resolved to a ``LocalDirBackend``), or None to
+        reuse the backend the store was opened from.
+
+        Pages are content-addressed (sha256 of the serialized bytes) in
+        the store's :meth:`native_page_dtype`, so fp16/bf16 model sets
+        round-trip bit-exact without a float32 detour.  The manifest
+        commit is atomic/transactional, and pages orphaned by an earlier
+        packing generation are pruned afterwards (``delete_pages`` on
+        the diff) — a crash between commit and prune only ever leaves
+        unreferenced extra pages, never a dangling manifest.
+        """
+        from ..storage import open_backend
+        if dest is None:
+            if self._backend is None:
+                raise ValueError("store has no attached backend; "
+                                 "pass a backend, URL, or path to save()")
+            backend = self._backend
+        else:
+            backend = open_backend(dest)
         pk = self.packing
-        pool = self.page_pool()
+        page_dtype = self.native_page_dtype()
+        pool = self.page_pool().astype(page_dtype)
         page_hashes: List[str] = []
+        payload: Dict[str, np.ndarray] = {}
         for pid in range(pk.num_pages):
             raw = np.ascontiguousarray(pool[pid]).tobytes()
             h = hashlib.sha256(raw).hexdigest()[:24]
             page_hashes.append(h)
-            fp = os.path.join(path, f"page-{h}.npy")
-            if not os.path.exists(fp):           # dedup on disk too
-                np.save(fp, pool[pid])
+            payload.setdefault(h, pool[pid])     # dedup in the backend too
+        existing = set(backend.list_pages())
+        backend.put_pages({h: arr for h, arr in payload.items()
+                           if h not in existing})
         manifest = {
+            "version": MANIFEST_VERSION,
             "blocks_per_page": self.cfg.blocks_per_page,
             "block_shape": list(self.cfg.dedup.block_shape),
-            "pages": [{"hash": h, "blocks": pk.pages[i]}
+            "page_dtype": page_dtype.name,
+            "pack_strategy": self.cfg.pack_strategy,
+            "dedup_config": _dedup_config_dict(self.cfg.dedup),
+            "pages": [{"hash": h, "blocks": [int(b) for b in pk.pages[i]]}
                       for i, h in enumerate(page_hashes)],
             "models": {
                 m: {t: {"shape": list(e.grid.tensor_shape),
-                        "dtype": str(np.dtype(e.dtype)),
+                        "dtype": np.dtype(e.dtype).name,
                         "block_map": e.block_map.tolist(),
-                        "pages": pk.tensor_pages[(m, t)]}
+                        "pages": [int(p) for p in pk.tensor_pages[(m, t)]]}
                     for t, e in res.tensors.items()}
                 for m, res in self.dedup.models.items()},
         }
-        fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(manifest, f)
-        os.replace(tmp, os.path.join(path, "manifest.json"))  # atomic commit
+        backend.commit_manifest(manifest)        # atomic commit point
+        orphans = existing - set(page_hashes)
+        if orphans:                              # pages of older packings
+            backend.delete_pages(sorted(orphans))
+        if self._backend is None:
+            self._backend = backend              # adopt for future save()
         return manifest
 
+    @classmethod
+    def open(cls, source, cfg: Optional[StoreConfig] = None) -> "ModelStore":
+        """Open a saved store as a *live* ModelStore: pages stay paged in
+        the backend and fault in lazily (grouped) as serving touches
+        them — nothing is densified up front.
 
-def load_store_tensors(path: str) -> Dict[str, Dict[str, np.ndarray]]:
-    """Rehydrate every model's tensors from a saved store directory."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    l = manifest["blocks_per_page"]
+        ``source`` is a backend instance or storage URL.  ``cfg``
+        overrides the persisted configuration (e.g. a different LSH
+        seed); by default the manifest's own dedup/packing config is
+        restored, so ``register``/``update`` after open dedup against
+        the reloaded blocks exactly as before the restart.
+        """
+        from ..storage import open_backend
+        backend = open_backend(source)
+        manifest = backend.load_manifest()
+        version = manifest.get("version", 1)    # v1: pre-PageBackend saves
+        if version > MANIFEST_VERSION:
+            raise ValueError(
+                f"manifest version {version} from {backend.url()} is newer "
+                f"than this build understands ({MANIFEST_VERSION}); "
+                "upgrade the reader instead of guessing at the format")
+        bh, bw = manifest["block_shape"]
+        if cfg is None:
+            cfg = _config_from_manifest(manifest)
+        store = cls(cfg)
+        dd = store.dedup
+        pages = manifest["pages"]
+        n_distinct = 1 + max((int(b) for e in pages for b in e["blocks"]),
+                             default=-1)
+        dd.distinct = [None] * n_distinct
+        dd.owners = [dict() for _ in range(n_distinct)]
+        tensor_pages: Dict[TensorRef, List[int]] = {}
+        for m, tensors in manifest["models"].items():
+            res = DedupResult(model=m, tensors={})
+            for t, spec in tensors.items():
+                grid = make_grid(tuple(spec["shape"]), (bh, bw))
+                bm = np.asarray(spec["block_map"], dtype=np.int64)
+                res.tensors[t] = TensorEntry(t, grid,
+                                             resolve_dtype(spec["dtype"]),
+                                             bm)
+                res.total_blocks += grid.num_blocks
+                tensor_pages[(m, t)] = [int(p) for p in spec["pages"]]
+                ref: TensorRef = (m, t)
+                uniq, cnt = np.unique(bm, return_counts=True)
+                for did, c in zip(uniq, cnt):
+                    dd.owners[int(did)][ref] = \
+                        dd.owners[int(did)].get(ref, 0) + int(c)
+                res.deduped_blocks += int(grid.num_blocks - len(uniq))
+            dd.models[m] = res
+        store._install_pack(PackResult([list(map(int, e["blocks"]))
+                                        for e in pages],
+                                       tensor_pages, strategy="loaded"))
+        store._backend = backend
+        store._page_hash = [e["hash"] for e in pages]
+        store._unfetched = set(range(len(pages)))
+        store._persisted_page_dtype = resolve_dtype(
+            manifest.get("page_dtype", "float32"))
+        store._index_stale = True                # rebuilt on first mutation
+        return store
+
+
+def _dedup_config_dict(cfg: DedupConfig) -> Dict:
+    lsh = cfg.lsh
+    return {
+        "magnitude_stat": cfg.magnitude_stat,
+        "validate_every_k": cfg.validate_every_k,
+        "accuracy_drop_threshold": cfg.accuracy_drop_threshold,
+        "validate": cfg.validate,
+        "lsh": {"num_bands": lsh.num_bands,
+                "rows_per_band": lsh.rows_per_band,
+                "r": lsh.r,
+                "collision_threshold": lsh.collision_threshold,
+                "seed": lsh.seed},
+    }
+
+
+def _config_from_manifest(manifest: Dict) -> StoreConfig:
     bh, bw = manifest["block_shape"]
-    # did -> block array, via the page files
-    block_of: Dict[int, np.ndarray] = {}
-    for entry in manifest["pages"]:
-        page = np.load(os.path.join(path, f"page-{entry['hash']}.npy"))
-        for slot, did in enumerate(entry["blocks"]):
-            block_of.setdefault(did, page[slot])
-    out: Dict[str, Dict[str, np.ndarray]] = {}
-    for m, tensors in manifest["models"].items():
-        out[m] = {}
-        for t, spec in tensors.items():
-            from .blocks import make_grid
-            grid = make_grid(tuple(spec["shape"]), (bh, bw))
-            blocks = np.stack([block_of[d] for d in spec["block_map"]])
-            out[m][t] = unblock_tensor(blocks, grid).astype(spec["dtype"])
-    return out
+    dc = manifest.get("dedup_config", {})
+    lsh = dc.get("lsh", {})
+    return StoreConfig(
+        dedup=DedupConfig(
+            block_shape=(bh, bw),
+            lsh=LSHConfig(**lsh) if lsh else LSHConfig(),
+            magnitude_stat=dc.get("magnitude_stat", "q3"),
+            validate_every_k=dc.get("validate_every_k", 64),
+            accuracy_drop_threshold=dc.get("accuracy_drop_threshold", 0.035),
+            validate=dc.get("validate", True)),
+        blocks_per_page=manifest["blocks_per_page"],
+        pack_strategy=manifest.get("pack_strategy", "two_stage"),
+        page_dtype=manifest.get("page_dtype", "auto"))
+
+
+def load_store_tensors(source) -> Dict[str, Dict[str, np.ndarray]]:
+    """Rehydrate every model's tensors from a saved store (DEPRECATED:
+    densifies everything on the host — prefer ``ModelStore.open``, which
+    keeps pages paged in the backend).  ``source`` is a directory path
+    (the legacy call convention), storage URL, or backend."""
+    store = ModelStore.open(source)
+    return {m: {t: store.materialize(m, t)
+                for t in store.dedup.models[m].tensors}
+            for m in store.dedup.models}

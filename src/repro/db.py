@@ -1,0 +1,157 @@
+"""DedupDB: the one-call facade over store + backend + server + engines.
+
+The paper's deployment story in five verbs::
+
+    from repro.db import DedupDB
+
+    db = DedupDB.open("sqlite:///models.db")     # or file:// / objsim://
+    db.register("bert-v0", tensors)              # Alg. 1 dedup
+    db.update("bert-v0", new_tensors)            # Sec. 7.6 delta update
+    db.commit()                                  # transactional manifest
+    engine = db.serve_embedding(heads)           # Eq.-2 pool + scheduler
+
+``open`` on a URL with a committed manifest returns a *live* database:
+pages stay paged in the backend and fault in (grouped) as serving
+touches them.  ``serve_embedding`` / ``serve_lm`` wire a
+:class:`~repro.serving.engine.WeightServer` whose miss costs are charged
+from a :meth:`StorageModel.from_backend` microbenchmark calibration of
+the very backend serving the pages — not a hardcoded hdd/ssd/nvme
+preset — plus the scheduler/prefetcher stack from PR 1/2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+import numpy as np
+
+from .core.dedup import DedupResult, Evaluator
+from .core.store import ModelStore, StoreConfig
+from .serving.engine import (EmbeddingServingEngine, LMServingEngine,
+                             StorageModel, WeightServer)
+from .storage import PageBackend, open_backend
+
+__all__ = ["DedupDB"]
+
+
+class DedupDB:
+    """A deduplicated model database bound to one storage backend."""
+
+    def __init__(self, store: ModelStore, backend: PageBackend):
+        self.store = store
+        self.backend = backend
+
+    # ------------------------------------------------------------- open --
+    @classmethod
+    def open(cls, url, cfg: Optional[StoreConfig] = None) -> "DedupDB":
+        """Open (or initialize) a dedup database at a storage URL.
+
+        With a committed manifest the store comes back *live* (paged,
+        nothing densified); on a fresh target an empty store is bound to
+        the backend and the first :meth:`commit` creates the manifest.
+        ``cfg`` overrides the persisted store configuration."""
+        backend = open_backend(url)
+        if backend.has_manifest():
+            store = ModelStore.open(backend, cfg)
+        else:
+            store = ModelStore(cfg)
+            store._backend = backend             # bind for commit()/save()
+        return cls(store, backend)
+
+    def close(self) -> None:
+        self.backend.close()
+
+    # -------------------------------------------------------- lifecycle --
+    def register(self, model: str, tensors: Mapping[str, np.ndarray],
+                 evaluator: Optional[Evaluator] = None,
+                 layers=None) -> DedupResult:
+        return self.store.register(model, tensors, evaluator, layers)
+
+    def update(self, model: str, tensors: Mapping[str, np.ndarray],
+               evaluator: Optional[Evaluator] = None,
+               approach: int = 2) -> DedupResult:
+        return self.store.update(model, tensors, evaluator, approach)
+
+    def remove(self, model: str) -> None:
+        self.store.remove(model)
+
+    def commit(self) -> Dict:
+        """Persist the current packing: content-addressed pages + the
+        transactional manifest, pruning pages orphaned by repacks."""
+        return self.store.save(self.backend)
+
+    def models(self):
+        return sorted(self.store.dedup.models)
+
+    # ---------------------------------------------------------- serving --
+    def storage_model(self, page_bytes: Optional[int] = None,
+                      **kw) -> StorageModel:
+        """A :class:`StorageModel` calibrated from this backend's
+        microbenchmark (the tier that actually holds the pages)."""
+        if page_bytes is None:
+            bh, bw = self.store.cfg.dedup.block_shape
+            page_bytes = self.store.cfg.blocks_per_page * bh * bw \
+                * self.store.native_page_dtype().itemsize
+        return StorageModel.from_backend(self.backend,
+                                         page_bytes=page_bytes, **kw)
+
+    def weight_server(self, capacity_pages: Optional[int] = None,
+                      policy: str = "optimized_mru",
+                      storage: Optional[StorageModel] = None,
+                      compute_backend: str = "numpy",
+                      kernel_mode: str = "auto") -> WeightServer:
+        """ModelStore + Eq.-2 buffer pool + calibrated storage clock.
+        ``compute_backend="device"`` serves through the HBM page slab
+        (DESIGN.md §3); slab faults then source pages straight from this
+        database's backend."""
+        if capacity_pages is None:
+            capacity_pages = max(1, self.store.num_pages())
+        return WeightServer(self.store, capacity_pages, policy,
+                            storage or self.storage_model(),
+                            backend=compute_backend, kernel_mode=kernel_mode)
+
+    def serve_embedding(self, heads: Dict[str, np.ndarray],
+                        capacity_pages: Optional[int] = None,
+                        policy: str = "optimized_mru",
+                        scheduler="round_robin",
+                        overlap: bool = False, prefetch: bool = False,
+                        compute_backend: str = "numpy",
+                        kernel_mode: str = "auto",
+                        storage: Optional[StorageModel] = None,
+                        embed_tensor: str = "embedding",
+                        ) -> EmbeddingServingEngine:
+        """The paper's multi-model embedding scenario, served out of this
+        database in one call.  Returns the engine; ``submit``/``run`` it."""
+        server = self.weight_server(capacity_pages, policy, storage,
+                                    compute_backend, kernel_mode)
+        prefetcher = None
+        if prefetch:
+            from .serving.prefetch import Prefetcher
+            prefetcher = Prefetcher(server)
+            overlap = True        # speculation only pays under compute
+        return EmbeddingServingEngine(server, heads,
+                                      embed_tensor=embed_tensor,
+                                      scheduler=scheduler,
+                                      prefetcher=prefetcher, overlap=overlap)
+
+    def serve_lm(self, apis: Dict[str, object],
+                 params_template: Dict[str, dict],
+                 capacity_pages: Optional[int] = None,
+                 policy: str = "optimized_mru",
+                 scheduler="fifo",
+                 overlap: bool = False, prefetch: bool = False,
+                 compute_backend: str = "numpy",
+                 kernel_mode: str = "auto",
+                 storage: Optional[StorageModel] = None,
+                 ) -> LMServingEngine:
+        """LM variants served via prefill/decode with weights faulted
+        through the pool (and the backend) on model switch."""
+        server = self.weight_server(capacity_pages, policy, storage,
+                                    compute_backend, kernel_mode)
+        prefetcher = None
+        if prefetch:
+            from .serving.prefetch import Prefetcher
+            prefetcher = Prefetcher(server)
+            overlap = True
+        return LMServingEngine(server, apis, params_template,
+                               scheduler=scheduler, prefetcher=prefetcher,
+                               overlap=overlap)

@@ -1,12 +1,22 @@
-"""Serving launcher: the paper's multi-model word2vec scenario end to end.
+"""Serving launcher: the paper's multi-model scenarios end to end.
 
-Builds N fine-tuned embedding variants, registers them in the dedup
-ModelStore (Alg. 1 -> two-stage packing), then serves mixed-model request
-traffic through the Eq.-2 buffer pool, reporting storage reduction, cache
-hit ratio, and latency — the same quantities as paper Figs. 8/9 + Tab. 1.
+Builds N fine-tuned variants, registers them in the dedup ModelStore
+(Alg. 1 -> two-stage packing), then serves mixed-model request traffic
+through the Eq.-2 buffer pool, reporting storage reduction, cache hit
+ratio, and latency — the same quantities as paper Figs. 8/9 + Tab. 1.
+
+With ``--store-url`` the store is committed to a pluggable storage
+backend (``file://`` dir, ``sqlite://`` database — the paper's native
+habitat — or ``objsim://`` simulated object store) and served back
+*live* through ``repro.db.DedupDB``: pages fault in grouped from the
+backend, and miss costs are charged from a ``microbench()``-calibrated
+StorageModel instead of the ``--storage`` preset.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --models 6 --batches 60
+  PYTHONPATH=src python -m repro.launch.serve --store-url sqlite:////tmp/m.db
+  PYTHONPATH=src python -m repro.launch.serve --engine lm --store-url \
+      sqlite:////tmp/lm.db --batches 4
 """
 from __future__ import annotations
 
@@ -47,56 +57,7 @@ def build_store(task: SyntheticTextTask, num_models: int,
     return store, heads
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--models", type=int, default=6)
-    ap.add_argument("--batches", type=int, default=60)
-    ap.add_argument("--batch-size", type=int, default=32)
-    ap.add_argument("--capacity-pages", type=int, default=24)
-    ap.add_argument("--policy", default="optimized_mru")
-    ap.add_argument("--storage", default="ssd",
-                    choices=list(("ssd", "hdd", "nvme", "dram")))
-    ap.add_argument("--scheduler", default="round_robin",
-                    choices=sorted(SCHEDULERS))
-    ap.add_argument("--backend", default="numpy",
-                    choices=("numpy", "device"),
-                    help="numpy: host materialization (policy simulator); "
-                         "device: serve through the HBM page slab via the "
-                         "Pallas dedup kernels (DESIGN.md §3)")
-    ap.add_argument("--overlap", action="store_true",
-                    help="double-buffer grouped fetches against compute")
-    ap.add_argument("--prefetch", action="store_true",
-                    help="lambda-driven page prefetching (implies --overlap:"
-                         " speculation only pays off hidden under compute)")
-    ap.add_argument("--vocab", type=int, default=2048)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-    if args.prefetch:
-        args.overlap = True
-
-    task = SyntheticTextTask(vocab=args.vocab, seed=args.seed)
-    store, heads = build_store(task, args.models)
-    dedup_bytes = store.storage_bytes()
-    dense_bytes = store.dense_bytes()
-    print(f"[store] models={args.models} pages={store.num_pages()} "
-          f"dense={dense_bytes/2**20:.1f}MiB dedup={dedup_bytes/2**20:.1f}MiB "
-          f"reduction={dense_bytes/max(1, dedup_bytes):.2f}x")
-
-    server = WeightServer(store, args.capacity_pages, args.policy,
-                          StorageModel(args.storage), backend=args.backend)
-    engine = EmbeddingServingEngine(
-        server, heads, scheduler=args.scheduler,
-        prefetcher=Prefetcher(server) if args.prefetch else None,
-        overlap=args.overlap)
-    rng = np.random.default_rng(args.seed + 9)
-    correct = total = 0
-    for b in range(args.batches):
-        v = int(rng.integers(0, args.models))
-        name = f"word2vec-v{v}"
-        docs, labels = task.sample(args.batch_size, variant=v,
-                                   seed=args.seed + 100 + b)
-        engine.submit(name, docs)
-    stats: ServeStats = engine.run()
+def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
     if args.backend == "device":
         print(f"[device] slab={server.device_pool.capacity} pages "
               f"loads={server.device_pool.loads} "
@@ -113,7 +74,178 @@ def main(argv=None):
           f"makespan={stats.makespan_seconds*1e3:.1f}ms "
           f"p50={stats.percentile(50)*1e3:.2f}ms "
           f"p99={stats.percentile(99)*1e3:.2f}ms")
+
+
+def _open_db(args, store: ModelStore):
+    """Commit the freshly built store to --store-url and reopen it live:
+    serving then faults pages from the backend with miss costs charged
+    from the backend's own microbenchmark calibration."""
+    from ..db import DedupDB
+    from ..storage import open_backend
+    # resolve the URL ONCE: a memory-backed objsim:// URL names a fresh
+    # store per open_backend() call, so save and reopen must share it
+    backend = open_backend(args.store_url)
+    store.save(backend)
+    db = DedupDB.open(backend)
+    storage = db.storage_model()
+    print(f"[store-url] {args.store_url} models={len(db.models())} "
+          f"pages={db.store.num_pages()} "
+          f"calibrated bw={storage.bw/1e6:.0f}MB/s "
+          f"seek={storage.seek*1e6:.0f}us")
+    return db, storage
+
+
+def serve_embedding(args) -> tuple:
+    task = SyntheticTextTask(vocab=args.vocab, seed=args.seed)
+    store, heads = build_store(task, args.models)
+    dedup_bytes = store.storage_bytes()
+    dense_bytes = store.dense_bytes()
+    print(f"[store] models={args.models} pages={store.num_pages()} "
+          f"dense={dense_bytes/2**20:.1f}MiB dedup={dedup_bytes/2**20:.1f}MiB "
+          f"reduction={dense_bytes/max(1, dedup_bytes):.2f}x")
+
+    if args.store_url:
+        db, storage = _open_db(args, store)
+        engine = db.serve_embedding(
+            heads, capacity_pages=args.capacity_pages, policy=args.policy,
+            scheduler=args.scheduler, overlap=args.overlap,
+            prefetch=args.prefetch, compute_backend=args.backend)
+        server = engine.server
+    else:
+        server = WeightServer(store, args.capacity_pages, args.policy,
+                              StorageModel(args.storage),
+                              backend=args.backend)
+        engine = EmbeddingServingEngine(
+            server, heads, scheduler=args.scheduler,
+            prefetcher=Prefetcher(server) if args.prefetch else None,
+            overlap=args.overlap)
+    rng = np.random.default_rng(args.seed + 9)
+    for b in range(args.batches):
+        v = int(rng.integers(0, args.models))
+        name = f"word2vec-v{v}"
+        docs, labels = task.sample(args.batch_size, variant=v,
+                                   seed=args.seed + 100 + b)
+        engine.submit(name, docs)
+    stats: ServeStats = engine.run()
+    _print_stats(args, stats, server)
     return stats, server
+
+
+def serve_lm(args) -> tuple:
+    """Reduced-LM variants served with prefill/decode; weights fault in
+    through the dedup page pool (and, with --store-url, the backend) at
+    every model switch."""
+    import jax
+
+    from ..configs import get_config, reduced
+    from ..models import build
+    from ..serving.engine import LMServingEngine
+
+    cfg = reduced(get_config("deepseek-7b"))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(args.seed), 64)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+    def key_of(path):
+        return "/".join(str(getattr(p, "key", p)) for p in path)
+
+    tensors = {key_of(p): np.asarray(l, np.float32).reshape(l.shape[0], -1)
+               if l.ndim > 2 else np.asarray(l, np.float32)
+               for p, l in flat}
+    shapes = {key_of(p): l.shape for p, l in flat}
+    dtypes = {key_of(p): l.dtype for p, l in flat}
+
+    def rebuild(ts):
+        import jax.numpy as jnp
+        leaves = [jnp.asarray(np.asarray(ts[key_of(p)])
+                              .reshape(shapes[key_of(p)]),
+                              dtypes[key_of(p)]) for p, _ in flat]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    num_models = max(2, min(args.models, 3))
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(32, 32),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=4.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=8))
+    rng = np.random.default_rng(args.seed)
+    names = []
+    for v in range(num_models):
+        name = f"lm-v{v}"
+        names.append(name)
+        delta = 0.0 if v == 0 else 1e-5 * v
+        store.register(name, {k: t + delta for k, t in tensors.items()})
+    print(f"[store] lm models={num_models} pages={store.num_pages()} "
+          f"reduction={store.dense_bytes()/max(1, store.storage_bytes()):.2f}x")
+
+    apis = {name: api for name in names}
+    templates = {name: {"rebuild": rebuild} for name in names}
+    cap = args.capacity_pages or max(2, store.num_pages() // 2)
+    if args.store_url:
+        db, storage = _open_db(args, store)
+        engine = db.serve_lm(apis, templates, capacity_pages=cap,
+                             policy=args.policy, scheduler=args.scheduler,
+                             overlap=args.overlap, prefetch=args.prefetch,
+                             compute_backend=args.backend)
+        server = engine.server
+    else:
+        server = WeightServer(store, cap, args.policy,
+                              StorageModel(args.storage),
+                              backend=args.backend)
+        engine = LMServingEngine(server, apis, templates,
+                                 scheduler=args.scheduler,
+                                 overlap=args.overlap)
+    for b in range(args.batches):
+        name = names[int(rng.integers(0, num_models))]
+        prompts = rng.integers(1, 64, size=(2, 8)).astype(np.int32)
+        engine.submit(name, prompts, steps=args.lm_steps)
+    stats: ServeStats = engine.run()
+    _print_stats(args, stats, server)
+    return stats, server
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="embedding",
+                    choices=("embedding", "lm"),
+                    help="embedding: the word2vec multi-model scenario; "
+                         "lm: reduced-LM variants with prefill/decode")
+    ap.add_argument("--models", type=int, default=6)
+    ap.add_argument("--batches", type=int, default=60)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--capacity-pages", type=int, default=24)
+    ap.add_argument("--policy", default="optimized_mru")
+    ap.add_argument("--storage", default="ssd",
+                    choices=list(("ssd", "hdd", "nvme", "dram")))
+    ap.add_argument("--store-url", default=None,
+                    help="storage backend URL (file:// | sqlite:// | "
+                         "objsim://): commit the store there, reopen it "
+                         "live, and serve with a microbench-calibrated "
+                         "StorageModel instead of the --storage preset")
+    ap.add_argument("--scheduler", default="round_robin",
+                    choices=sorted(SCHEDULERS))
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "device"),
+                    help="numpy: host materialization (policy simulator); "
+                         "device: serve through the HBM page slab via the "
+                         "Pallas dedup kernels (DESIGN.md §3)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffer grouped fetches against compute")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="lambda-driven page prefetching (implies --overlap:"
+                         " speculation only pays off hidden under compute)")
+    ap.add_argument("--lm-steps", type=int, default=4,
+                    help="decode steps per LM batch (--engine lm)")
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.prefetch:
+        args.overlap = True
+
+    if args.engine == "lm":
+        return serve_lm(args)
+    return serve_embedding(args)
 
 
 if __name__ == "__main__":

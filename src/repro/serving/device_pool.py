@@ -139,7 +139,14 @@ class DevicePagePool:
         """BufferPool ``on_load``: transfer one page host->device into a
         free slab slot.  In host mode the mirror *is* the device tier
         (host DRAM), so the jnp slab is left untouched — pallas/xla modes
-        do the real ``device_put`` + ``dynamic_update_slice`` transfer."""
+        do the real ``device_put`` + ``dynamic_update_slice`` transfer.
+
+        ``store.page_array`` sources the page through the store's
+        attached :class:`~repro.storage.PageBackend` when one is present
+        (a store opened from SQLite / a directory / the object-store
+        sim): slab faults reach all the way down to the storage tier,
+        and the engines' grouped demand fetches prefault the batch's
+        pages in one backend round trip first."""
         if pid in self.slot_of:
             return
         slot = self._free.pop()

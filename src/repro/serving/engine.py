@@ -55,14 +55,44 @@ STORAGE_PRESETS = {
 
 @dataclasses.dataclass
 class StorageModel:
+    """Virtual-clock latency model of the page-backing tier.
+
+    Either a named preset (``kind`` in :data:`STORAGE_PRESETS`) or
+    explicit ``bandwidth``/``seek`` parameters — typically calibrated
+    from a live backend's :meth:`~repro.storage.PageBackend.microbench`
+    via :meth:`from_backend`, so misses are charged what the tier
+    actually costs instead of a hardcoded hdd/ssd/nvme guess.
+    """
     kind: str = "ssd"
     hedge_after: Optional[float] = None    # straggler hedging deadline (s)
     jitter: float = 0.0                    # lognormal sigma for tail latency
     seed: int = 0
+    bandwidth: Optional[float] = None      # B/s override (calibrated)
+    seek: Optional[float] = None           # seconds override (calibrated)
 
     def __post_init__(self):
-        self.bw, self.seek = STORAGE_PRESETS[self.kind]
+        if self.bandwidth is None or self.seek is None:
+            try:
+                bw, seek = STORAGE_PRESETS[self.kind]
+            except KeyError:
+                raise ValueError(
+                    f"unknown storage kind {self.kind!r} and no explicit "
+                    f"bandwidth/seek given; presets: "
+                    f"{sorted(STORAGE_PRESETS)}") from None
+            self.bandwidth = bw if self.bandwidth is None else self.bandwidth
+            self.seek = seek if self.seek is None else self.seek
+        self.bw = self.bandwidth
         self._rng = np.random.default_rng(self.seed)
+
+    @classmethod
+    def from_backend(cls, backend, page_bytes: int = 128 * 1024,
+                     **kw) -> "StorageModel":
+        """Calibrate from a backend microbenchmark: the returned model
+        charges misses with the measured (seek, bandwidth) of the tier
+        the pages actually live in."""
+        prof = backend.microbench(page_bytes=page_bytes)
+        return cls(kind=f"calibrated:{prof.backend}",
+                   bandwidth=prof.bandwidth, seek=prof.seek, **kw)
 
     def _draw(self, base: float) -> float:
         if self.jitter:
@@ -196,7 +226,10 @@ class WeightServer:
             capacity_pages, policy, on_load=on_load, on_evict=on_evict)
         self.storage = storage or StorageModel("ssd")
         bh, bw = store.cfg.dedup.block_shape
-        self.page_bytes = store.cfg.blocks_per_page * bh * bw * 4
+        # a page's cost on the wire is its *persisted* size (fp16 stores
+        # move half the bytes of fp32 ones)
+        self.page_bytes = store.cfg.blocks_per_page * bh * bw \
+            * store.native_page_dtype().itemsize
         self.stats = ServeStats()
         self._pool_arr: Optional[np.ndarray] = None
         self._pool_gen = store.pack_generation   # make_buffer_pool packed
@@ -253,9 +286,16 @@ class WeightServer:
     def access_pages_grouped(self, model: str, page_ids) -> float:
         """Touch pages through the pool, issuing all misses as ONE group
         fetch (single seek, pipelined transfer) — the async scheduler's
-        per-batch demand fetch.  Returns the group's virtual seconds."""
+        per-batch demand fetch.  Returns the group's virtual seconds.
+
+        On a backend-attached store the group's not-yet-resident pages
+        are faulted out of the backend in one grouped ``get_pages`` call
+        *before* the pool access, so every per-page ``on_load`` (e.g. a
+        device-slab transfer) hits host memory instead of issuing its
+        own backend round trip."""
         self._sync_store()
         page_ids = list(page_ids)
+        self.store.fault_pages(page_ids)
         misses = sum(not hit for hit in self._access(model, page_ids))
         t = self.storage.fetch_group_seconds(self.page_bytes, misses)
         self.stats.pages_fetched += misses

@@ -1,0 +1,85 @@
+"""Local-directory page backend: the historical ModelStore on-disk format.
+
+Content-addressed ``page-<hash>.npy`` files plus a ``manifest.json``
+committed by atomic rename — byte-compatible with stores written by the
+old ``ModelStore.save(path)``, so existing checkpoints keep loading.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, List, Mapping, Sequence
+
+import numpy as np
+
+from .backend import PageBackend
+
+MANIFEST_NAME = "manifest.json"
+
+
+class LocalDirBackend(PageBackend):
+    scheme = "file"
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        os.makedirs(self.path, exist_ok=True)
+
+    def url(self) -> str:
+        return f"file://{os.path.abspath(self.path)}"
+
+    def _page_path(self, h: str) -> str:
+        return os.path.join(self.path, f"page-{h}.npy")
+
+    # ------------------------------------------------------------- pages --
+    def put_pages(self, pages: Mapping[str, np.ndarray]) -> int:
+        new = 0
+        for h, arr in pages.items():
+            fp = self._page_path(h)
+            if os.path.exists(fp):               # content addressing
+                continue
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".npy.tmp")
+            with os.fdopen(fd, "wb") as f:
+                np.save(f, np.ascontiguousarray(arr))
+            os.replace(tmp, fp)                  # no torn page files
+            new += 1
+        return new
+
+    def get_pages(self, hashes: Sequence[str]) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {}
+        for h in hashes:
+            fp = self._page_path(h)
+            if not os.path.exists(fp):
+                raise KeyError(f"page {h!r} not in {self.path}")
+            out[h] = np.load(fp)
+        return out
+
+    def list_pages(self) -> List[str]:
+        out = []
+        for name in os.listdir(self.path):
+            if name.startswith("page-") and name.endswith(".npy"):
+                out.append(name[len("page-"):-len(".npy")])
+        return sorted(out)
+
+    def delete_pages(self, hashes: Sequence[str]) -> int:
+        n = 0
+        for h in hashes:
+            try:
+                os.remove(self._page_path(h))
+                n += 1
+            except FileNotFoundError:
+                pass
+        return n
+
+    # ---------------------------------------------------------- manifest --
+    def commit_manifest(self, manifest: Dict) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(manifest, f)
+        # The atomic commit point: a crash before this line leaves the
+        # previous manifest untouched (crash-safety test).
+        os.replace(tmp, os.path.join(self.path, MANIFEST_NAME))
+
+    def load_manifest(self) -> Dict:
+        with open(os.path.join(self.path, MANIFEST_NAME)) as f:
+            return json.load(f)

@@ -1,0 +1,207 @@
+"""Relational (SQLite) page backend — the paper's native habitat.
+
+Pages are BLOB rows keyed by content hash; the manifest is *relational*:
+``models`` / ``tensors`` / ``manifest_pages`` / ``tensor_pages`` tables
+rewritten in ONE transaction per commit, so a crash mid-commit rolls
+back to the previous manifest (the database's atomicity doing the job
+``os.replace`` does for the directory backend).  Stdlib-only.
+
+Schema (DESIGN.md "Storage backends")::
+
+    pages(hash TEXT PK, dtype TEXT, shape TEXT, data BLOB)
+    meta(key TEXT PK, json TEXT)              -- store config + version
+    models(model TEXT PK)
+    tensors(model, tensor, shape TEXT, dtype TEXT, block_map BLOB,
+            PK(model, tensor))                -- block_map: int64 LE bytes
+    manifest_pages(page_idx INTEGER PK, hash TEXT, blocks TEXT)
+    tensor_pages(model, tensor, seq INTEGER, page_idx INTEGER,
+                 PK(model, tensor, seq))      -- exact per-tensor cover
+
+``load_manifest`` reconstructs the ModelStore manifest dict from these
+tables (they are load-bearing, not a cache of a JSON blob).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .backend import PageBackend, resolve_dtype
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS pages(
+    hash  TEXT PRIMARY KEY,
+    dtype TEXT NOT NULL,
+    shape TEXT NOT NULL,
+    data  BLOB NOT NULL);
+CREATE TABLE IF NOT EXISTS meta(
+    key  TEXT PRIMARY KEY,
+    json TEXT NOT NULL);
+CREATE TABLE IF NOT EXISTS models(
+    model TEXT PRIMARY KEY);
+CREATE TABLE IF NOT EXISTS tensors(
+    model     TEXT NOT NULL,
+    tensor    TEXT NOT NULL,
+    shape     TEXT NOT NULL,
+    dtype     TEXT NOT NULL,
+    block_map BLOB NOT NULL,
+    PRIMARY KEY (model, tensor));
+CREATE TABLE IF NOT EXISTS manifest_pages(
+    page_idx INTEGER PRIMARY KEY,
+    hash     TEXT NOT NULL,
+    blocks   TEXT NOT NULL);
+CREATE TABLE IF NOT EXISTS tensor_pages(
+    model    TEXT NOT NULL,
+    tensor   TEXT NOT NULL,
+    seq      INTEGER NOT NULL,
+    page_idx INTEGER NOT NULL,
+    PRIMARY KEY (model, tensor, seq));
+"""
+
+#: manifest keys that live in ``meta`` rather than the relational tables
+_META_KEYS = ("version", "blocks_per_page", "block_shape", "page_dtype",
+              "pack_strategy", "dedup_config")
+
+
+class SQLiteBackend(PageBackend):
+    scheme = "sqlite"
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        self._con = sqlite3.connect(self.path)
+        self._con.executescript(_SCHEMA)
+        self._con.commit()
+        # Test seam: invoked after the manifest rows are written but
+        # before COMMIT — raising here simulates a crash mid-commit and
+        # must leave the previous manifest readable (transaction rollback).
+        self._pre_commit_hook: Optional[Callable[[], None]] = None
+
+    def url(self) -> str:
+        return f"sqlite:///{os.path.abspath(self.path)}"
+
+    def close(self) -> None:
+        self._con.close()
+
+    # ------------------------------------------------------------- pages --
+    def put_pages(self, pages: Mapping[str, np.ndarray]) -> int:
+        cur = self._con.cursor()
+        new = 0
+        for h, arr in pages.items():
+            arr = np.ascontiguousarray(arr)
+            cur.execute(
+                "INSERT OR IGNORE INTO pages(hash, dtype, shape, data) "
+                "VALUES (?, ?, ?, ?)",
+                (h, arr.dtype.name, json.dumps(list(arr.shape)),
+                 sqlite3.Binary(arr.tobytes())))
+            new += cur.rowcount
+        self._con.commit()
+        return new
+
+    def get_pages(self, hashes: Sequence[str]) -> Dict[str, np.ndarray]:
+        hashes = list(hashes)
+        if not hashes:
+            return {}
+        # ONE grouped query for the whole miss set — the per-request
+        # overhead (parse/plan/seek) is paid once per batch, which is
+        # exactly what StorageModel.fetch_group_seconds models.
+        uniq = sorted(set(hashes))
+        marks = ",".join("?" * len(uniq))
+        rows = self._con.execute(
+            f"SELECT hash, dtype, shape, data FROM pages "
+            f"WHERE hash IN ({marks})", uniq).fetchall()
+        got = {h: np.frombuffer(data, dtype=resolve_dtype(dt))
+               .reshape(json.loads(shape)).copy()
+               for h, dt, shape, data in rows}
+        for h in uniq:
+            if h not in got:
+                raise KeyError(f"page {h!r} not in {self.path}")
+        return {h: got[h] for h in hashes}
+
+    def list_pages(self) -> List[str]:
+        return [r[0] for r in self._con.execute(
+            "SELECT hash FROM pages ORDER BY hash")]
+
+    def delete_pages(self, hashes: Sequence[str]) -> int:
+        hashes = list(hashes)
+        if not hashes:
+            return 0
+        marks = ",".join("?" * len(hashes))
+        cur = self._con.execute(
+            f"DELETE FROM pages WHERE hash IN ({marks})", hashes)
+        self._con.commit()
+        return cur.rowcount
+
+    # ---------------------------------------------------------- manifest --
+    def commit_manifest(self, manifest: Dict) -> None:
+        con = self._con
+        try:
+            cur = con.cursor()
+            for t in ("models", "tensors", "manifest_pages", "tensor_pages"):
+                cur.execute(f"DELETE FROM {t}")
+            cur.execute("DELETE FROM meta")
+            for key in _META_KEYS:
+                if key in manifest:
+                    cur.execute("INSERT INTO meta(key, json) VALUES (?, ?)",
+                                (key, json.dumps(manifest[key])))
+            for idx, entry in enumerate(manifest["pages"]):
+                cur.execute(
+                    "INSERT INTO manifest_pages(page_idx, hash, blocks) "
+                    "VALUES (?, ?, ?)",
+                    (idx, entry["hash"],
+                     json.dumps([int(b) for b in entry["blocks"]])))
+            for model, tensors in manifest["models"].items():
+                cur.execute("INSERT INTO models(model) VALUES (?)", (model,))
+                for tensor, spec in tensors.items():
+                    bm = np.asarray(spec["block_map"],
+                                    dtype="<i8").tobytes()
+                    cur.execute(
+                        "INSERT INTO tensors(model, tensor, shape, dtype, "
+                        "block_map) VALUES (?, ?, ?, ?, ?)",
+                        (model, tensor, json.dumps(list(spec["shape"])),
+                         spec["dtype"], sqlite3.Binary(bm)))
+                    cur.executemany(
+                        "INSERT INTO tensor_pages(model, tensor, seq, "
+                        "page_idx) VALUES (?, ?, ?, ?)",
+                        [(model, tensor, seq, int(pid))
+                         for seq, pid in enumerate(spec["pages"])])
+            if self._pre_commit_hook is not None:
+                self._pre_commit_hook()
+            con.commit()                          # the atomic commit point
+        except BaseException:
+            con.rollback()
+            raise
+
+    def load_manifest(self) -> Dict:
+        con = self._con
+        meta = {k: json.loads(v)
+                for k, v in con.execute("SELECT key, json FROM meta")}
+        page_rows = con.execute(
+            "SELECT page_idx, hash, blocks FROM manifest_pages "
+            "ORDER BY page_idx").fetchall()
+        if not meta or not page_rows:
+            raise FileNotFoundError(f"no manifest committed in {self.path}")
+        manifest: Dict = dict(meta)
+        manifest["pages"] = [{"hash": h, "blocks": json.loads(blocks)}
+                             for _, h, blocks in page_rows]
+        models: Dict[str, Dict] = {
+            m: {} for (m,) in con.execute("SELECT model FROM models")}
+        cover: Dict = {}
+        for model, tensor, pid in con.execute(
+                "SELECT model, tensor, page_idx FROM tensor_pages "
+                "ORDER BY model, tensor, seq"):
+            cover.setdefault((model, tensor), []).append(int(pid))
+        for model, tensor, shape, dtype, bm in con.execute(
+                "SELECT model, tensor, shape, dtype, block_map FROM tensors"):
+            models[model][tensor] = {
+                "shape": json.loads(shape),
+                "dtype": dtype,
+                "block_map": np.frombuffer(bm, dtype="<i8").tolist(),
+                "pages": cover.get((model, tensor), []),
+            }
+        manifest["models"] = models
+        return manifest

@@ -1,0 +1,397 @@
+"""PageBackend API: cross-backend round trips, orphan pruning, crash
+safety, lazy paged opens, grouped fetches, calibration, and the DedupDB
+facade."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (DedupConfig, LSHConfig, ModelStore, StoreConfig,
+                        load_store_tensors)
+from repro.db import DedupDB
+from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
+                                  WeightServer)
+from repro.storage import (LocalDirBackend, MemoryBackend,
+                           ObjectStoreSimBackend, PageBackend,
+                           SQLiteBackend, open_backend)
+
+BACKENDS = ("file", "sqlite", "objsim")
+
+
+def make_backend(kind: str, tmp_path) -> PageBackend:
+    if kind == "file":
+        return LocalDirBackend(str(tmp_path / "store"))
+    if kind == "sqlite":
+        return SQLiteBackend(str(tmp_path / "models.db"))
+    if kind == "objsim":
+        return ObjectStoreSimBackend(
+            LocalDirBackend(str(tmp_path / "obj_store")))
+    raise ValueError(kind)
+
+
+def _store(l=4, block=16):
+    return ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(block, block),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=8.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=l))
+
+
+def _variants(n=3, shape=(64, 64), noise=1e-4, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal(shape).astype(np.float32)
+    return {f"m{i}": {"w": (base + rng.standard_normal(shape)
+                            .astype(np.float32) * noise * i).astype(dtype)}
+            for i in range(n)}
+
+
+def _bits(x: np.ndarray) -> np.ndarray:
+    """Bit view for exact comparison across any float dtype (bf16-safe)."""
+    return x.view(f"u{x.dtype.itemsize}")
+
+
+def _dtypes():
+    out = [np.dtype(np.float32), np.dtype(np.float16)]
+    try:
+        import ml_dtypes
+        out.append(np.dtype(ml_dtypes.bfloat16))
+    except ImportError:
+        pass
+    return out
+
+
+# ------------------------------------------------------ round-trip matrix --
+@pytest.mark.parametrize("kind", BACKENDS)
+@pytest.mark.parametrize("dtype", _dtypes(), ids=lambda d: d.name)
+def test_roundtrip_matrix_bit_exact(kind, dtype, tmp_path):
+    """register -> save -> open -> materialize is bit-exact per dtype,
+    for every backend (the paper's lossless-storage contract)."""
+    store = _store()
+    models = _variants(dtype=dtype)
+    for name, t in models.items():
+        store.register(name, t)
+    backend = make_backend(kind, tmp_path)
+    manifest = store.save(backend)
+    assert manifest["page_dtype"] == dtype.name   # no float32 detour
+    back = ModelStore.open(backend)
+    for name in models:
+        a = store.materialize(name, "w")
+        b = back.materialize(name, "w")
+        assert a.dtype == dtype and b.dtype == dtype
+        assert np.array_equal(_bits(a), _bits(b))
+    # content dedup in the backend: stored pages <= packed pages
+    assert len(backend.list_pages()) <= store.num_pages()
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_roundtrip_randomized_property(kind, tmp_path):
+    """Randomized round-trip sweep: varying shapes/noise/model counts all
+    reopen bit-exact (the cheap deterministic stand-in for hypothesis)."""
+    rng = np.random.default_rng(7)
+    for trial in range(3):
+        shape = (int(rng.integers(2, 5)) * 16, int(rng.integers(2, 5)) * 16)
+        store = _store()
+        models = _variants(n=int(rng.integers(2, 5)), shape=shape,
+                           noise=float(rng.uniform(1e-5, 1e-3)),
+                           seed=100 + trial)
+        for name, t in models.items():
+            store.register(name, t)
+        backend = make_backend(kind, tmp_path / f"t{trial}")
+        store.save(backend)
+        back = ModelStore.open(backend)
+        for name in models:
+            assert np.array_equal(store.materialize(name, "w"),
+                                  back.materialize(name, "w"))
+
+
+# --------------------------------------------------------- orphan pruning --
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_save_prunes_orphaned_pages(kind, tmp_path):
+    """save -> repack (new model) -> save leaves no pages from the old
+    packing generation behind (the historical orphan leak)."""
+    backend = make_backend(kind, tmp_path)
+    store = _store()
+    models = _variants(2)
+    for name, t in models.items():
+        store.register(name, t)
+    m1 = store.save(backend)
+    assert set(backend.list_pages()) == {p["hash"] for p in m1["pages"]}
+    # register a dissimilar model: repack renames/extends the page set
+    rng = np.random.default_rng(42)
+    store.register("mx", {"w": rng.standard_normal((64, 64))
+                          .astype(np.float32)})
+    m2 = store.save(backend)
+    assert {p["hash"] for p in m2["pages"]} != {p["hash"]
+                                                for p in m1["pages"]}
+    assert set(backend.list_pages()) == {p["hash"] for p in m2["pages"]}
+    # and the store still reopens cleanly after the prune
+    back = ModelStore.open(backend)
+    assert np.array_equal(back.materialize("mx", "w"),
+                          store.materialize("mx", "w"))
+
+
+# ----------------------------------------------------------- crash safety --
+def test_localdir_interrupted_commit_keeps_previous_manifest(tmp_path,
+                                                             monkeypatch):
+    backend = LocalDirBackend(str(tmp_path / "store"))
+    store = _store()
+    for name, t in _variants().items():
+        store.register(name, t)
+    store.save(backend)
+
+    import repro.storage.localdir as localdir_mod
+    real_replace = os.replace
+
+    def crash_on_manifest(src, dst):
+        if dst.endswith("manifest.json"):
+            raise OSError("simulated crash mid-commit")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(localdir_mod.os, "replace", crash_on_manifest)
+    other = _store()
+    other.register("fresh", {"w": np.ones((64, 64), np.float32)})
+    with pytest.raises(OSError):
+        other.save(backend)
+    monkeypatch.undo()
+    # the previous manifest survived the torn commit
+    back = ModelStore.open(backend)
+    assert set(back.dedup.models) == {"m0", "m1", "m2"}
+    assert np.array_equal(back.materialize("m0", "w"),
+                          store.materialize("m0", "w"))
+
+
+def test_sqlite_interrupted_commit_rolls_back(tmp_path):
+    backend = SQLiteBackend(str(tmp_path / "models.db"))
+    store = _store()
+    for name, t in _variants().items():
+        store.register(name, t)
+    store.save(backend)
+
+    def crash():
+        raise RuntimeError("simulated crash before COMMIT")
+
+    backend._pre_commit_hook = crash
+    other = _store()
+    other.register("fresh", {"w": np.ones((64, 64), np.float32)})
+    with pytest.raises(RuntimeError):
+        other.save(backend)
+    backend._pre_commit_hook = None
+    # transaction rolled back: previous relational manifest intact
+    back = ModelStore.open(backend)
+    assert set(back.dedup.models) == {"m0", "m1", "m2"}
+    assert np.array_equal(back.materialize("m1", "w"),
+                          store.materialize("m1", "w"))
+
+
+# ------------------------------------------------------- live paged opens --
+def test_open_is_lazy_and_faults_grouped(tmp_path):
+    """open() densifies nothing; serving faults pages in grouped backend
+    calls; a single page_array touch fetches only that page."""
+    inner = SQLiteBackend(str(tmp_path / "models.db"))
+    backend = ObjectStoreSimBackend(inner)     # counts get_pages calls
+    store = _store()
+    for name, t in _variants(4, noise=3e-1).items():
+        store.register(name, t)
+    store.save(backend)
+
+    back = ModelStore.open(backend)
+    assert backend.get_calls == 0              # nothing fetched at open
+    assert len(back._unfetched) == back.num_pages()
+    back.page_array(0)
+    assert backend.get_calls == 1
+    assert len(back._unfetched) == back.num_pages() - 1
+    # grouped miss path: one get_pages for a whole page-id group
+    back2 = ModelStore.open(backend)
+    calls0 = backend.get_calls
+    fetched = back2.fault_pages(range(back2.num_pages()))
+    assert fetched == back2.num_pages()
+    assert backend.get_calls == calls0 + 1
+    assert back2.fault_pages(range(back2.num_pages())) == 0  # idempotent
+
+
+def test_numpy_rows_path_stays_paged(tmp_path):
+    """materialize_rows on an opened store faults only the pages covering
+    the touched row blocks — the numpy serving path must not densify the
+    whole store for one batch."""
+    backend = ObjectStoreSimBackend(SQLiteBackend(str(tmp_path / "m.db")))
+    store = _store()
+    models = _variants(4, noise=3e-1)
+    for name, t in models.items():
+        store.register(name, t)
+    store.save(backend)
+
+    back = ModelStore.open(backend)
+    rows = np.array([0, 1, 5])
+    got = back.materialize_rows("m0", "w", rows)
+    want = store.materialize("m0", "w")[rows]
+    assert np.allclose(got, want, atol=1e-6)
+    assert backend.get_calls == 1              # one grouped fetch
+    assert back._unfetched                     # other pages still remote
+    # the full-store paths still work afterwards
+    assert np.array_equal(back.materialize("m3", "w"),
+                          store.materialize("m3", "w"))
+
+
+def test_register_after_open_dedups_against_reloaded_blocks(tmp_path):
+    """A store reopened from a backend stays *live*: registering a new
+    near-duplicate variant dedups against the reloaded distinct blocks
+    (LSH index rebuilt), and the next save commits the merged set."""
+    backend = SQLiteBackend(str(tmp_path / "models.db"))
+    store = _store()
+    models = _variants()
+    for name, t in models.items():
+        store.register(name, t)
+    store.save(backend)
+
+    back = ModelStore.open(backend)
+    res = back.register("m_new", {"w": models["m0"]["w"]
+                                  + np.float32(1e-5)})
+    assert res.deduped_blocks > 0              # found the reloaded blocks
+    back.save(backend)
+    again = ModelStore.open(backend)
+    assert set(again.dedup.models) == {"m0", "m1", "m2", "m_new"}
+    assert np.allclose(again.materialize("m_new", "w"),
+                       models["m0"]["w"], atol=1e-2)
+
+
+def test_device_serving_from_opened_store_matches_numpy(tmp_path):
+    """End-to-end: device-backend serving out of a reopened SQLite store
+    produces the same logits as numpy serving from the original
+    in-memory store; slab faults source pages through the backend."""
+    from repro.data.pipeline import SyntheticTextTask
+    from repro.launch.serve import build_store
+
+    task = SyntheticTextTask(vocab=512, d=32, seed=0)
+    store, heads = build_store(task, num_models=3, block_shape=(32, 32),
+                               blocks_per_page=4)
+    url = f"sqlite:///{tmp_path}/models.db"
+    store.save(url)
+
+    db = DedupDB.open(url)
+    engine = db.serve_embedding(heads, capacity_pages=12,
+                                compute_backend="device", overlap=True)
+    ref = EmbeddingServingEngine(
+        WeightServer(store, 12, storage=StorageModel("ssd")), heads)
+    rng = np.random.default_rng(5)
+    for b in range(6):
+        v = int(rng.integers(0, 3))
+        docs, _ = task.sample(32, variant=v, seed=300 + b)
+        engine.submit(f"word2vec-v{v}", docs)
+        ref.submit(f"word2vec-v{v}", docs)
+    stats = engine.run()
+    ref.run()
+    assert stats.device_batches > 0
+    assert np.allclose(engine.last_logits, ref.last_logits, atol=1e-4)
+    db.close()
+
+
+# ------------------------------------------------- URL factory + presets --
+def test_open_backend_url_grammar(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)               # relative sqlite paths land here
+    assert isinstance(open_backend(str(tmp_path / "bare")), LocalDirBackend)
+    assert isinstance(open_backend(f"file://{tmp_path}/f"), LocalDirBackend)
+    b = open_backend("sqlite:///rel.db")
+    assert isinstance(b, SQLiteBackend)       # sqlite:/// is relative-style
+    assert b.path == "rel.db"
+    b2 = open_backend(f"sqlite:////{str(tmp_path)[1:]}/abs.db")
+    assert isinstance(b2, SQLiteBackend)
+    assert os.path.isabs(b2.path)
+    o = open_backend("objsim://?seek_ms=30&bandwidth_mbps=100")
+    assert isinstance(o, ObjectStoreSimBackend)
+    assert o.seek == pytest.approx(30e-3)
+    assert o.bandwidth == pytest.approx(100e6)
+    assert isinstance(open_backend("memory://"), MemoryBackend)
+    assert isinstance(open_backend(MemoryBackend()), MemoryBackend)
+    with pytest.raises(ValueError):
+        open_backend("s3://bucket/key")
+    # backends round-trip through their own URL, inner type included
+    assert isinstance(open_backend(o.url()), ObjectStoreSimBackend)
+    o_dir = ObjectStoreSimBackend(LocalDirBackend(str(tmp_path / "od")),
+                                  seek=2e-3)
+    r = open_backend(o_dir.url())
+    assert isinstance(r.inner, LocalDirBackend)
+    assert r.seek == pytest.approx(2e-3)
+    o_db = ObjectStoreSimBackend(SQLiteBackend(str(tmp_path / "rt.db")))
+    r2 = open_backend(o_db.url())
+    assert isinstance(r2.inner, SQLiteBackend)
+    assert os.path.abspath(r2.inner.path) == str(tmp_path / "rt.db")
+
+
+def test_storage_model_calibration_from_backend():
+    """Microbench calibration replaces the hardcoded presets: the object
+    store sim reports its injected parameters exactly, and fetch costs
+    order correctly against a fast local tier."""
+    slow = ObjectStoreSimBackend(seek=30e-3, bandwidth=100e6)
+    sm = StorageModel.from_backend(slow)
+    assert sm.seek == pytest.approx(30e-3)
+    assert sm.bw == pytest.approx(100e6)
+    assert sm.kind == "calibrated:objsim"
+    fast = StorageModel.from_backend(MemoryBackend())
+    nbytes = 1 << 20
+    assert sm.fetch_seconds(nbytes) > fast.fetch_seconds(nbytes)
+    # grouped fetch amortizes the (large, injected) seek
+    assert sm.fetch_group_seconds(nbytes, 4) < 4 * sm.fetch_seconds(nbytes)
+    with pytest.raises(ValueError):
+        StorageModel("not-a-preset")
+
+
+def test_weight_server_page_bytes_tracks_page_dtype():
+    store = _store()
+    for name, t in _variants(dtype=np.float16).items():
+        store.register(name, t)
+    fp16_bytes = WeightServer(store, 2).page_bytes
+    store32 = _store()
+    for name, t in _variants(dtype=np.float32).items():
+        store32.register(name, t)
+    assert WeightServer(store32, 2).page_bytes == 2 * fp16_bytes
+
+
+# ------------------------------------------------------------- the facade --
+def test_dedupdb_facade_lifecycle(tmp_path):
+    """open (fresh) -> register -> commit -> reopen -> update -> commit
+    -> serve, all through the facade."""
+    url = f"sqlite:///{tmp_path}/db.sqlite"
+    db = DedupDB.open(url)
+    models = _variants()
+    for name, t in models.items():
+        db.register(name, t)
+    manifest = db.commit()
+    assert set(manifest["models"]) == {"m0", "m1", "m2"}
+    db.close()
+
+    db2 = DedupDB.open(url)
+    assert db2.models() == ["m0", "m1", "m2"]
+    new_w = {"w": models["m1"]["w"] + np.float32(0.5)}
+    db2.update("m1", new_w)
+    db2.commit()
+    assert np.allclose(db2.store.materialize("m1", "w"), new_w["w"],
+                       atol=1e-5)
+
+    db3 = DedupDB.open(url)
+    heads = {m: np.eye(64, 8, dtype=np.float32) for m in db3.models()}
+    engine = db3.serve_embedding(heads, embed_tensor="w", capacity_pages=4)
+    rng = np.random.default_rng(0)
+    for m in db3.models():
+        engine.submit(m, rng.integers(0, 64, size=(4, 6)))
+    stats = engine.run()
+    assert stats.batches == 3
+    assert engine.server.pool.hits + engine.server.pool.misses > 0
+    # miss charging came from the calibrated model, not a preset
+    assert engine.server.storage.kind.startswith("calibrated:")
+    db3.close()
+
+
+def test_legacy_path_api_still_works(tmp_path):
+    """Back-compat shims: save(path-string) and load_store_tensors(path)
+    keep working against the same on-disk layout as before."""
+    store = _store()
+    models = _variants()
+    for name, t in models.items():
+        store.register(name, t)
+    store.save(str(tmp_path))
+    assert (tmp_path / "manifest.json").exists()
+    assert any(f.startswith("page-") for f in os.listdir(tmp_path))
+    back = load_store_tensors(str(tmp_path))
+    for name in models:
+        assert np.allclose(back[name]["w"], store.materialize(name, "w"))
