@@ -13,6 +13,7 @@ bench:
 
 # Fast numpy-vs-device serving comparison -> BENCH_serving.json, plus the
 # storage-backend axis (local vs sqlite vs objsim) -> BENCH_storage.json
+# and the shard-count x placement axis -> BENCH_sharding.json
 # (run by scripts/verify.sh so the perf trajectories are tracked per PR)
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_serving_backends --smoke

@@ -1,14 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the ROADMAP.md command, from any cwd, followed by
-# the storage-backend round-trip matrix (file/sqlite/objsim x dtypes) and
-# the serving-backend smoke benchmark (emits BENCH_serving.json and
-# BENCH_storage.json so the numpy-vs-device and local-vs-sqlite-vs-objsim
-# perf trajectories are tracked from every verify run).
+# the serving-backend smoke benchmark (emits BENCH_serving.json,
+# BENCH_storage.json and BENCH_sharding.json so the numpy-vs-device,
+# local-vs-sqlite-vs-objsim and shard-count/placement perf trajectories
+# are tracked from every verify run).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 # The pytest run includes the storage-backend round-trip matrix
 # (tests/test_storage_backends.py: file/sqlite/objsim x fp32/fp16/bf16,
-# orphan pruning, interrupted-commit crash safety).
+# orphan pruning, interrupted-commit crash safety, two-writer optimistic
+# locking) and the sharded-serving suite (tests/test_shard_pool.py:
+# placement invariants, 1/2/4-shard logit equivalence, borrow protocol).
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving_backends --smoke

@@ -375,6 +375,21 @@ class ModelStore:
                 sharers.setdefault(p, set()).add(m)
         return {p: frozenset(ms) for p, ms in sharers.items()}
 
+    def page_sharer_counts(self) -> np.ndarray:
+        """[num_pages] int64 sharer counts (|page_sharers()[p]|), cached
+        per packing generation — the dedup statistic sharer-weighted
+        shard placement keys on (hot shared pages replicate, singletons
+        partition)."""
+        hit = self._page_pool_cache.get("__sharer_counts__")
+        if hit is not None and hit[0] == self.pack_generation:
+            return hit[1]
+        counts = np.zeros(self.packing.num_pages, dtype=np.int64)
+        for p, ms in self.page_sharers().items():
+            counts[p] = len(ms)
+        self._page_pool_cache["__sharer_counts__"] = (self.pack_generation,
+                                                      counts)
+        return counts
+
     def model_pages(self, model: str) -> List[int]:
         """All pages the model's tensors touch (its page working set)."""
         pk = self.packing

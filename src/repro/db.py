@@ -98,13 +98,28 @@ class DedupDB:
                       policy: str = "optimized_mru",
                       storage: Optional[StorageModel] = None,
                       compute_backend: str = "numpy",
-                      kernel_mode: str = "auto") -> WeightServer:
+                      kernel_mode: str = "auto",
+                      shards: int = 1,
+                      placement: str = "sharers") -> WeightServer:
         """ModelStore + Eq.-2 buffer pool + calibrated storage clock.
         ``compute_backend="device"`` serves through the HBM page slab
         (DESIGN.md §3); slab faults then source pages straight from this
-        database's backend."""
+        database's backend.  ``shards > 1`` partitions the slab across a
+        device mesh with the selected placement policy (DESIGN.md §5;
+        capacity is then per shard)."""
         if capacity_pages is None:
             capacity_pages = max(1, self.store.num_pages())
+        if shards > 1:
+            if compute_backend != "device":
+                raise ValueError("shards > 1 requires "
+                                 "compute_backend='device'")
+            from .launch.mesh import shard_devices
+            from .serving.shard_pool import ShardedWeightServer
+            return ShardedWeightServer(self.store, capacity_pages, policy,
+                                       storage or self.storage_model(),
+                                       shards=shards, placement=placement,
+                                       kernel_mode=kernel_mode,
+                                       devices=shard_devices(shards))
         return WeightServer(self.store, capacity_pages, policy,
                             storage or self.storage_model(),
                             backend=compute_backend, kernel_mode=kernel_mode)
@@ -118,11 +133,13 @@ class DedupDB:
                         kernel_mode: str = "auto",
                         storage: Optional[StorageModel] = None,
                         embed_tensor: str = "embedding",
+                        shards: int = 1, placement: str = "sharers",
                         ) -> EmbeddingServingEngine:
         """The paper's multi-model embedding scenario, served out of this
         database in one call.  Returns the engine; ``submit``/``run`` it."""
         server = self.weight_server(capacity_pages, policy, storage,
-                                    compute_backend, kernel_mode)
+                                    compute_backend, kernel_mode,
+                                    shards=shards, placement=placement)
         prefetcher = None
         if prefetch:
             from .serving.prefetch import Prefetcher
@@ -142,11 +159,13 @@ class DedupDB:
                  compute_backend: str = "numpy",
                  kernel_mode: str = "auto",
                  storage: Optional[StorageModel] = None,
+                 shards: int = 1, placement: str = "sharers",
                  ) -> LMServingEngine:
         """LM variants served via prefill/decode with weights faulted
         through the pool (and the backend) on model switch."""
         server = self.weight_server(capacity_pages, policy, storage,
-                                    compute_backend, kernel_mode)
+                                    compute_backend, kernel_mode,
+                                    shards=shards, placement=placement)
         prefetcher = None
         if prefetch:
             from .serving.prefetch import Prefetcher

@@ -204,6 +204,27 @@ def param_specs(params, recipe: Optional[ShardingRecipe] = None):
     return walk(params, "")
 
 
+POOL_SHARD_AXIS = "shard"
+
+
+def slab_spec(ndim: int = 5) -> P:
+    """PartitionSpec of a stacked per-shard page slab ``[num_shards,
+    capacity, blocks_per_page, bh, bw]``: the shard dimension partitions
+    over the serving mesh's ``shard`` axis, block payloads replicate.
+    (The dry-run `dedup_serving*` variants shard the flat pool the same
+    way over the production axes.)"""
+    return P(*([POOL_SHARD_AXIS] + [None] * (ndim - 1)))
+
+
+def slab_sharding(mesh, shape):
+    """NamedSharding for a stacked slab of ``shape`` on a ``("shard",)``
+    serving mesh (see ``launch.mesh.make_shard_mesh``); falls back to
+    replication on dims the mesh cannot evenly partition."""
+    from jax.sharding import NamedSharding
+    return NamedSharding(mesh, sanitize_spec(slab_spec(len(shape)),
+                                             shape, mesh))
+
+
 def cache_specs(cache, recipe: ShardingRecipe):
     """Specs for a decode cache pytree (leaf-name keyed)."""
     def walk(tree, prefix):

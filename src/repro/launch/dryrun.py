@@ -164,6 +164,10 @@ VARIANTS = {
     # re-shapes the weight inputs into pool+map form); list for CLI.
     "dedup_serving": _unrolled,
     "dedup_serving_dense_ref": _unrolled,
+    # sharded page-pool serving (serving/shard_pool.py at pod scale):
+    # the block maps shard with the pool instead of replicating, so the
+    # lowering also schedules the map-distribution collectives.
+    "dedup_serving_sharded": _unrolled,
 }
 
 
@@ -280,16 +284,22 @@ def lower_cell(arch: str, shape: str, multi_pod: bool = False,
             # cfg.dedup_ratio (measured cross-variant distinct fraction);
             # "..._dense_ref" is the no-dedup reference (6 full copies).
             from ..distributed.sharding import param_spec
-            ratio = cfg.dedup_ratio if variant == "dedup_serving" else 1.0
+            ratio = 1.0 if variant == "dedup_serving_dense_ref" \
+                else cfg.dedup_ratio
             pooled_sds, unpool = _pool_params(params_sds, cfg, ratio)
             axes = (("pod", "data", "model") if multi_pod
                     else ("data", "model"))
+            # "_sharded": the remapped block maps partition with the pool
+            # (serving/shard_pool.py's per-shard remaps at pod scale)
+            # instead of replicating — the lowering then also schedules
+            # the map-distribution collectives.
+            map_spec = P(axes) if variant.endswith("_sharded") else P()
             pspecs2 = {}
             for k, s in pooled_sds.items():
                 if k.endswith("#pool"):
                     pspecs2[k] = P(axes, None, None)
                 elif k.endswith("#map"):
-                    pspecs2[k] = P()
+                    pspecs2[k] = map_spec
                 else:
                     pspecs2[k] = param_spec(k, len(s.shape), recipe)
             params_in = _shard_sds(pooled_sds, pspecs2, mesh)

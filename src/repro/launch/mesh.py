@@ -52,3 +52,23 @@ def make_mini_mesh(*, multi_pod: bool = False, devices_per_axis: int = 2):
     shape = (2, d, d) if multi_pod else (d, d)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh_compat(shape, axes)
+
+
+# ------------------------------------------------------------ serving mesh --
+def shard_devices(num_shards: int):
+    """Device assignment for a sharded page pool: shard i's slab lives on
+    local device i.  With fewer devices than shards (one CPU, mini TPU
+    slices) devices are reused round-robin — the placement/routing logic
+    is identical, only the physical spread shrinks."""
+    local = jax.local_devices()
+    return [local[i % len(local)] for i in range(int(num_shards))]
+
+
+def make_shard_mesh(num_shards: int):
+    """1-D ``("shard",)`` mesh for sharded page-pool serving.  The axis
+    is clamped to the local device count (a 4-shard pool on one CPU is a
+    1-device mesh with all four slabs co-located); the per-shard
+    DevicePagePools still pin to :func:`shard_devices`, so on a real
+    slice each shard's slab lands on its own chip."""
+    n = min(int(num_shards), len(jax.local_devices()))
+    return make_mesh_compat((max(1, n),), ("shard",))

@@ -64,6 +64,14 @@ def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
               f"evicts={server.device_pool.evicts} "
               f"device_batches={stats.device_batches} "
               f"dense_fallbacks={stats.dense_fallbacks}")
+    if getattr(args, "shards", 1) > 1:
+        s = server.stats                 # borrow/routing live on the server
+        print(f"[shards] n={args.shards} placement={args.placement} "
+              f"batches_per_shard={dict(sorted(s.shard_batches.items()))} "
+              f"borrows={s.borrow_pages} "
+              f"(mirror={s.borrow_mirror_hits} "
+              f"owner_faults={s.borrow_store_faults}) "
+              f"borrow={s.borrow_seconds*1e3:.2f}ms")
     print(f"[serve] batches={stats.batches} requests={stats.requests} "
           f"scheduler={args.scheduler} overlap={args.overlap} "
           f"backend={args.backend} "
@@ -95,6 +103,27 @@ def _open_db(args, store: ModelStore):
     return db, storage
 
 
+def _make_server(args, store: ModelStore, capacity_pages: int,
+                 storage: StorageModel = None) -> WeightServer:
+    """A (possibly sharded) weight server per the CLI flags.  --shards
+    N>1 partitions the page pool across N per-shard slabs with the
+    selected placement policy; capacity is then PER SHARD (one
+    accelerator's slab)."""
+    storage = storage or StorageModel(args.storage)
+    if args.shards > 1:
+        if args.backend != "device":
+            raise SystemExit("--shards > 1 requires --backend device "
+                             "(the numpy path has no slabs to partition)")
+        from ..serving.shard_pool import ShardedWeightServer
+        from .mesh import shard_devices
+        return ShardedWeightServer(store, capacity_pages, args.policy,
+                                   storage, shards=args.shards,
+                                   placement=args.placement,
+                                   devices=shard_devices(args.shards))
+    return WeightServer(store, capacity_pages, args.policy, storage,
+                        backend=args.backend)
+
+
 def serve_embedding(args) -> tuple:
     task = SyntheticTextTask(vocab=args.vocab, seed=args.seed)
     store, heads = build_store(task, args.models)
@@ -109,12 +138,11 @@ def serve_embedding(args) -> tuple:
         engine = db.serve_embedding(
             heads, capacity_pages=args.capacity_pages, policy=args.policy,
             scheduler=args.scheduler, overlap=args.overlap,
-            prefetch=args.prefetch, compute_backend=args.backend)
+            prefetch=args.prefetch, compute_backend=args.backend,
+            shards=args.shards, placement=args.placement)
         server = engine.server
     else:
-        server = WeightServer(store, args.capacity_pages, args.policy,
-                              StorageModel(args.storage),
-                              backend=args.backend)
+        server = _make_server(args, store, args.capacity_pages)
         engine = EmbeddingServingEngine(
             server, heads, scheduler=args.scheduler,
             prefetcher=Prefetcher(server) if args.prefetch else None,
@@ -187,12 +215,11 @@ def serve_lm(args) -> tuple:
         engine = db.serve_lm(apis, templates, capacity_pages=cap,
                              policy=args.policy, scheduler=args.scheduler,
                              overlap=args.overlap, prefetch=args.prefetch,
-                             compute_backend=args.backend)
+                             compute_backend=args.backend,
+                             shards=args.shards, placement=args.placement)
         server = engine.server
     else:
-        server = WeightServer(store, cap, args.policy,
-                              StorageModel(args.storage),
-                              backend=args.backend)
+        server = _make_server(args, store, cap)
         engine = LMServingEngine(server, apis, templates,
                                  scheduler=args.scheduler,
                                  overlap=args.overlap)
@@ -230,6 +257,15 @@ def main(argv=None):
                     help="numpy: host materialization (policy simulator); "
                          "device: serve through the HBM page slab via the "
                          "Pallas dedup kernels (DESIGN.md §3)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the device page pool across N shards "
+                         "(per-shard slabs + majority-cover routing + "
+                         "cross-shard borrowing; capacity is per shard)")
+    ap.add_argument("--placement", default="sharers",
+                    choices=("hash", "sharers"),
+                    help="page->shard placement: hash-mod baseline, or "
+                         "sharer-weighted (replicate hot shared pages, "
+                         "partition singletons by model affinity)")
     ap.add_argument("--overlap", action="store_true",
                     help="double-buffer grouped fetches against compute")
     ap.add_argument("--prefetch", action="store_true",

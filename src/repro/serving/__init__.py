@@ -3,13 +3,20 @@ from .engine import (EmbeddingServingEngine, FetchComputeTimeline,
                      LMServingEngine, ServeStats, StorageModel, WeightServer)
 from .kvcache import PagedKVCache
 from .prefetch import Prefetcher, PrefetchStats
+from .router import RouteDecision, ShardRouter
 from .scheduler import (SCHEDULERS, BatchScheduler, DedupAffinityScheduler,
                         FifoScheduler, RoundRobinScheduler, ScheduledBatch,
                         make_scheduler)
+from .shard_pool import (PLACEMENTS, Placement, ShardedPagePool,
+                         ShardedWeightServer, hash_placement, make_placement,
+                         sharers_placement)
 
 __all__ = ["DevicePagePool", "EmbeddingServingEngine",
            "FetchComputeTimeline", "LMServingEngine", "ServeStats",
            "StorageModel", "WeightServer", "PagedKVCache", "Prefetcher",
            "PrefetchStats", "SCHEDULERS", "BatchScheduler",
            "DedupAffinityScheduler", "FifoScheduler", "RoundRobinScheduler",
-           "ScheduledBatch", "make_scheduler"]
+           "ScheduledBatch", "make_scheduler",
+           "RouteDecision", "ShardRouter", "PLACEMENTS", "Placement",
+           "ShardedPagePool", "ShardedWeightServer", "hash_placement",
+           "make_placement", "sharers_placement"]

@@ -98,7 +98,8 @@ class DevicePagePool:
     """Fixed-capacity HBM slab of deduplicated pages + slot remap."""
 
     def __init__(self, store: ModelStore, capacity_pages: int,
-                 dtype=jnp.float32, kernel_mode: str = "auto"):
+                 dtype=jnp.float32, kernel_mode: str = "auto",
+                 device=None):
         if kernel_mode not in ("auto", "pallas", "xla", "host"):
             raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
         self.store = store
@@ -108,13 +109,16 @@ class DevicePagePool:
         self.capacity = int(capacity_pages)
         self.dtype = dtype
         self.kernel_mode = kernel_mode
+        # Mesh placement: a sharded pool pins each shard's slab (and its
+        # compute) to one device of the serving mesh; None = default.
+        self.device = device
         # The preallocated HBM slab. jnp.zeros commits the allocation on
         # the default device up front; every load is an in-place-style
         # functional update of this one buffer.  In host mode the mirror
         # below is the tier's physical backing, so the device buffer is
         # never allocated at all.
-        self.slab = None if self.mode() == "host" else jnp.zeros(
-            (self.capacity, self.blocks_per_page, bh, bw), dtype)
+        self.slab = None if self.mode() == "host" else self._put(jnp.zeros(
+            (self.capacity, self.blocks_per_page, bh, bw), dtype))
         # Host mirror, kept page-for-page identical with the slab: the
         # "host" kernel mode computes from it, and off-accelerator it is
         # the physical backing of the tier anyway.
@@ -133,6 +137,10 @@ class DevicePagePool:
         #                     complete: no -1 holes)
         self._remap_cache: Dict[Tuple[str, str],
                                 Tuple[int, int, np.ndarray, bool]] = {}
+
+    def _put(self, x):
+        """Commit an array to this pool's device (identity when unpinned)."""
+        return x if self.device is None else jax.device_put(x, self.device)
 
     # ------------------------------------------------------ page movement --
     def load(self, pid: int) -> None:
@@ -153,7 +161,7 @@ class DevicePagePool:
         page = self.store.page_array(pid, dtype=np.float32)
         if self.mode() != "host":
             self.slab = jax.lax.dynamic_update_slice(
-                self.slab, jax.device_put(page[None].astype(self.dtype)),
+                self.slab, self._put(jnp.asarray(page[None], self.dtype)),
                 (slot, 0, 0, 0))
         self.host_slab[slot] = page
         self.slot_of[pid] = slot
@@ -248,12 +256,33 @@ class DevicePagePool:
         return all(p in self.slot_of for p in pages)
 
     # ------------------------------------------------------------ compute --
+    def _host_slab_ext(self, extra: Optional[np.ndarray]) -> np.ndarray:
+        """Host mirror, optionally extended with a borrow-staging slab
+        (``[k, blocks_per_page, bh, bw]``): a sharded pool maps borrowed
+        pages to slots past ``capacity``, so the extended stack is index-
+        compatible with an extended remap."""
+        if extra is None:
+            return self.host_slab
+        return np.concatenate([self.host_slab, extra], axis=0)
+
+    def _dev_slab_ext(self, extra: Optional[np.ndarray]):
+        if extra is None:
+            return self.slab
+        return jnp.concatenate(
+            [self.slab, self._put(jnp.asarray(extra, self.dtype))], axis=0)
+
     def gather_rows(self, dev_map: np.ndarray, grid: BlockGrid,
-                    rows: np.ndarray, pad: bool = False):
+                    rows: np.ndarray, pad: bool = False,
+                    extra: Optional[np.ndarray] = None):
         """Rows of the virtual 2-D tensor, gathered from the resident
         slab.  Pallas mode runs ``dedup_embedding`` per column stripe;
         xla mode one jitted gather; host mode a numpy fancy-index gather
         from the slab mirror (returns np.ndarray).
+
+        ``extra`` appends a fixed-size borrow-staging slab past the pool's
+        own slots (sharded serving: the remap points borrowed pages at
+        ``capacity + stage_idx``); its shape is constant per pool so the
+        jit modes keep stable input shapes.
 
         For the jit modes ``rows`` is padded to a power-of-two bucket so
         caches stay warm across varying batch row counts; ``pad=True``
@@ -273,9 +302,10 @@ class DevicePagePool:
         if n and (bmap2d[np.unique(rows // bh)] < 0).any():
             return None
         mode = self.mode()
+        l = self.blocks_per_page
         if mode == "host":
-            S, l = self.capacity, self.blocks_per_page
-            flat_rows = self.host_slab.reshape(S * l * bh, bw)   # view
+            slab = self._host_slab_ext(extra)
+            flat_rows = slab.reshape(slab.shape[0] * l * bh, bw)
             rb, off = rows // bh, rows % bh
             out = flat_rows[bmap2d[rb] * bh + off[:, None]]      # [n, gw, bw]
             return out.reshape(n, gw * bw)[:, :width]
@@ -284,27 +314,33 @@ class DevicePagePool:
         ids = np.full(_pad_pow2(max(n, 1)), rows[0] if n else 0, np.int32)
         ids[:n] = rows
         if mode == "pallas":
+            slab = self._dev_slab_ext(extra)
+            pool = slab.reshape(slab.shape[0] * l, bh, bw)
             out = ops.dedup_embedding_striped(
-                jnp.asarray(ids), self.flat_pool(), jnp.asarray(bmap2d),
-                width=width)
+                self._put(jnp.asarray(ids)), pool,
+                self._put(jnp.asarray(bmap2d)), width=width)
         else:
-            out = _gather_rows_xla(self.slab, jnp.asarray(bmap2d),
-                                   jnp.asarray(ids), bh=bh, width=width)
+            out = _gather_rows_xla(self._dev_slab_ext(extra),
+                                   self._put(jnp.asarray(bmap2d)),
+                                   self._put(jnp.asarray(ids)),
+                                   bh=bh, width=width)
         return out if pad else out[:n]
 
-    def virtual_matmul(self, dev_map: np.ndarray, grid: BlockGrid, x):
+    def virtual_matmul(self, dev_map: np.ndarray, grid: BlockGrid, x,
+                       extra: Optional[np.ndarray] = None):
         """``x @ W_virtual`` with W never densified: dedup_matmul streams
         slab blocks through the scalar-prefetched block map (pallas);
         host mode runs the same k-loop blockwise in numpy against the
-        slab mirror."""
+        slab mirror.  ``extra`` as in :meth:`gather_rows`."""
         bh, bw = self.block_shape
         gh, gw = grid.grid
         K, N = grid.shape2d
         bmap2d = dev_map.reshape(gh, gw)
         mode = self.mode()
+        l = self.blocks_per_page
         if mode == "host":
-            S, l = self.capacity, self.blocks_per_page
-            blocks = self.host_slab.reshape(S * l, bh, bw)
+            slab = self._host_slab_ext(extra)
+            blocks = slab.reshape(slab.shape[0] * l, bh, bw)
             x = np.asarray(x, dtype=np.float32)
             xp = x
             if x.shape[-1] != gh * bh:
@@ -324,21 +360,28 @@ class DevicePagePool:
                 widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
                 x = jnp.pad(x, widths)
             bm = 128 if jax.default_backend() == "tpu" else 8
-            y = ops.dedup_matmul(x, self.flat_pool(), jnp.asarray(bmap2d),
-                                 bm=bm)
+            slab = self._dev_slab_ext(extra)
+            pool = slab.reshape(slab.shape[0] * l, bh, bw)
+            y = ops.dedup_matmul(self._put(x), pool,
+                                 self._put(jnp.asarray(bmap2d)), bm=bm)
             return y[..., :N]
         if x.shape[-1] != gh * bh:      # _matmul_xla slices x to K itself
             assert x.shape[-1] == K, (x.shape, K)
-        return _matmul_xla(self.slab, jnp.asarray(bmap2d), x, grid=grid)
+        return _matmul_xla(self._dev_slab_ext(extra),
+                           self._put(jnp.asarray(bmap2d)), self._put(x),
+                           grid=grid)
 
-    def unblock(self, dev_map: np.ndarray, grid: BlockGrid):
+    def unblock(self, dev_map: np.ndarray, grid: BlockGrid,
+                extra: Optional[np.ndarray] = None):
         """Full tensor reassembled from resident slab blocks (the LM
         model-switch path; np from the mirror in host mode, on-device
-        otherwise)."""
+        otherwise).  ``extra`` as in :meth:`gather_rows`."""
+        l = self.blocks_per_page
+        bh, bw = self.block_shape
         if self.mode() == "host":
             from ..core.blocks import unblock_tensor
-            S, l = self.capacity, self.blocks_per_page
-            bh, bw = self.block_shape
-            blocks = self.host_slab.reshape(S * l, bh, bw)[dev_map]
+            slab = self._host_slab_ext(extra)
+            blocks = slab.reshape(slab.shape[0] * l, bh, bw)[dev_map]
             return unblock_tensor(blocks, grid)
-        return _unblock_xla(self.slab, jnp.asarray(dev_map), grid=grid)
+        return _unblock_xla(self._dev_slab_ext(extra),
+                            self._put(jnp.asarray(dev_map)), grid=grid)

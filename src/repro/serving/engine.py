@@ -163,7 +163,16 @@ class ServeStats:
     overlapped: bool = False         # engine ran with overlap=True
     device_batches: int = 0          # batches computed against the HBM slab
     dense_fallbacks: int = 0         # device batches that fell back to host
+    # -- sharded serving (serving/shard_pool.py) --
+    borrow_pages: int = 0            # minority pages staged cross-shard
+    borrow_seconds: float = 0.0      # virtual fetch-channel time on borrows
+    borrow_mirror_hits: int = 0      # borrows served from an owner's mirror
+    borrow_store_faults: int = 0     # borrows that first faulted the owner
+    shard_batches: Dict[int, int] = dataclasses.field(default_factory=dict)
     latencies: List[float] = dataclasses.field(default_factory=list)
+    # per-batch virtual fetch-channel seconds (storage + interconnect):
+    # deterministic, so placement policies compare free of wall noise
+    fetch_latencies: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:
@@ -444,6 +453,8 @@ class EmbeddingServingEngine(_PrefetchingEngine):
         self.embed_tensor = embed_tensor
         self.scheduler: BatchScheduler = make_scheduler(scheduler)
         self.prefetcher = prefetcher
+        if prefetcher is not None and hasattr(prefetcher, "attach_scheduler"):
+            prefetcher.attach_scheduler(self.scheduler)
         self.overlap = overlap
         self.timeline = FetchComputeTimeline()
         self.stats = ServeStats(overlapped=overlap)
@@ -453,12 +464,19 @@ class EmbeddingServingEngine(_PrefetchingEngine):
     def submit(self, model: str, docs: np.ndarray) -> None:
         """Queue a request batch; its page working set is estimated here
         (pure page-map arithmetic, no weight access) so the scheduler can
-        do affinity placement without touching storage."""
+        do affinity placement without touching storage.  On a sharded
+        server the router's placement decision rides along too (advisory:
+        the server re-routes at run time, identically unless a repack
+        intervened)."""
         rows = np.unique(docs)
         pages = self.server.embedding_rows_pages(model, self.embed_tensor,
                                                  rows)
+        router = getattr(self.server, "router", None)
+        shard = router.route(pages, record=False).shard \
+            if router is not None else None
         self.scheduler.submit(model, docs, pages=pages,
-                              pages_gen=self.server.store.pack_generation)
+                              pages_gen=self.server.store.pack_generation,
+                              shard=shard)
 
     def _head_dev(self, model: str):
         head = self._dev_heads.get(model)
@@ -483,6 +501,8 @@ class EmbeddingServingEngine(_PrefetchingEngine):
             fetch_t = self.server.access_pages_grouped(model, pages)
         else:
             fetch_t = self.server.access_pages(model, pages)
+        if self.prefetcher is not None:
+            self.prefetcher.note_demand(pages)     # lookahead hit accounting
         t0 = time.perf_counter()
         logits = None
         if self.server.backend == "device":
@@ -520,6 +540,7 @@ class EmbeddingServingEngine(_PrefetchingEngine):
             # serial: fetch then compute on one channel; the timeline is
             # left untouched so makespan_seconds falls back to the sum
             self.stats.latencies.append(fetch_t + compute_t)
+        self.stats.fetch_latencies.append(fetch_t)
         self.stats.fetch_seconds += fetch_t
         self.stats.compute_seconds += compute_t
         self.stats.requests += len(docs)
@@ -562,6 +583,8 @@ class LMServingEngine(_PrefetchingEngine):
         self.templates = params_template     # model -> params pytree (np)
         self.scheduler: BatchScheduler = make_scheduler(scheduler)
         self.prefetcher = prefetcher
+        if prefetcher is not None and hasattr(prefetcher, "attach_scheduler"):
+            prefetcher.attach_scheduler(self.scheduler)
         self.overlap = overlap
         self.timeline = FetchComputeTimeline()
         self.stats = ServeStats(overlapped=overlap)
@@ -652,9 +675,13 @@ class LMServingEngine(_PrefetchingEngine):
 
     # -- scheduler-driven serving -------------------------------------------
     def submit(self, model: str, prompts: np.ndarray, steps: int = 8) -> None:
-        self.scheduler.submit(model, (prompts, steps),
-                              pages=self.server.store.model_pages(model),
-                              pages_gen=self.server.store.pack_generation)
+        pages = self.server.store.model_pages(model)
+        router = getattr(self.server, "router", None)
+        shard = router.route(pages, record=False).shard \
+            if router is not None else None
+        self.scheduler.submit(model, (prompts, steps), pages=pages,
+                              pages_gen=self.server.store.pack_generation,
+                              shard=shard)
 
     def run(self, max_batches: Optional[int] = None) -> ServeStats:
         n = 0
@@ -666,6 +693,9 @@ class LMServingEngine(_PrefetchingEngine):
                 break
             prompts, steps = batch.payload
             fetch_t = self._load_model(batch.model, grouped=self.overlap)
+            if self.prefetcher is not None:
+                self.prefetcher.note_demand(
+                    self.server.store.model_pages(batch.model))
             out, compute_t = self._compute(batch.model, prompts, steps)
             if self.overlap:
                 issue, done = self.timeline.advance(fetch_t, compute_t)
@@ -673,6 +703,7 @@ class LMServingEngine(_PrefetchingEngine):
                 self.stats.timeline_seconds = self.timeline.makespan
             else:
                 self.stats.latencies.append(fetch_t + compute_t)
+            self.stats.fetch_latencies.append(fetch_t)
             self.stats.fetch_seconds += fetch_t
             self.stats.compute_seconds += compute_t
             self.stats.requests += len(prompts)

@@ -1,21 +1,32 @@
-"""λ-driven page prefetcher (paper Eq. 2, used *ahead* of demand).
+"""Page prefetcher: queue-aware lookahead + λ-driven speculation.
 
-The buffer pool already estimates each model's arrival rate lambda_i
-online (it feeds Eq. 2's superposed-Poisson reuse probability).  The
-prefetcher reuses those same estimates in the other direction: the
-hottest models are the ones whose pages are most likely to be demanded
-next, so during a batch's *compute* phase it pulls their missing pages
-into the pool — the virtual storage time lands on the fetch channel,
-where the engine's double-buffered timeline overlaps it with compute.
+Two planning tiers, consumed in order:
 
-Admission goes through :meth:`BufferPool.prefetch`, which never counts a
-hit/miss (demand-traffic stats stay clean) and refuses to displace pages
-the eviction policy rates hotter.
+1. **Queue-aware lookahead** (deterministic): the scheduler exposes the
+   pending batches' page working sets (``BatchScheduler.
+   pending_batches``, estimated at submit time), so the prefetcher
+   *knows* what is about to be demanded.  Those pages — deduped against
+   the pool's resident set and gated on the packing generation they
+   were minted under — are pulled first.
+2. **λ-driven speculation** (paper Eq. 2): the buffer pool estimates
+   each model's arrival rate online; the hottest models' missing pages
+   are most likely to be demanded next, so any *remaining* idle budget
+   goes to them.
+
+Either way the virtual storage time lands on the fetch channel, where
+the engine's double-buffered timeline overlaps it with compute.
+Admission goes through :meth:`BufferPool.prefetch`, which never counts
+a hit/miss (demand-traffic stats stay clean) and refuses to displace
+pages the eviction policy rates hotter.
+
+``PrefetchStats.lookahead_hits`` is the proof stat: pages issued by the
+lookahead tier that a later demand access actually hit (the engines
+report each batch's demand set via :meth:`Prefetcher.note_demand`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 __all__ = ["PrefetchStats", "Prefetcher"]
 
@@ -25,6 +36,8 @@ class PrefetchStats:
     issued: int = 0            # pages actually loaded ahead of demand
     declined: int = 0          # offers the pool's admission refused
     seconds: float = 0.0       # virtual storage time spent prefetching
+    lookahead_issued: int = 0  # of issued: planned from queued batches
+    lookahead_hits: int = 0    # lookahead pages a demand access then hit
 
 
 class Prefetcher:
@@ -34,16 +47,29 @@ class Prefetcher:
     ``max_pages_per_step``: page budget per :meth:`step` call (one call
     per served batch keeps the fetch channel from drowning in
     speculation).
+    ``lookahead``: how many queued batches to scan for the queue-aware
+    tier (0 disables it).  The engines attach their scheduler via
+    :meth:`attach_scheduler`; without one the prefetcher is pure-λ, the
+    pre-lookahead behavior.
     """
 
     def __init__(self, server, hot_models: int = 2,
-                 max_pages_per_step: int = 4):
+                 max_pages_per_step: int = 4, lookahead: int = 8):
         self.server = server
         self.hot_models = hot_models
         self.max_pages_per_step = max_pages_per_step
+        self.lookahead = lookahead
+        self.scheduler = None
         self.stats = PrefetchStats()
         self._gen = None
+        self._plan_lookahead: Set[int] = set()   # lookahead pages, last plan
+        self._outstanding: Set[int] = set()      # issued, not yet demanded
         self._refresh()
+
+    def attach_scheduler(self, scheduler) -> None:
+        """Give the prefetcher visibility into the pending queue (the
+        engines call this at construction)."""
+        self.scheduler = scheduler
 
     def _refresh(self) -> None:
         """(Re)derive the per-model page working sets from the store's
@@ -59,22 +85,39 @@ class Prefetcher:
         self._model_pages: Dict[str, List[int]] = {
             m: self.server.store.model_pages(m)
             for m in self.server.store.dedup.models}
-        sharers = self.server.store.page_sharers()
-        self._n_sharers = {p: len(ms) for p, ms in sharers.items()}
+        counts = self.server.store.page_sharer_counts()
+        self._n_sharers = {p: int(c) for p, c in enumerate(counts)}
+        self._outstanding.clear()                # stale page ids
         self._gen = gen
 
     # -- planning ------------------------------------------------------------
     def plan(self) -> List[Tuple[str, int]]:
-        """(model, page) prefetch candidates, hottest model first; within
-        a model, most-shared pages first (they serve several queues)."""
+        """(model, page) prefetch candidates: queued batches' pages
+        first (arrival order), then the λ tier — hottest model first,
+        most-shared pages first within a model (they serve several
+        queues)."""
         self._refresh()
-        rates = self.server.pool.model_rates()
-        if not rates:
-            return []
-        hot = sorted(rates, key=rates.get, reverse=True)[: self.hot_models]
         resident = self.server.pool.resident_pages()
         out: List[Tuple[str, int]] = []
         seen = set()
+        self._plan_lookahead = set()
+        # tier 1: what the queue says is coming
+        if self.scheduler is not None and self.lookahead > 0:
+            gen = self.server.store.pack_generation
+            for b in self.scheduler.pending_batches()[: self.lookahead]:
+                if b.pages is None or b.pages_gen != gen:
+                    continue                     # stale or unknown set
+                for p in sorted(b.pages):
+                    if p in resident or p in seen:
+                        continue
+                    out.append((b.model, p))
+                    seen.add(p)
+                    self._plan_lookahead.add(p)
+                    if len(out) >= self.max_pages_per_step:
+                        return out
+        # tier 2: λ speculation with whatever budget remains
+        rates = self.server.pool.model_rates()
+        hot = sorted(rates, key=rates.get, reverse=True)[: self.hot_models]
         for m in hot:
             missing = [p for p in self._model_pages.get(m, ())
                        if p not in resident and p not in seen]
@@ -85,6 +128,19 @@ class Prefetcher:
                 if len(out) >= self.max_pages_per_step:
                     return out
         return out
+
+    # -- accounting ----------------------------------------------------------
+    def note_demand(self, pages) -> None:
+        """The engines report each batch's demand page set here; pages
+        the lookahead tier issued that now get demanded are the
+        lookahead *hits* — the stat proving the queue-aware tier pulled
+        the right pages."""
+        if not self._outstanding:
+            return
+        hit = self._outstanding.intersection(int(p) for p in pages)
+        if hit:
+            self.stats.lookahead_hits += len(hit)
+            self._outstanding -= hit
 
     # -- execution -----------------------------------------------------------
     def step(self, budget_s: Optional[float] = None) -> float:
@@ -116,6 +172,9 @@ class Prefetcher:
                 else:
                     t += storage.transfer_seconds(self.server.page_bytes)
                 issued += 1
+                if page in self._plan_lookahead:
+                    self.stats.lookahead_issued += 1
+                    self._outstanding.add(int(page))
             else:
                 self.stats.declined += 1
         self.stats.issued += issued

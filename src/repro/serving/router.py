@@ -1,0 +1,93 @@
+"""Request router for sharded page-pool serving.
+
+A batch's page working set rarely lives on one shard only; the router
+sends the batch to the shard that *owns the majority of its cover
+pages* (placement score = |pages ∩ shard's owned set|, ties to the
+lowest shard id so routing is deterministic), and splits the set into:
+
+  * ``owned``    — pages placement assigned to the chosen shard.  These
+    are demand-faulted through that shard's own buffer pool (shard-local
+    eviction), preserving the per-shard residency invariant.
+  * ``borrowed`` — the minority pages owned elsewhere.  These are never
+    loaded into the chosen shard's slab; the borrow protocol stages
+    their bytes from an *owning* shard's host mirror (see
+    ``shard_pool.ShardedPagePool.stage_borrows``), charged to the fetch
+    channel like any other miss.
+
+The router is pure placement arithmetic — set intersections over the
+current :class:`~repro.serving.shard_pool.Placement` — so routing a
+batch costs no weight or storage access, exactly like the affinity
+scheduler's page-set scoring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+__all__ = ["RouteDecision", "ShardRouter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    """Where one batch runs, and how its page set splits there."""
+    shard: int
+    owned: Tuple[int, ...]       # pages the chosen shard owns (sorted)
+    borrowed: Tuple[int, ...]    # minority pages owned elsewhere (sorted)
+    pack_generation: int         # placement generation this was routed under
+
+    @property
+    def page_set(self) -> frozenset:
+        return frozenset(self.owned) | frozenset(self.borrowed)
+
+
+class ShardRouter:
+    """Majority-cover routing over a placement provider.
+
+    ``placement_fn`` returns the current
+    :class:`~repro.serving.shard_pool.Placement` (rebuilt per pack
+    generation), so routing decisions can never outlive the packing
+    whose page ids they were made from.
+    """
+
+    def __init__(self, placement_fn: Callable):
+        self._placement = placement_fn
+        # Routing-DECISION counters (what the router asked for).  What
+        # actually executed — borrows staged, fallbacks, per-shard batch
+        # totals — lives on the serving ServeStats; the two differ when
+        # e.g. an oversized borrow set is refused staging.
+        self.batches_per_shard: Dict[int, int] = {}
+        self.borrowed_pages = 0
+
+    def choose(self, pages) -> int:
+        """The shard owning the majority of ``pages`` (ties -> lowest)."""
+        pl = self._placement()
+        ps = set(pages)
+        if not ps or pl.num_shards == 1:
+            return 0
+        best, best_score = 0, -1
+        for s in range(pl.num_shards):
+            score = len(ps & pl.owned_sets[s])
+            if score > best_score:
+                best, best_score = s, score
+        return best
+
+    def split(self, pages, shard: int) -> Tuple[List[int], List[int]]:
+        """(owned, borrowed) of ``pages`` relative to ``shard``."""
+        pl = self._placement()
+        owned, borrowed = [], []
+        for p in sorted(set(int(p) for p in pages)):
+            (owned if shard in pl.shards_of(p) else borrowed).append(p)
+        return owned, borrowed
+
+    def route(self, pages, record: bool = True) -> RouteDecision:
+        """Route one batch; ``record=False`` recomputes the (same,
+        deterministic) decision without double-counting stats."""
+        pl = self._placement()
+        shard = self.choose(pages)
+        owned, borrowed = self.split(pages, shard)
+        if record:
+            self.batches_per_shard[shard] = \
+                self.batches_per_shard.get(shard, 0) + 1
+            self.borrowed_pages += len(borrowed)
+        return RouteDecision(shard, tuple(owned), tuple(borrowed),
+                             pl.pack_generation)

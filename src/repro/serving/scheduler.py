@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict, deque
-from typing import Deque, Dict, Iterable, Optional, Set
+from typing import Deque, Dict, Iterable, List, Optional, Set
 
 __all__ = ["ScheduledBatch", "BatchScheduler", "FifoScheduler",
            "RoundRobinScheduler", "DedupAffinityScheduler",
@@ -38,6 +38,7 @@ class ScheduledBatch:
     seq: int                           # global arrival order
     pages: Optional[frozenset] = None  # estimated page working set
     pages_gen: Optional[int] = None    # packing generation pages came from
+    shard: Optional[int] = None        # routed shard (sharded serving)
 
 
 class BatchScheduler:
@@ -50,13 +51,17 @@ class BatchScheduler:
 
     # -- submission ----------------------------------------------------------
     def submit(self, model: str, payload, pages: Optional[Iterable] = None,
-               pages_gen: Optional[int] = None) -> ScheduledBatch:
+               pages_gen: Optional[int] = None,
+               shard: Optional[int] = None) -> ScheduledBatch:
         """``pages_gen`` records which ``ModelStore.pack_generation`` the
         page ids were minted under; engines use it to spot batches whose
-        cached working set a later repack has invalidated."""
+        cached working set a later repack has invalidated.  ``shard`` is
+        the router's placement decision for the batch (sharded serving);
+        it is advisory — the server re-derives it at run time so a
+        repack between submit and run cannot misroute."""
         b = ScheduledBatch(model, payload, self._seq,
                            frozenset(pages) if pages is not None else None,
-                           pages_gen)
+                           pages_gen, shard)
         self._seq += 1
         self._enqueue(b)
         return b
@@ -73,6 +78,15 @@ class BatchScheduler:
 
     def pending(self) -> int:
         raise NotImplementedError
+
+    def pending_batches(self) -> List[ScheduledBatch]:
+        """Queued batches in arrival order, *without* dequeuing — the
+        queue-aware prefetcher plans lookahead from these page sets
+        before spending any idle budget on λ speculation.  Default: an
+        empty view, so a scheduler subclass written before this hook
+        existed simply gets no lookahead (pure-λ prefetch) instead of a
+        crash."""
+        return []
 
     def __bool__(self) -> bool:
         return self.pending() > 0
@@ -93,6 +107,9 @@ class FifoScheduler(BatchScheduler):
 
     def pending(self) -> int:
         return len(self._q)
+
+    def pending_batches(self) -> List[ScheduledBatch]:
+        return list(self._q)
 
 
 class RoundRobinScheduler(BatchScheduler):
@@ -121,6 +138,10 @@ class RoundRobinScheduler(BatchScheduler):
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def pending_batches(self) -> List[ScheduledBatch]:
+        return sorted((b for q in self._queues.values() for b in q),
+                      key=lambda b: b.seq)
 
 
 class DedupAffinityScheduler(BatchScheduler):
@@ -171,6 +192,10 @@ class DedupAffinityScheduler(BatchScheduler):
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def pending_batches(self) -> List[ScheduledBatch]:
+        return sorted((b for q in self._queues.values() for b in q),
+                      key=lambda b: b.seq)
 
 
 SCHEDULERS = {

@@ -1,0 +1,717 @@
+"""Sharded page-pool serving: partition the dedup page pool across a
+device mesh with dedup-aware placement and cross-shard borrowing.
+
+The paper's argument one level up the hierarchy: dedup-aware storage
+keeps a database serving when the working set exceeds one tier's
+memory; when the deduplicated page pool exceeds a *single
+accelerator's* HBM, the pool should shard across a device mesh instead
+of thrashing one slab (DESIGN.md §5).
+
+Three pieces:
+
+  * **Placement** — a total, deterministic ``page -> shards``
+    assignment, rebuilt per packing generation.  ``hash`` is the
+    baseline (``pid % num_shards``, single owner, no replication).
+    ``sharers`` is dedup-aware: it uses ``ModelStore.page_sharers()``
+    statistics to *replicate* the hottest shared pages on every shard
+    (bounded by ``replicate_frac`` of a shard's capacity — these are
+    the pages every co-served variant touches, so local copies kill
+    cross-shard traffic) and to *partition* the remaining pages by
+    model affinity: each model's singleton pages land together on the
+    model's home shard (greedy balanced bin-pack), so a batch routes to
+    a shard that owns nearly all of its cover set.
+  * **Per-shard pools** — each shard has its own
+    :class:`~repro.core.bufferpool.BufferPool` (shard-local eviction,
+    same Eq.-1/Eq.-2 policies) driving its own
+    :class:`~repro.serving.device_pool.DevicePagePool` slab, optionally
+    pinned to one device of a serving mesh.  The PR-2 residency
+    invariant becomes per-shard: *each shard's slab == its pool's
+    resident set*, plus the global placement invariant: *a page is only
+    ever resident on shards its placement assigned it* (``on_load``
+    raises otherwise).
+  * **Borrow staging** — the minority pages of a routed batch (owned
+    elsewhere; see ``serving/router.py``) are never loaded into the
+    executing shard's slab.  Their bytes are staged from an *owning*
+    shard's host mirror into a fixed borrow slab appended past the
+    executing pool's slots (``capacity + stage_idx``), so one extended
+    remap serves the whole batch through the same dedup kernels.  A
+    borrowed page absent everywhere is first demand-faulted into its
+    owning shard (so the owner's pool warms and future borrows hit the
+    mirror); the caller charges owner faults to storage and mirror
+    copies to the interconnect — all on the fetch channel, like any
+    other miss.
+
+:class:`ShardedWeightServer` packages this behind the exact
+:class:`~repro.serving.engine.WeightServer` surface the engines drive,
+so ``EmbeddingServingEngine`` / ``LMServingEngine`` serve sharded
+without modification; at ``shards=1`` routing is the identity, nothing
+is ever borrowed, and behavior matches the single-slab device backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from ..core.bufferpool import BufferPool
+from ..core.store import ModelStore, VirtualTensor
+from .device_pool import DevicePagePool
+from .engine import ServeStats, StorageModel, WeightServer
+from .router import RouteDecision, ShardRouter
+
+__all__ = ["PLACEMENTS", "Placement", "hash_placement", "sharers_placement",
+           "make_placement", "ShardedPagePool", "ShardedWeightServer"]
+
+PLACEMENTS = ("hash", "sharers")
+
+
+# --------------------------------------------------------------- placement --
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Total, deterministic page->shards assignment for one packing."""
+    num_shards: int
+    policy: str
+    owners: Tuple[Tuple[int, ...], ...]   # pid -> sorted owning shards
+    owned_sets: Tuple[frozenset, ...]     # shard -> pages it owns
+    replicated: frozenset                 # pages with >1 owner
+    pack_generation: int
+
+    def shards_of(self, pid: int) -> Tuple[int, ...]:
+        return self.owners[pid]
+
+    def primary(self, pid: int) -> int:
+        return self.owners[pid][0]
+
+
+def _finalize(owners: List[Tuple[int, ...]], num_shards: int, policy: str,
+              generation: int) -> Placement:
+    owned: List[set] = [set() for _ in range(num_shards)]
+    for pid, ss in enumerate(owners):
+        assert ss, f"placement left page {pid} unowned"
+        for s in ss:
+            owned[s].add(pid)
+    replicated = frozenset(p for p, ss in enumerate(owners) if len(ss) > 1)
+    return Placement(num_shards, policy, tuple(owners),
+                     tuple(frozenset(s) for s in owned), replicated,
+                     generation)
+
+
+def hash_placement(num_pages: int, num_shards: int,
+                   generation: int = 0) -> Placement:
+    """Baseline: ``pid % num_shards``.  Total, deterministic, single
+    owner, placement-oblivious — every batch borrows ~(S-1)/S of its
+    cover set."""
+    owners = [(pid % num_shards,) for pid in range(num_pages)]
+    return _finalize(owners, num_shards, "hash", generation)
+
+
+def sharers_placement(num_pages: int, num_shards: int,
+                      sharers: Dict[int, frozenset],
+                      replicate_budget: Optional[int] = None,
+                      generation: int = 0) -> Placement:
+    """Dedup-aware placement from ``ModelStore.page_sharers()``.
+
+    Pages shared by >= 2 models are replicated on every shard, hottest
+    (most sharers) first, up to ``replicate_budget`` pages (None:
+    unbounded) — these are the pages every co-served variant touches,
+    so a local copy on each shard kills the cross-shard traffic they
+    would otherwise generate on every batch.  The rest partitions by
+    model affinity: singleton pages anchor to their one sharer, models
+    are greedily bin-packed (descending page weight) onto the
+    least-loaded shard, and each over-budget shared page lands on the
+    least-loaded *home shard of one of its sharers* (so it stays local
+    to at least one of the models that reuse it).  Ties break
+    deterministically (page id / model name / shard id), so two
+    rebuilds over the same packing always agree.
+    """
+    owners: List[Optional[Tuple[int, ...]]] = [None] * num_pages
+    shared: List[int] = []
+    if num_shards > 1:
+        shared = sorted((p for p in range(num_pages)
+                         if len(sharers.get(p, ())) >= 2),
+                        key=lambda p: (-len(sharers[p]), p))
+        budget = len(shared) if replicate_budget is None \
+            else max(0, int(replicate_budget))
+        for p in shared[:budget]:
+            owners[p] = tuple(range(num_shards))
+        shared = shared[budget:]                 # partitioned below
+    # singleton pages anchor their one sharer; model homes bin-pack
+    shared_set = set(shared)
+    singles = [p for p in range(num_pages)
+               if owners[p] is None and p not in shared_set]
+    anchor: Dict[int, Optional[str]] = {}
+    weight: Dict[Optional[str], int] = {}
+    for p in singles:
+        ms = sharers.get(p)
+        a = min(ms) if ms else None
+        anchor[p] = a
+        weight[a] = weight.get(a, 0) + 1
+    load = [0] * num_shards
+    home: Dict[Optional[str], int] = {}
+    for m in sorted(weight, key=lambda m: (-weight[m], str(m))):
+        s = min(range(num_shards), key=lambda i: (load[i], i))
+        home[m] = s
+        load[s] += weight[m]
+    for p in singles:
+        owners[p] = (home[anchor[p]],)
+    # over-budget shared pages: least-loaded home among their sharers
+    for p in shared:
+        cand = sorted({home[m] for m in sharers.get(p, ()) if m in home})
+        if not cand:
+            cand = list(range(num_shards))
+        s = min(cand, key=lambda i: (load[i], i))
+        owners[p] = (s,)
+        load[s] += 1
+    return _finalize(owners, num_shards, "sharers", generation)  # type: ignore[arg-type]
+
+
+def make_placement(policy: str, store: ModelStore, num_shards: int,
+                   replicate_budget: Optional[int] = None) -> Placement:
+    """Build a placement for the store's *current* packing."""
+    if policy not in PLACEMENTS:
+        raise ValueError(f"unknown placement {policy!r}; have {PLACEMENTS}")
+    pk = store.packing                     # settle the packing first: the
+    gen = store.pack_generation            # getter may repack (gen bump)
+    if policy == "hash":
+        return hash_placement(pk.num_pages, num_shards, gen)
+    return sharers_placement(pk.num_pages, num_shards, store.page_sharers(),
+                             replicate_budget, gen)
+
+
+# -------------------------------------------------------------- shard pool --
+class ShardedPagePool:
+    """N per-shard (BufferPool, DevicePagePool) pairs + placement +
+    borrow staging.  Also quacks like a single ``DevicePagePool`` for
+    aggregate reporting (``capacity`` / ``loads`` / ``evicts``)."""
+
+    def __init__(self, store: ModelStore, num_shards: int,
+                 capacity_per_shard: int, placement: str = "sharers",
+                 policy: str = "optimized_mru", kernel_mode: str = "auto",
+                 replicate_frac: float = 0.5,
+                 borrow_capacity: Optional[int] = None,
+                 devices: Optional[Sequence] = None):
+        if placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {placement!r}; "
+                             f"have {PLACEMENTS}")
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.store = store
+        self.num_shards = int(num_shards)
+        self.capacity_per_shard = int(capacity_per_shard)
+        self.placement_policy = placement
+        self.replicate_frac = float(replicate_frac)
+        self.borrow_capacity = int(borrow_capacity
+                                   if borrow_capacity is not None
+                                   else capacity_per_shard)
+        devs = list(devices) if devices else []
+        self.pools: List[DevicePagePool] = [
+            DevicePagePool(store, self.capacity_per_shard,
+                           kernel_mode=kernel_mode,
+                           device=devs[s % len(devs)] if devs else None)
+            for s in range(self.num_shards)]
+        bh, bw = store.cfg.dedup.block_shape
+        l = store.cfg.blocks_per_page
+        self._stage_host = [np.zeros((self.borrow_capacity, l, bh, bw),
+                                     np.float32)
+                            for _ in range(self.num_shards)]
+        self._staged: List[Dict[int, int]] = [dict()
+                                              for _ in range(self.num_shards)]
+        self._placement_obj: Optional[Placement] = None
+        self.buffer_pools: List[BufferPool] = [
+            store.make_buffer_pool(self.capacity_per_shard, policy,
+                                   on_load=self._mk_on_load(s),
+                                   on_evict=self.pools[s].evict)
+            for s in range(self.num_shards)]
+        self.view = _ShardedPoolView(self)
+        self.borrow_mirror_hits = 0
+        self.borrow_store_faults = 0
+
+    def _mk_on_load(self, shard: int):
+        def on_load(pid):
+            pid = int(pid)
+            owners = self.placement().shards_of(pid)
+            if shard not in owners:
+                raise RuntimeError(
+                    f"placement invariant violated: page {pid} loading on "
+                    f"shard {shard} but placement assigned {owners}")
+            self.pools[shard].load(pid)
+        return on_load
+
+    # ----------------------------------------------------------- placement --
+    def placement(self) -> Placement:
+        pk = self.store.packing            # may repack: read before gen
+        gen = self.store.pack_generation
+        pl = self._placement_obj
+        if pl is not None and pl.pack_generation == gen:
+            return pl
+        budget = None
+        if self.placement_policy == "sharers":
+            budget = max(0, int(self.replicate_frac
+                                * self.capacity_per_shard))
+        pl = make_placement(self.placement_policy, self.store,
+                            self.num_shards, replicate_budget=budget)
+        self._placement_obj = pl
+        return pl
+
+    def flush(self) -> None:
+        """Store repacked: every shard slab, staging slab, and the
+        placement itself refer to dead page ids."""
+        for p in self.pools:
+            p.flush()
+        for d in self._staged:
+            d.clear()
+        self._placement_obj = None
+
+    # ------------------------------------------------------------- borrows --
+    def staged(self, shard: int) -> Dict[int, int]:
+        return self._staged[shard]
+
+    def stage_borrows(self, shard: int, pages, model
+                      ) -> Optional[Tuple[Dict[int, int], int, int]]:
+        """Stage ``pages`` (owned elsewhere) into ``shard``'s borrow slab.
+
+        Replaces the shard's previous staging (borrows are per-batch
+        transients, never slab residents).  Pages not resident on any
+        owning shard are demand-faulted into their primary owner's pool
+        first — loads only ever happen on owners, and the next borrow of
+        the same page hits the mirror.  Returns ``(staged map,
+        mirror_hits, owner_faults)``, or None when the borrow set cannot
+        fit the staging slab (caller falls back to the host)."""
+        pages = sorted(set(int(p) for p in pages))
+        st = self._staged[shard]
+        st.clear()
+        if not pages:
+            return {}, 0, 0
+        if len(pages) > self.borrow_capacity:
+            return None
+        pl = self.placement()
+        buf = self._stage_host[shard]
+        hits = faults = 0
+        for i, pid in enumerate(pages):
+            owners = pl.shards_of(pid)
+            assert shard not in owners, \
+                f"page {pid} is owned by shard {shard}; not a borrow"
+            owner = next((o for o in owners
+                          if pid in self.pools[o].slot_of), None)
+            if owner is None:
+                owner = owners[0]
+                self.buffer_pools[owner].access(model, pid)
+                faults += 1
+            else:
+                hits += 1
+            buf[i] = self.pools[owner].host_slab[
+                self.pools[owner].slot_of[pid]]
+            st[pid] = i
+        self.borrow_mirror_hits += hits
+        self.borrow_store_faults += faults
+        return dict(st), hits, faults
+
+    # --------------------------------------------------------------- remap --
+    def remap(self, shard: int, vt: VirtualTensor,
+              key: Optional[Tuple[str, str]] = None, strict: bool = True
+              ) -> Tuple[Optional[np.ndarray], bool]:
+        """Extended slot remap for ``shard``: owned pages resolve to the
+        shard's slab slots, staged borrows to ``capacity + stage_idx``.
+        Returns ``(dev_map, uses_extra)``; a map that touches staged
+        slots is rebuilt per batch (staging indices are transient), maps
+        with no staged pages delegate to the shard pool's cached remap.
+        """
+        staged = self._staged[shard]
+        pool = self.pools[shard]
+        touched = [p for p in vt.page_ids if p in staged] if staged else []
+        if not touched:
+            return pool.remap(vt, key=key, strict=strict), False
+        l = pool.blocks_per_page
+        ext = pool._page_to_slot.copy()
+        for pid in touched:
+            if ext[pid] < 0:
+                ext[pid] = pool.capacity + staged[pid]
+        slots = ext[vt.block_map // l]
+        holes = slots < 0
+        dev_map = np.where(holes, -1,
+                           slots * l + vt.block_map % l).astype(np.int32)
+        if strict and holes.any():
+            return None, True
+        return dev_map, True
+
+    # ------------------------------------------------------------- compute --
+    def _extra(self, shard: int, uses_extra: bool) -> Optional[np.ndarray]:
+        return self._stage_host[shard] if uses_extra else None
+
+    def _unpin(self, shard: int, out):
+        """Results computed on a pinned shard device come back committed
+        there; move them to the process default device so downstream
+        consumers (head matmuls, decode steps) can mix results from
+        different shards without cross-device placement errors.
+        (``jax.device_put`` with no target is the identity on committed
+        arrays — the target must be explicit.)"""
+        if out is None or self.pools[shard].device is None \
+                or isinstance(out, np.ndarray):
+            return out
+        import jax
+        return jax.device_put(out, jax.devices()[0])
+
+    def gather_rows(self, shard: int, dev_map, grid, rows, pad: bool = False,
+                    uses_extra: bool = False):
+        return self._unpin(shard, self.pools[shard].gather_rows(
+            dev_map, grid, rows, pad=pad,
+            extra=self._extra(shard, uses_extra)))
+
+    def virtual_matmul(self, shard: int, dev_map, grid, x,
+                       uses_extra: bool = False):
+        return self._unpin(shard, self.pools[shard].virtual_matmul(
+            dev_map, grid, x, extra=self._extra(shard, uses_extra)))
+
+    def unblock(self, shard: int, dev_map, grid, uses_extra: bool = False):
+        return self._unpin(shard, self.pools[shard].unblock(
+            dev_map, grid, extra=self._extra(shard, uses_extra)))
+
+    # ----------------------------------------------------------- reporting --
+    @property
+    def capacity(self) -> int:
+        return sum(p.capacity for p in self.pools)
+
+    @property
+    def loads(self) -> int:
+        return sum(p.loads for p in self.pools)
+
+    @property
+    def evicts(self) -> int:
+        return sum(p.evicts for p in self.pools)
+
+    def resident_pages(self) -> Set[int]:
+        out: Set[int] = set()
+        for p in self.pools:
+            out |= p.resident_pages()
+        return out
+
+    def stacked_slab(self, mesh=None):
+        """Global mesh view of the pool: the per-shard slabs stacked to
+        ``[num_shards, capacity, blocks_per_page, bh, bw]`` and laid out
+        with ``NamedSharding(P("shard", ...))`` when a serving mesh is
+        given (``launch.mesh.make_shard_mesh``) — the sharded lowering
+        the dry-run variants exercise at pod scale.  None in host mode
+        (no device slabs exist there)."""
+        import jax
+        import jax.numpy as jnp
+        if any(p.slab is None for p in self.pools):
+            return None
+        # stage through the host: the per-shard slabs are committed to
+        # different devices, so stacking them directly would mix devices
+        stacked = np.stack([np.asarray(p.slab) for p in self.pools])
+        if mesh is None:
+            return jnp.asarray(stacked)
+        from ..distributed.sharding import slab_sharding
+        return jax.device_put(stacked, slab_sharding(mesh, stacked.shape))
+
+    def check_invariants(self) -> None:
+        """Per-shard residency invariant (slab == pool members, slots
+        consistent) plus the global placement invariant (no page
+        resident on a shard placement didn't assign it).  Raises
+        AssertionError on violation — the churn tests call this after
+        every access."""
+        pl = self.placement()
+        for s in range(self.num_shards):
+            dev, bp = self.pools[s], self.buffer_pools[s]
+            assert bp.resident_pages() == dev.resident_pages(), \
+                f"shard {s}: pool resident set != slab occupancy"
+            occ = dev.occupied_slots()
+            assert len(occ) == len(dev.slot_of), f"shard {s}: slot aliasing"
+            assert len(occ) + len(dev._free) == dev.capacity
+            for pid in dev.resident_pages():
+                assert s in pl.shards_of(pid), \
+                    f"page {pid} resident on shard {s}, owned by " \
+                    f"{pl.shards_of(pid)}"
+
+
+class _ShardedPoolView:
+    """Union read-view over the per-shard buffer pools — quacks enough
+    like one :class:`BufferPool` for the engines (scheduler residency),
+    benchmarks (hit stats) and the λ-prefetcher (placement-routed
+    admission)."""
+
+    def __init__(self, sharded: ShardedPagePool):
+        self._s = sharded
+
+    def resident_pages(self) -> Set[int]:
+        out: Set[int] = set()
+        for bp in self._s.buffer_pools:
+            out |= bp.resident_pages()
+        return out
+
+    def _sum(self, attr: str) -> int:
+        return sum(getattr(bp, attr) for bp in self._s.buffer_pools)
+
+    @property
+    def hits(self) -> int:
+        return self._sum("hits")
+
+    @property
+    def misses(self) -> int:
+        return self._sum("misses")
+
+    @property
+    def evictions(self) -> int:
+        return self._sum("evictions")
+
+    @property
+    def prefetches(self) -> int:
+        return self._sum("prefetches")
+
+    @property
+    def prefetch_declined(self) -> int:
+        return self._sum("prefetch_declined")
+
+    @property
+    def hit_ratio(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def reset_stats(self) -> None:
+        for bp in self._s.buffer_pools:
+            bp.reset_stats()
+
+    def model_rates(self) -> Dict:
+        """Per-model λ estimates summed over shards (each shard sees a
+        slice of the model's demand stream)."""
+        out: Dict = {}
+        for bp in self._s.buffer_pools:
+            for m, lam in bp.model_rates().items():
+                out[m] = out.get(m, 0.0) + lam
+        return out
+
+    def prefetch(self, model, page) -> bool:
+        """Placement-routed speculative admission: a page prefetches into
+        its primary owning shard (never a non-owner), declined when
+        already resident on any owner."""
+        pid = int(page)
+        pl = self._s.placement()
+        owners = pl.shards_of(pid)
+        if any(pid in self._s.pools[o].slot_of for o in owners):
+            return False
+        return self._s.buffer_pools[owners[0]].prefetch(model, pid)
+
+
+# ----------------------------------------------------------- sharded server --
+class ShardedWeightServer(WeightServer):
+    """Page-granular weight access across a sharded device page pool.
+
+    Drop-in for ``WeightServer(backend="device")``: the engines call the
+    same ``access_pages`` / ``access_pages_grouped`` / ``device_*``
+    surface.  Each batch is routed to the shard owning the majority of
+    its cover pages; owned pages fault through that shard's buffer pool
+    (storage-charged), minority pages are borrowed from their owning
+    shards' host mirrors into the executing shard's staging slab
+    (interconnect-charged) — both on the fetch channel.
+
+    ``capacity_pages`` is PER SHARD (one accelerator's slab), so adding
+    shards adds aggregate capacity, which is the point: a working set
+    that thrashes one slab partitions across the mesh.
+    """
+
+    def __init__(self, store: ModelStore, capacity_pages: int,
+                 policy: str = "optimized_mru",
+                 storage: Optional[StorageModel] = None,
+                 shards: int = 2, placement: str = "sharers",
+                 kernel_mode: str = "auto",
+                 interconnect: Optional[StorageModel] = None,
+                 replicate_frac: float = 0.5,
+                 borrow_capacity: Optional[int] = None,
+                 devices: Optional[Sequence] = None):
+        self.store = store
+        self.backend = "device"
+        self.sharded = ShardedPagePool(
+            store, shards, capacity_pages, placement=placement,
+            policy=policy, kernel_mode=kernel_mode,
+            replicate_frac=replicate_frac, borrow_capacity=borrow_capacity,
+            devices=devices)
+        self.device_pool = self.sharded        # aggregate reporting view
+        self.pool = self.sharded.view          # union view for the engines
+        self.router = ShardRouter(self.sharded.placement)
+        self.storage = storage or StorageModel("ssd")
+        # Borrow transfers move host-mirror bytes across the mesh, not
+        # through the storage tier: charged at host-DRAM/interconnect
+        # rates unless told otherwise.
+        self.interconnect = interconnect or StorageModel("dram")
+        bh, bw = store.cfg.dedup.block_shape
+        self.page_bytes = store.cfg.blocks_per_page * bh * bw \
+            * store.native_page_dtype().itemsize
+        self.stats = ServeStats()
+        self._pool_arr: Optional[np.ndarray] = None
+        self._pool_gen = store.pack_generation
+        self._route: Optional[RouteDecision] = None
+
+    @property
+    def num_shards(self) -> int:
+        return self.sharded.num_shards
+
+    # -------------------------------------------------------- invalidation --
+    def _sync_store(self) -> None:
+        self.store.packing                     # force repack if stale
+        if self._pool_gen == self.store.pack_generation:
+            return
+        for bp in self.sharded.buffer_pools:
+            bp.invalidate_resident()           # fires on_evict -> shard slab
+        self.sharded.flush()
+        sharers, locality = self.store.page_metadata()
+        for bp in self.sharded.buffer_pools:
+            bp.page_sharers = sharers
+            bp.page_locality = locality
+            bp.meta.clear()
+        self._pool_arr = None
+        self._route = None
+        self._pool_gen = self.store.pack_generation
+
+    # -------------------------------------------------------------- routing --
+    def _resolve_route(self, pages) -> RouteDecision:
+        """The device compute paths re-derive their routing instead of
+        trusting ambient state: a page subset of the last *accessed*
+        batch reuses that batch's shard (so an LM model-switch assembles
+        every tensor on the one shard its pages were faulted/staged on);
+        anything else recomputes the deterministic decision."""
+        pl = self.sharded.placement()
+        ps = set(int(p) for p in pages)
+        r = self._route
+        if r is not None and r.pack_generation == pl.pack_generation \
+                and ps <= r.page_set:
+            owned, borrowed = self.router.split(ps, r.shard)
+            return RouteDecision(r.shard, tuple(owned), tuple(borrowed),
+                                 pl.pack_generation)
+        return self.router.route(ps, record=False)
+
+    # --------------------------------------------------------------- access --
+    def _record_route(self, route: RouteDecision) -> None:
+        self._route = route
+        self.stats.shard_batches[route.shard] = \
+            self.stats.shard_batches.get(route.shard, 0) + 1
+
+    def access_pages(self, model: str, page_ids) -> float:
+        """Serial access: owned pages one at a time through the routed
+        shard's pool (every miss pays its own seek), then the borrow
+        staging; returns total virtual seconds."""
+        self._sync_store()
+        route = self.router.route(list(page_ids))
+        self._record_route(route)
+        bp = self.sharded.buffer_pools[route.shard]
+        try:                      # pinned, like the single-slab server:
+            flags = bp.access_group(model, list(route.owned))
+        except ValueError:        # group can't co-reside: unpinned
+            flags = [bp.access(model, p) for p in route.owned]
+        t = 0.0
+        for hit in flags:
+            if not hit:
+                t += self.storage.fetch_seconds(self.page_bytes)
+                self.stats.pages_fetched += 1
+        t += self._borrow(route, model, grouped=False)
+        self.stats.fetch_seconds += t
+        return t
+
+    def access_pages_grouped(self, model: str, page_ids) -> float:
+        """Grouped access: the routed shard's owned misses share one
+        seek (pinned as a group so same-batch faults cannot tear the
+        shard slab), borrows ride one grouped mirror fetch."""
+        self._sync_store()
+        pages = list(page_ids)
+        self.store.fault_pages(pages)
+        route = self.router.route(pages)
+        self._record_route(route)
+        bp = self.sharded.buffer_pools[route.shard]
+        try:
+            flags = bp.access_group(model, list(route.owned))
+        except ValueError:
+            flags = [bp.access(model, p) for p in route.owned]
+        misses = sum(not h for h in flags)
+        t = self.storage.fetch_group_seconds(self.page_bytes, misses)
+        self.stats.pages_fetched += misses
+        t += self._borrow(route, model, grouped=True)
+        self.stats.fetch_seconds += t
+        return t
+
+    def _borrow(self, route: RouteDecision, model: str,
+                grouped: bool) -> float:
+        """Run the borrow protocol for a routed batch's minority pages;
+        returns the virtual seconds charged to the fetch channel
+        (owner-side storage faults + mirror->stage interconnect copies).
+        """
+        res = self.sharded.stage_borrows(route.shard, route.borrowed, model)
+        if res is None:
+            # Oversized borrow set: staging refused, compute will fall
+            # back to the host — which still has to READ those pages, so
+            # charge them as storage misses (never a free ride, or the
+            # benchmark's worst-case regime undercounts exactly where it
+            # matters).
+            n = len(route.borrowed)
+            if grouped:
+                t = self.storage.fetch_group_seconds(self.page_bytes, n)
+            else:
+                t = n * self.storage.fetch_seconds(self.page_bytes)
+            self.stats.pages_fetched += n
+            self.stats.borrow_seconds += t
+            return t
+        staged, mirror_hits, owner_faults = res
+        n = len(staged)
+        if not n:
+            return 0.0
+        if grouped:
+            t = self.storage.fetch_group_seconds(self.page_bytes,
+                                                 owner_faults) \
+                + self.interconnect.fetch_group_seconds(self.page_bytes, n)
+        else:
+            t = owner_faults * self.storage.fetch_seconds(self.page_bytes) \
+                + n * self.interconnect.fetch_seconds(self.page_bytes)
+        self.stats.pages_fetched += owner_faults
+        self.stats.borrow_pages += n
+        self.stats.borrow_seconds += t
+        self.stats.borrow_mirror_hits += mirror_hits
+        self.stats.borrow_store_faults += owner_faults
+        return t
+
+    # ------------------------------------------------- device (HBM) path --
+    def device_gather_rows(self, model: str, tensor: str, rows,
+                           pad: bool = False, pages=None):
+        self._sync_store()
+        vt = self.store.virtual_tensor(model, tensor)
+        route = self._resolve_route(pages if pages is not None
+                                    else vt.page_ids)
+        s = route.shard
+        staged = self.sharded.staged(s)
+        if any(p not in staged for p in route.borrowed):
+            return None
+        if not self.sharded.pools[s].pages_resident(route.owned):
+            return None
+        dev_map, uses_extra = self.sharded.remap(
+            s, vt, key=(model, tensor), strict=pages is None)
+        if dev_map is None:
+            return None
+        return self.sharded.gather_rows(s, dev_map, vt.grid, rows, pad=pad,
+                                        uses_extra=uses_extra)
+
+    def _device_map_sharded(self, model: str, tensor: str):
+        vt = self.store.virtual_tensor(model, tensor)
+        route = self._resolve_route(vt.page_ids)
+        s = route.shard
+        staged = self.sharded.staged(s)
+        if any(p not in staged for p in route.borrowed) \
+                or not self.sharded.pools[s].pages_resident(route.owned):
+            return vt, s, None, False
+        dev_map, uses_extra = self.sharded.remap(s, vt,
+                                                 key=(model, tensor),
+                                                 strict=True)
+        return vt, s, dev_map, uses_extra
+
+    def device_matmul(self, model: str, tensor: str, x):
+        self._sync_store()
+        vt, s, dev_map, uses_extra = self._device_map_sharded(model, tensor)
+        if dev_map is None:
+            return None
+        return self.sharded.virtual_matmul(s, dev_map, vt.grid, x,
+                                           uses_extra=uses_extra)
+
+    def device_tensor(self, model: str, tensor: str):
+        self._sync_store()
+        vt, s, dev_map, uses_extra = self._device_map_sharded(model, tensor)
+        if dev_map is None:
+            return None
+        return self.sharded.unblock(s, dev_map, vt.grid,
+                                    uses_extra=uses_extra)

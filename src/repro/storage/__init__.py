@@ -22,15 +22,16 @@ from __future__ import annotations
 
 from urllib.parse import parse_qs, urlparse
 
-from .backend import (MANIFEST_VERSION, MemoryBackend, PageBackend,
-                      StorageProfile, resolve_dtype)
+from .backend import (MANIFEST_VERSION, ManifestConflictError,
+                      MemoryBackend, PageBackend, StorageProfile,
+                      resolve_dtype)
 from .localdir import LocalDirBackend
 from .objsim import ObjectStoreSimBackend
 from .sqlite import SQLiteBackend
 
 __all__ = [
-    "MANIFEST_VERSION", "MemoryBackend", "PageBackend", "StorageProfile",
-    "resolve_dtype",
+    "MANIFEST_VERSION", "ManifestConflictError", "MemoryBackend",
+    "PageBackend", "StorageProfile", "resolve_dtype",
     "LocalDirBackend", "SQLiteBackend", "ObjectStoreSimBackend",
     "open_backend",
 ]

@@ -54,6 +54,13 @@ def resolve_dtype(name) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, str(name)))
 
 
+class ManifestConflictError(RuntimeError):
+    """Optimistic-locking conflict: another writer committed a manifest
+    after this handle last observed one.  The stale writer's transaction
+    is rolled back; reload the manifest (``load_manifest``) to adopt the
+    winner's state, re-apply the mutation, and commit again."""
+
+
 @dataclasses.dataclass(frozen=True)
 class StorageProfile:
     """Calibrated fetch model of a backend: ``seek + nbytes / bandwidth``."""

@@ -6,6 +6,16 @@ rewritten in ONE transaction per commit, so a crash mid-commit rolls
 back to the previous manifest (the database's atomicity doing the job
 ``os.replace`` does for the directory backend).  Stdlib-only.
 
+Concurrent writers: commits are optimistically locked on a
+``commit_version`` counter in ``meta``.  Each handle remembers the
+version it last observed (at open / ``load_manifest`` / its own
+commit); ``commit_manifest`` takes the write lock (``BEGIN IMMEDIATE``,
+so version check and rewrite are one critical section), compares the
+stored counter against the observed one, and raises
+:class:`~repro.storage.backend.ManifestConflictError` on mismatch — the
+stale writer rolls back, reloads, and retries on top of the winner's
+manifest instead of silently clobbering it.
+
 Schema (DESIGN.md "Storage backends")::
 
     pages(hash TEXT PK, dtype TEXT, shape TEXT, data BLOB)
@@ -29,7 +39,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
-from .backend import PageBackend, resolve_dtype
+from .backend import ManifestConflictError, PageBackend, resolve_dtype
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS pages(
@@ -65,6 +75,10 @@ CREATE TABLE IF NOT EXISTS tensor_pages(
 _META_KEYS = ("version", "blocks_per_page", "block_shape", "page_dtype",
               "pack_strategy", "dedup_config")
 
+#: meta key of the optimistic-locking commit counter (never part of the
+#: manifest dict itself)
+_COMMIT_VERSION = "commit_version"
+
 
 class SQLiteBackend(PageBackend):
     scheme = "sqlite"
@@ -80,6 +94,10 @@ class SQLiteBackend(PageBackend):
         # before COMMIT — raising here simulates a crash mid-commit and
         # must leave the previous manifest readable (transaction rollback).
         self._pre_commit_hook: Optional[Callable[[], None]] = None
+        # Optimistic locking: the commit counter this handle last saw
+        # (0 = no manifest yet); refreshed by load_manifest and by our
+        # own successful commits.
+        self._seen_version = self._db_version()
 
     def url(self) -> str:
         return f"sqlite:///{os.path.abspath(self.path)}"
@@ -137,13 +155,34 @@ class SQLiteBackend(PageBackend):
         return cur.rowcount
 
     # ---------------------------------------------------------- manifest --
+    def _db_version(self, cur=None) -> int:
+        """Current commit counter in the database (0: never committed)."""
+        row = (cur or self._con).execute(
+            "SELECT json FROM meta WHERE key = ?",
+            (_COMMIT_VERSION,)).fetchone()
+        return int(json.loads(row[0])) if row else 0
+
     def commit_manifest(self, manifest: Dict) -> None:
         con = self._con
+        con.commit()                   # close any implicit transaction
         try:
             cur = con.cursor()
+            # BEGIN IMMEDIATE takes the write lock NOW, making the
+            # version check + rewrite one critical section: a concurrent
+            # writer blocks here until we commit, then sees our counter.
+            cur.execute("BEGIN IMMEDIATE")
+            current = self._db_version(cur)
+            if current != self._seen_version:
+                raise ManifestConflictError(
+                    f"manifest in {self.path} is at commit version "
+                    f"{current}, this handle last observed "
+                    f"{self._seen_version}: another writer committed "
+                    f"first — load_manifest() and retry on top of it")
             for t in ("models", "tensors", "manifest_pages", "tensor_pages"):
                 cur.execute(f"DELETE FROM {t}")
             cur.execute("DELETE FROM meta")
+            cur.execute("INSERT INTO meta(key, json) VALUES (?, ?)",
+                        (_COMMIT_VERSION, json.dumps(current + 1)))
             for key in _META_KEYS:
                 if key in manifest:
                     cur.execute("INSERT INTO meta(key, json) VALUES (?, ?)",
@@ -172,6 +211,7 @@ class SQLiteBackend(PageBackend):
             if self._pre_commit_hook is not None:
                 self._pre_commit_hook()
             con.commit()                          # the atomic commit point
+            self._seen_version = current + 1
         except BaseException:
             con.rollback()
             raise
@@ -180,11 +220,15 @@ class SQLiteBackend(PageBackend):
         con = self._con
         meta = {k: json.loads(v)
                 for k, v in con.execute("SELECT key, json FROM meta")}
+        commit_version = int(meta.pop(_COMMIT_VERSION, 0))
         page_rows = con.execute(
             "SELECT page_idx, hash, blocks FROM manifest_pages "
             "ORDER BY page_idx").fetchall()
         if not meta or not page_rows:
             raise FileNotFoundError(f"no manifest committed in {self.path}")
+        # reading the manifest adopts its version: a subsequent commit
+        # from this handle builds on what it just observed
+        self._seen_version = commit_version
         manifest: Dict = dict(meta)
         manifest["pages"] = [{"hash": h, "blocks": json.loads(blocks)}
                              for _, h, blocks in page_rows]

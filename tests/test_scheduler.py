@@ -225,3 +225,88 @@ def test_lambda_rates_exposed():
         pool.access("a0", p)
     rates = pool.model_rates()
     assert rates.get("a0", 0.0) > 0.0
+
+
+# -------------------------------------------------- queue-aware lookahead ---
+def test_pending_batches_exposed_in_arrival_order():
+    for sched in (FifoScheduler(), RoundRobinScheduler(),
+                  DedupAffinityScheduler()):
+        for i, m in enumerate(["a", "b", "a", "c"]):
+            sched.submit(m, i, pages=[i])
+        got = sched.pending_batches()
+        assert [b.payload for b in got] == [0, 1, 2, 3]
+        assert sched.pending() == 4                  # non-destructive
+        sched.next_batch(set())
+        assert len(sched.pending_batches()) == 3
+
+
+def test_lookahead_plans_queued_pages_before_lambda():
+    """Satellite: with queued batches visible, the prefetcher pulls THEIR
+    pages first (deduped against residency), before any λ speculation."""
+    store, heads = _two_group_store()
+    server = WeightServer(store, store.num_pages(), "optimized_mru",
+                          StorageModel("hdd"))
+    # make b0 the λ-hottest model: pure speculation would pick b pages
+    for p in store.model_pages("b0")[:3]:
+        server.pool.access("b0", p)
+    sched = FifoScheduler()
+    a_pages = [p for p in store.model_pages("a0")
+               if p not in server.pool.resident_pages()]
+    sched.submit("a0", None, pages=a_pages,
+                 pages_gen=store.pack_generation)
+    pf = Prefetcher(server, max_pages_per_step=4)
+    pf.attach_scheduler(sched)
+    plan = pf.plan()
+    assert plan, "nothing planned"
+    planned_pages = [p for _, p in plan]
+    assert set(planned_pages) <= set(a_pages)        # queue first, not λ
+    # stale generation (simulated repack) falls back to λ speculation
+    sched.pending_batches()[0].pages_gen = -1
+    assert all(m == "b0" for m, _ in pf.plan())
+
+
+def test_lookahead_hits_proven_end_to_end():
+    """The proof stat: pages issued from the queue's page sets get
+    demanded by the very batches that advertised them -> lookahead_hits
+    > 0, and those demand accesses are pool hits."""
+    store, heads = _two_group_store()
+    cap = store.num_pages()
+    # dram storage: wall compute dominates the virtual fetch clock, so
+    # the fetch channel has idle headroom for the engine to grant as
+    # prefetch budget (hdd would starve speculation entirely)
+    server = WeightServer(store, cap, "optimized_mru", StorageModel("dram"))
+    prefetcher = Prefetcher(server, max_pages_per_step=8)
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                    prefetcher=prefetcher, overlap=True)
+    assert prefetcher.scheduler is engine.scheduler   # auto-attached
+    trace = _interleaved_trace(["a0", "b0", "a1", "b1"], batches=16)
+    for model, docs in trace:
+        engine.submit(model, docs)
+    engine.run()
+    assert prefetcher.stats.lookahead_issued > 0
+    assert prefetcher.stats.lookahead_hits > 0
+    assert prefetcher.stats.lookahead_hits <= prefetcher.stats.issued
+
+
+def test_lookahead_beats_pure_lambda_on_cold_models():
+    """A cold model's queued batch can't be predicted by λ rates; the
+    queue-aware tier still prefetches it, so the cold batch sees hits
+    where the pure-λ prefetcher sees misses."""
+    store, heads = _two_group_store()
+    cap = store.num_pages()
+    trace = _interleaved_trace(["a0", "a1"], batches=10) \
+        + _interleaved_trace(["b0"], batches=2, seed=9)
+
+    def run(lookahead):
+        server = WeightServer(store, cap, "optimized_mru",
+                              StorageModel("dram"))
+        pf = Prefetcher(server, max_pages_per_step=8,
+                        lookahead=lookahead)
+        engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                        prefetcher=pf, overlap=True)
+        for model, docs in trace:
+            engine.submit(model, docs)
+        engine.run()
+        return server.pool.hit_ratio
+
+    assert run(lookahead=16) >= run(lookahead=0)

@@ -1,0 +1,447 @@
+"""Sharded page-pool serving: placement invariants (property tests),
+routing, logit equivalence vs the single-slab device backend and the
+numpy path at 1/2/4 shards (host + Pallas-interpret kernel modes), the
+per-shard residency invariant under churn, borrow-protocol accounting,
+and repack consistency of replicated pages after a model update."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import SyntheticTextTask
+from repro.launch.serve import build_store
+from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
+                                  WeightServer)
+from repro.serving.router import ShardRouter
+from repro.serving.shard_pool import (PLACEMENTS, ShardedWeightServer,
+                                      hash_placement, make_placement,
+                                      sharers_placement)
+
+from hypothesis_compat import given, settings, st
+
+
+def _scenario(vocab=1024, d=32, num_models=4, block=(32, 32), l=4, seed=0):
+    task = SyntheticTextTask(vocab=vocab, d=d, seed=seed)
+    store, heads = build_store(task, num_models=num_models,
+                               block_shape=block, blocks_per_page=l)
+    return task, store, heads
+
+
+def _run_batches(engine, task, num_models, batches=8, batch=16, seed=0):
+    out = []
+    for b in range(batches):
+        v = b % num_models
+        docs, _ = task.sample(batch, variant=v, seed=seed + 100 + b)
+        engine.submit(f"word2vec-v{v}", docs)
+        engine.run(max_batches=1)
+        out.append(engine.last_logits.copy())
+    return out
+
+
+# ---------------------------------------------------- placement invariants --
+def _random_sharers(rng, num_pages, num_models):
+    models = [f"m{i}" for i in range(num_models)]
+    out = {}
+    for p in range(num_pages):
+        k = int(rng.integers(1, num_models + 1))
+        out[p] = frozenset(rng.choice(models, size=k, replace=False))
+    return out
+
+
+@pytest.mark.parametrize("policy", PLACEMENTS)
+def test_placement_total_and_deterministic_randomized(policy):
+    """Satellite: both policies produce a TOTAL (every page owned by >= 1
+    shard, every owner in range) and DETERMINISTIC (same inputs -> same
+    assignment) page->shard map, across random sharing structures."""
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        num_pages = int(rng.integers(1, 60))
+        num_shards = int(rng.integers(1, 6))
+        sharers = _random_sharers(rng, num_pages, int(rng.integers(1, 7)))
+        budget = int(rng.integers(0, num_pages + 1))
+
+        def build():
+            if policy == "hash":
+                return hash_placement(num_pages, num_shards)
+            return sharers_placement(num_pages, num_shards, sharers, budget)
+
+        a, b = build(), build()
+        assert a.owners == b.owners                       # deterministic
+        assert len(a.owners) == num_pages                 # total
+        for pid, owners in enumerate(a.owners):
+            assert len(owners) >= 1
+            assert all(0 <= s < num_shards for s in owners)
+            assert sorted(set(owners)) == list(owners)    # sorted, unique
+        # owned_sets are the exact inverse of owners
+        for s in range(num_shards):
+            assert a.owned_sets[s] == frozenset(
+                p for p in range(num_pages) if s in a.owners[p])
+        if policy == "hash":
+            assert not a.replicated                       # single-owner
+        if num_shards == 1:
+            assert all(o == (0,) for o in a.owners)
+
+
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=5),
+       st.integers(min_value=0, max_value=64),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_sharers_placement_property(num_pages, num_shards, budget, seed):
+    """Property form of the same invariants + replication bound: the
+    replicated set never exceeds the budget, and contains only pages
+    with >= 2 sharers."""
+    rng = np.random.default_rng(seed)
+    sharers = _random_sharers(rng, num_pages, 4)
+    pl = sharers_placement(num_pages, num_shards, sharers, budget)
+    assert len(pl.owners) == num_pages
+    assert all(len(o) >= 1 for o in pl.owners)
+    assert len(pl.replicated) <= budget
+    for p in pl.replicated:
+        assert len(sharers[p]) >= 2
+        assert pl.owners[p] == tuple(range(num_shards))
+
+
+def test_make_placement_keys_on_pack_generation():
+    _, store, _ = _scenario()
+    a = make_placement("sharers", store, 2)
+    assert a.pack_generation == store.pack_generation
+    b = make_placement("sharers", store, 2)
+    assert a.owners == b.owners
+
+
+def test_unknown_placement_rejected():
+    _, store, _ = _scenario()
+    with pytest.raises(ValueError):
+        make_placement("roulette", store, 2)
+    with pytest.raises(ValueError):
+        ShardedWeightServer(store, 4, shards=2, placement="roulette")
+
+
+# ---------------------------------------------------------------- routing --
+def test_router_majority_cover_and_split():
+    _, store, _ = _scenario()
+    srv = ShardedWeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"),
+                              shards=2, placement="hash")
+    pl = srv.sharded.placement()
+    router = ShardRouter(srv.sharded.placement)
+    evens = sorted(pl.owned_sets[0])[:3]
+    odds = sorted(pl.owned_sets[1])[:1]
+    r = router.route(evens + odds)
+    assert r.shard == 0                       # majority owner wins
+    assert set(r.owned) == set(evens)
+    assert set(r.borrowed) == set(odds)
+    # deterministic ties: equal cover -> lowest shard id
+    r2 = router.route(evens[:1] + odds[:1])
+    assert r2.shard == 0
+    assert router.batches_per_shard[0] == 2
+    assert router.borrowed_pages == len(odds) + 1
+
+
+def test_submit_shard_annotation_matches_runtime_routing():
+    """The advisory ``ScheduledBatch.shard`` set at submit() equals the
+    shard the server actually routes to at run time (routing is
+    deterministic over one placement) — and after a repack the server
+    re-routes under the NEW placement instead of trusting it."""
+    task, store, heads = _scenario(num_models=3)
+    srv = ShardedWeightServer(store, max(4, store.num_pages() // 2),
+                              storage=StorageModel("dram"),
+                              shards=2, placement="sharers")
+    engine = EmbeddingServingEngine(srv, heads)
+    for b in range(6):
+        v = b % 3
+        docs, _ = task.sample(16, variant=v, seed=700 + b)
+        engine.submit(f"word2vec-v{v}", docs)
+    for batch in engine.scheduler.pending_batches():
+        assert batch.shard is not None
+    while engine.scheduler.pending():
+        batch = engine.scheduler.next_batch(srv.pool.resident_pages())
+        advisory = batch.shard
+        engine._infer(batch)
+        assert srv._route.shard == advisory
+    # repack: the queued advisory may be stale; execution must follow
+    # the fresh placement, not the annotation
+    docs, _ = task.sample(16, variant=0, seed=777)
+    engine.submit("word2vec-v0", docs)
+    store.update("word2vec-v0",
+                 {"embedding": task.variant_embedding(0) + 0.25})
+    engine.run(max_batches=1)
+    assert srv._route.pack_generation == store.pack_generation
+    srv.sharded.check_invariants()
+
+
+# ------------------------------------------------------------- equivalence --
+@pytest.mark.parametrize("kernel_mode", ["host", "pallas"])
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_sharded_embedding_matches_numpy_and_single_device(shards,
+                                                           kernel_mode):
+    """Acceptance: sharded logits == single-slab device == numpy to 1e-5
+    at 1/2/4 shards, for both placements, incl. Pallas interpret mode."""
+    small = kernel_mode == "pallas"
+    task, store, heads = _scenario(vocab=256 if small else 1024,
+                                   num_models=3)
+    n, batches, batch = 3, 4 if small else 8, 8 if small else 16
+    cap = max(4, store.num_pages() // max(2, shards) + 2)
+
+    def logits_of(server):
+        engine = EmbeddingServingEngine(server, heads)
+        return _run_batches(engine, task, n, batches=batches,
+                            batch=batch), engine.stats
+
+    ref, _ = logits_of(WeightServer(store, store.num_pages(),
+                                    storage=StorageModel("dram"),
+                                    backend="numpy"))
+    dev, _ = logits_of(WeightServer(store, store.num_pages(),
+                                    storage=StorageModel("dram"),
+                                    backend="device",
+                                    kernel_mode=kernel_mode))
+    for placement in PLACEMENTS:
+        srv = ShardedWeightServer(store, cap,
+                                  storage=StorageModel("dram"),
+                                  shards=shards, placement=placement,
+                                  kernel_mode=kernel_mode)
+        got, stats = logits_of(srv)
+        for a, b, c in zip(ref, dev, got):
+            np.testing.assert_allclose(a, c, atol=1e-5)
+            np.testing.assert_allclose(b, c, atol=1e-5)
+        srv.sharded.check_invariants()
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_sharded_lm_matches_numpy_and_single_device(shards):
+    """Acceptance (LM engine): generate() through a sharded server ==
+    numpy backend == single-slab device backend, Pallas interpret mode."""
+    from repro.core import DedupConfig, LSHConfig, ModelStore, StoreConfig
+    from repro.serving.engine import LMServingEngine
+
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(16, 16),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=8.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=4))
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((48, 32)).astype(np.float32)
+    for v in range(2):
+        store.register(f"lm-v{v}", {"w": base + v * 1e-5,
+                                    "b": base[:16] * 0.5 + v * 1e-5})
+
+    class TinyApi:
+        """Linear 'LM': prefill/decode are matmuls against the faulted
+        tensors, so logits expose any wrong-page bytes immediately."""
+
+        def prefill(self, params, batch, _):
+            x = np.asarray(batch["tokens"], np.float32)
+            h = x @ params["w"][:x.shape[-1]]
+            logits = h @ params["b"][:, :h.shape[-1]].T
+            return logits[:, None, :], h             # [B, 1, V], cache
+
+        def decode(self, params, cache, toks):
+            h = cache + np.asarray(toks, np.float32).mean()
+            logits = h @ params["b"][:, :h.shape[-1]].T
+            return logits[:, None, :], h
+
+    def rebuild(ts):
+        return {k: np.asarray(v) for k, v in ts.items()}
+
+    apis = {m: TinyApi() for m in ("lm-v0", "lm-v1")}
+    templates = {m: {"rebuild": rebuild} for m in ("lm-v0", "lm-v1")}
+    prompts = rng.standard_normal((2, 48)).astype(np.float32)
+
+    def generate(server):
+        engine = LMServingEngine(server, apis, templates)
+        outs = []
+        for m in ("lm-v0", "lm-v1", "lm-v0"):
+            out, _ = engine.generate(m, prompts, steps=3)
+            outs.append(out)
+        return outs, engine.stats
+
+    ref, _ = generate(WeightServer(store, store.num_pages(),
+                                   storage=StorageModel("dram"),
+                                   backend="numpy"))
+    dev, dstats = generate(WeightServer(store, store.num_pages(),
+                                        storage=StorageModel("dram"),
+                                        backend="device",
+                                        kernel_mode="pallas"))
+    assert dstats.dense_fallbacks == 0
+    cap = max(4, store.num_pages() // max(2, shards) + 2)
+    for placement in PLACEMENTS:
+        srv = ShardedWeightServer(store, cap, storage=StorageModel("dram"),
+                                  shards=shards, placement=placement,
+                                  kernel_mode="pallas")
+        got, stats = generate(srv)
+        for a, b, c in zip(ref, dev, got):
+            np.testing.assert_allclose(a, c, atol=1e-5)
+            np.testing.assert_allclose(b, c, atol=1e-5)
+        srv.sharded.check_invariants()
+
+
+def test_single_shard_identical_to_device_backend():
+    """shards=1 is the identity: same pool decisions (hit/miss/evict
+    sequence), same slab loads, zero borrows — bit-identical serving."""
+    task, store, heads = _scenario()
+    cap = max(4, store.num_pages() // 2)
+
+    def serve(server):
+        engine = EmbeddingServingEngine(server, heads)
+        logits = _run_batches(engine, task, 4, batches=10)
+        return logits, engine.stats
+
+    base = WeightServer(store, cap, storage=StorageModel("dram"),
+                        backend="device")
+    a, astats = serve(base)
+    srv = ShardedWeightServer(store, cap, storage=StorageModel("dram"),
+                              shards=1)
+    b, bstats = serve(srv)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert (base.pool.hits, base.pool.misses, base.pool.evictions) \
+        == (srv.pool.hits, srv.pool.misses, srv.pool.evictions)
+    assert base.device_pool.loads == srv.device_pool.loads
+    assert base.device_pool.evicts == srv.device_pool.evicts
+    assert srv.stats.borrow_pages == 0
+    assert astats.device_batches == bstats.device_batches
+
+
+# ------------------------------------------------------ borrows / invariant --
+def test_borrow_protocol_counts_and_serves_off_device():
+    """hash-mod placement scatters cover sets, so multi-shard serving
+    must borrow — staged from owner mirrors, never slab-resident on the
+    borrower — while batches stay on the device path."""
+    task, store, heads = _scenario(vocab=2048, num_models=4)
+    srv = ShardedWeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"),
+                              shards=2, placement="hash")
+    engine = EmbeddingServingEngine(srv, heads)
+    _run_batches(engine, task, 4, batches=8)
+    assert srv.stats.borrow_pages > 0
+    assert engine.stats.device_batches > 0
+    assert srv.stats.borrow_seconds > 0.0
+    assert srv.stats.borrow_mirror_hits + srv.stats.borrow_store_faults \
+        == srv.stats.borrow_pages
+    assert sum(srv.stats.shard_batches.values()) == 8
+    srv.sharded.check_invariants()     # borrowed pages never went resident
+
+
+def test_per_shard_residency_invariant_under_churn():
+    """Acceptance: under random access/prefetch churn, every shard's
+    slab == its pool's resident set and no page is resident on a shard
+    placement didn't assign it."""
+    _, store, _ = _scenario(num_models=4)
+    for placement in PLACEMENTS:
+        srv = ShardedWeightServer(store, max(2, store.num_pages() // 3),
+                                  storage=StorageModel("dram"),
+                                  shards=3, placement=placement)
+        pl = srv.sharded.placement()
+        rng = np.random.default_rng(0)
+        models = list(store.dedup.models)
+        for step in range(250):
+            m = models[int(rng.integers(len(models)))]
+            p = int(rng.integers(store.num_pages()))
+            if rng.random() < 0.25:
+                srv.pool.prefetch(m, p)
+            else:
+                s = pl.shards_of(p)[0]
+                srv.sharded.buffer_pools[s].access(m, p)
+            srv.sharded.check_invariants()
+        # slab bytes match the physical pages everywhere they're resident
+        for s, dev in enumerate(srv.sharded.pools):
+            for pid, slot in dev.slot_of.items():
+                np.testing.assert_array_equal(dev.slot_page(slot),
+                                              store.page_array(pid))
+
+
+def test_on_load_rejects_non_owner():
+    _, store, _ = _scenario()
+    srv = ShardedWeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"),
+                              shards=2, placement="hash")
+    pl = srv.sharded.placement()
+    victim = next(p for p in range(store.num_pages())
+                  if pl.shards_of(p) == (1,))
+    with pytest.raises(RuntimeError):
+        srv.sharded.buffer_pools[0].access("m", victim)
+
+
+# ------------------------------------------------------- update / repack --
+def test_update_repack_keeps_replicated_pages_consistent():
+    """Satellite: after a model update() repack, placement is rebuilt
+    for the new packing and every replicated page that is resident on
+    several shards holds identical (current-packing) bytes on each."""
+    task, store, heads = _scenario(num_models=3)
+    srv = ShardedWeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"),
+                              shards=2, placement="sharers")
+    engine = EmbeddingServingEngine(srv, heads)
+    _run_batches(engine, task, 3, batches=6)
+    gen0 = store.pack_generation
+    pl0 = srv.sharded.placement()
+
+    store.update("word2vec-v0",
+                 {"embedding": task.variant_embedding(0) + 0.25})
+    _run_batches(engine, task, 3, batches=6, seed=50)
+
+    assert store.pack_generation > gen0
+    pl1 = srv.sharded.placement()
+    assert pl1.pack_generation == store.pack_generation != pl0.pack_generation
+    srv.sharded.check_invariants()
+    # replicate consistency: force every replicated page resident on BOTH
+    # shards (legal — both own it) and check each copy holds the *new*
+    # packing's bytes
+    assert pl1.replicated, "scenario produced no shared pages to replicate"
+    for pid in sorted(pl1.replicated)[:4]:
+        for s in range(srv.num_shards):
+            srv.sharded.buffer_pools[s].access("word2vec-v0", pid)
+        want = store.page_array(pid)
+        for dev in srv.sharded.pools:
+            assert pid in dev.slot_of
+            np.testing.assert_array_equal(dev.slot_page(dev.slot_of[pid]),
+                                          want)
+    srv.sharded.check_invariants()
+    # and the logits now reflect the updated weights on the device path
+    docs, _ = task.sample(16, variant=0, seed=999)
+    engine.submit("word2vec-v0", docs)
+    engine.run(max_batches=1)
+    emb = store.materialize("word2vec-v0", "embedding")
+    expect = emb[docs].mean(axis=1) @ heads["word2vec-v0"]
+    np.testing.assert_allclose(engine.last_logits, expect, atol=1e-5)
+
+
+def test_update_between_submit_and_run_cannot_fault_stale_pages():
+    """Acceptance: a model update between submit() and run() must not
+    fault old-packing page ids on ANY shard — the batch recomputes its
+    pages and routing under the new placement."""
+    task, store, heads = _scenario(num_models=3)
+    srv = ShardedWeightServer(store, max(4, store.num_pages() // 2),
+                              storage=StorageModel("dram"),
+                              shards=2, placement="sharers")
+    engine = EmbeddingServingEngine(srv, heads)
+    _run_batches(engine, task, 3, batches=3)          # warm
+    docs, _ = task.sample(16, variant=0, seed=321)
+    engine.submit("word2vec-v0", docs)                # old packing + shard
+    store.update("word2vec-v0",
+                 {"embedding": task.variant_embedding(0) + 0.125})
+    engine.run(max_batches=1)                         # new packing
+    srv.sharded.check_invariants()
+    emb = store.materialize("word2vec-v0", "embedding")
+    expect = emb[docs].mean(axis=1) @ heads["word2vec-v0"]
+    np.testing.assert_allclose(engine.last_logits, expect, atol=1e-5)
+
+
+# -------------------------------------------------------------- mesh slab --
+def test_stacked_slab_lowers_with_named_sharding():
+    """The mesh view: per-shard slabs stack to [S, cap, l, bh, bw] and
+    lay out with NamedSharding over the serving mesh's shard axis."""
+    from repro.launch.mesh import make_shard_mesh
+    _, store, heads = _scenario()
+    srv = ShardedWeightServer(store, 4, storage=StorageModel("dram"),
+                              shards=2, placement="sharers",
+                              kernel_mode="pallas")
+    pl = srv.sharded.placement()
+    for s in range(2):
+        for pid in sorted(pl.owned_sets[s])[:2]:
+            srv.sharded.buffer_pools[s].access("word2vec-v0", pid)
+    mesh = make_shard_mesh(2)
+    slab = srv.sharded.stacked_slab(mesh)
+    assert slab.shape[:2] == (2, 4)
+    assert slab.sharding.is_fully_replicated or \
+        slab.sharding.spec[0] == "shard"

@@ -395,3 +395,70 @@ def test_legacy_path_api_still_works(tmp_path):
     back = load_store_tensors(str(tmp_path))
     for name in models:
         assert np.allclose(back[name]["w"], store.materialize(name, "w"))
+
+
+# ------------------------------------------------- concurrent writers ------
+def test_sqlite_two_writer_commit_conflict(tmp_path):
+    """Satellite (multi-backend remainder): optimistic locking on the
+    SQLite commit counter.  Two handles on one database; the writer that
+    commits second on a stale view gets a typed ManifestConflictError,
+    its transaction rolls back (winner's manifest intact), and a reload
+    + retry succeeds."""
+    from repro.storage import ManifestConflictError
+
+    path = str(tmp_path / "models.db")
+    store = _store()
+    for name, tensors in _variants(2).items():
+        store.register(name, tensors)
+    a = SQLiteBackend(path)
+    store.save(a)                          # version 1, seen by A
+
+    b = SQLiteBackend(path)                # second writer
+    manifest_b = b.load_manifest()         # observes version 1
+    manifest_a = a.load_manifest()
+
+    # A commits a mutation first (drops one model from the manifest)
+    m2 = dict(manifest_a)
+    m2["models"] = {k: v for k, v in manifest_a["models"].items()
+                    if k == "m0"}
+    a.commit_manifest(m2)                  # version 2
+
+    # B's view is stale: its commit must conflict, not clobber
+    with pytest.raises(ManifestConflictError):
+        b.commit_manifest(manifest_b)
+    assert sorted(b.load_manifest()["models"]) == ["m0"]   # winner intact
+
+    # reload adopted the new version: retry on top of it succeeds
+    b.commit_manifest(manifest_b)
+    assert sorted(a.load_manifest()["models"]) == ["m0", "m1"]
+    a.close()
+    b.close()
+
+
+def test_sqlite_store_save_propagates_conflict(tmp_path):
+    """ModelStore.save through a stale handle surfaces the typed error
+    (no silent lost update at the store layer either)."""
+    from repro.storage import ManifestConflictError
+
+    path = str(tmp_path / "models.db")
+    store = _store()
+    for name, tensors in _variants(2).items():
+        store.register(name, tensors)
+    a = SQLiteBackend(path)
+    store.save(a)
+
+    b = SQLiteBackend(path)
+    other = ModelStore.open(b)             # live store on handle B
+
+    store.register("m9", _variants(1, seed=9)["m0"])
+    store.save(a)                          # A commits again
+
+    other.register("mX", _variants(1, seed=7)["m0"])
+    with pytest.raises(ManifestConflictError):
+        other.save(b)                      # stale: must not clobber A
+    b.load_manifest()                      # adopt A's commit...
+    other.save(b)                          # ...then the retry lands
+    names = sorted(SQLiteBackend(path).load_manifest()["models"])
+    assert "mX" in names
+    a.close()
+    b.close()
