@@ -65,6 +65,8 @@ STORAGE_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                                  "BENCH_storage.json")
 SHARDING_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                                   "BENCH_sharding.json")
+TRANSFER_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                  "BENCH_transfer.json")
 
 
 def _traffic(task, num_models, batches, batch_size, seed=0):
@@ -222,8 +224,218 @@ def _serve_from_backend(backend, heads, traffic, cap, storage,
 def run(smoke: bool = False) -> List[Row]:
     """All axes (what ``benchmarks.run`` invokes): compute backends ->
     BENCH_serving.json, storage backends -> BENCH_storage.json, shard
-    count x placement -> BENCH_sharding.json."""
-    return run_serving(smoke) + run_storage(smoke) + run_sharding(smoke)
+    count x placement -> BENCH_sharding.json, transfer path x miss rate
+    -> BENCH_transfer.json."""
+    return run_serving(smoke) + run_storage(smoke) + run_sharding(smoke) \
+        + run_transfer(smoke)
+
+
+# ----------------------------------------------------- transfer-axis bench --
+def _transfer_scenario(num_models, vocab, d, seed=0,
+                       block_shape=(32, 32), blocks_per_page=4):
+    """N variants sharing one base embedding but each fine-tuning its
+    OWN row stripe: any batch touches the shared pages plus exactly its
+    model's private stripe, so per-batch cover ≈ half the union and the
+    capacity ladder really sweeps the miss rate (batch ⊂ pool ⊂ union —
+    the fig-8 regime).  The word2vec scenario can't produce this shape:
+    its variants dedup so aggressively that every batch covers nearly
+    the whole page universe."""
+    from .common import store_config
+
+    rng = np.random.default_rng(seed)
+    base = (rng.standard_normal((vocab, d)) * 0.05).astype(np.float32)
+    cfg = store_config(base, block_shape=block_shape,
+                       blocks_per_page=blocks_per_page)
+    store = ModelStore(cfg)
+    heads = {}
+    for v in range(num_models):
+        emb = base.copy()
+        lo, hi = v * vocab // num_models, (v + 1) * vocab // num_models
+        emb[lo:hi] += (rng.standard_normal((hi - lo, d)) * 0.5
+                       ).astype(np.float32)
+        name = f"w2v-v{v}"
+        store.register(name, {"embedding": emb})
+        heads[name] = (rng.standard_normal((d, 16)) * 0.1
+                       ).astype(np.float32)
+    return store, heads
+
+
+def _transfer_traffic(num_models, vocab, batches, batch_size,
+                      seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for b in range(batches):
+        v = int(rng.integers(0, num_models))
+        docs = rng.integers(0, vocab, size=(batch_size, seq))
+        out.append((f"w2v-v{v}", docs.astype(np.int64)))
+    return out
+
+
+def _serve_transfer(store, heads, traffic, cap, transfer, hbm,
+                    warmup=4, reps=5, overlap=False):
+    """One transfer-mode run with the host<->HBM channel ON the virtual
+    clock (charge_transfer), calibrated once and shared across both
+    modes so the only clock difference is per-page seeks vs one seek
+    per group.  The headline (claim) runs are SERIAL — per-batch latency
+    is the batch's own fetch+compute service time, the same no-queueing
+    convention as the sharding axis (an overlapped timeline measures
+    queue depth, which *rewards* a slower fetch channel).  ``overlap=
+    True`` is the double-buffer demonstration run: fifo keeps the queue
+    head predictable so prestaging engages, and overlap_fraction proves
+    the next batch's transfer really rides under compute."""
+    server = WeightServer(store, cap, "optimized_mru", StorageModel("dram"),
+                          backend="device", transfer=transfer,
+                          charge_transfer=True, hbm=hbm,
+                          kernel_mode="xla")
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                    overlap=overlap)
+    for model, docs in traffic[:warmup]:
+        engine.submit(model, docs)
+    engine.run()
+
+    # Percentiles POOL the reps instead of best-of: the pool trajectory
+    # (and so the per-batch virtual clock) is deterministic and
+    # identical between the two transfer modes, so pooled percentiles
+    # compare PAIRED batches — best-of-rep would compare different reps.
+    lats, flats = [], []
+    best_bps = 0.0
+    device_batches = fallbacks = 0
+    agg = ServeStats()
+    for _ in range(reps):
+        engine.stats = ServeStats(overlapped=engine.overlap)
+        engine.timeline.fetch_clock = engine.timeline.compute_clock = 0.0
+        server.pool.reset_stats()
+        for model, docs in traffic:
+            engine.submit(model, docs)
+        t0 = time.perf_counter()
+        stats = engine.run()
+        wall = time.perf_counter() - t0
+        best_bps = max(best_bps, stats.batches / max(wall, 1e-9))
+        lats.extend(stats.latencies)
+        flats.extend(stats.fetch_latencies)
+        agg.transfer_seconds += stats.transfer_seconds
+        agg.transfer_pages += stats.transfer_pages
+        agg.transfer_groups += stats.transfer_groups
+        agg.transfer_bytes += stats.transfer_bytes
+        agg.transfer_overlapped_bytes += stats.transfer_overlapped_bytes
+        agg.group_sizes.extend(stats.group_sizes)
+        device_batches += stats.device_batches
+        fallbacks += stats.dense_fallbacks
+    lat, flat = np.asarray(lats), np.asarray(flats)
+    return {
+        "batches_per_sec": best_bps,
+        "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+        "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        "fetch_p50_ms": float(np.percentile(flat, 50)) * 1e3,
+        "fetch_p99_ms": float(np.percentile(flat, 99)) * 1e3,
+        "miss_rate": 1.0 - server.pool.hit_ratio,
+        "hit_ratio": server.pool.hit_ratio,
+        "transfer_ms": agg.transfer_seconds * 1e3,
+        "transfer_pages": agg.transfer_pages,
+        "transfer_ops": agg.transfer_groups,
+        "mean_group_size": agg.mean_group_size,
+        "overlap_fraction": agg.overlap_fraction,
+        "device_batches": device_batches,
+        "dense_fallbacks": fallbacks,
+    }
+
+
+def run_transfer(smoke: bool = False) -> List[Row]:
+    """per_page vs grouped host->HBM movement across a miss-rate ladder
+    -> BENCH_transfer.json.
+
+    Capacity fracs below 1.0 sweep the miss rate: the smaller the pool,
+    the more pages every batch faults, and the more per-page seeks the
+    grouped path's single seek amortizes away — so grouped p50 must win
+    at every rung, with the gap *widening* as capacity shrinks (the
+    fig-8 working-set-exceeds-pool regime)."""
+    from repro.serving.device_pool import DevicePagePool
+
+    if smoke:
+        scenario = dict(num_models=4, vocab=2048, d=64)
+        batches, batch_size = 14, 48
+        fracs = (0.55, 0.7, 0.85)
+    else:
+        scenario = dict(num_models=4, vocab=4096, d=128)
+        batches, batch_size = 24, 96
+        fracs = (0.55, 0.7, 0.85)
+    store, heads = _transfer_scenario(**scenario)
+    pages = store.num_pages()
+    traffic = _transfer_traffic(scenario["num_models"], scenario["vocab"],
+                                batches, batch_size)
+
+    probe = WeightServer(store, 2)
+    worst = max(len(probe.embedding_rows_pages(m, "embedding",
+                                               np.unique(docs)))
+                for m, docs in traffic)
+    floor = worst + 1
+
+    # ONE measured host<->HBM channel, shared by both transfer modes: a
+    # blocking bandwidth sweep over group sizes (bytes/s vs. n) fitted
+    # to seconds = seek + bytes/bandwidth (serving/transfer.py).  xla
+    # mode is the accelerator-shaped path off-TPU — a REAL device slab,
+    # so a per-page miss really pays a device_put plus a slab-sized
+    # functional update per page, which is exactly what grouping kills.
+    cal_pool = DevicePagePool(store, max(floor, 8), kernel_mode="xla")
+    hbm = cal_pool.transfer.storage_model()       # blocking measure() sweep
+    del cal_pool
+
+    rows: List[Row] = []
+    configs = []
+    seen_caps = set()
+    for frac in fracs:
+        cap = min(pages - 1, max(floor, int(pages * frac)))
+        if cap in seen_caps:
+            continue
+        seen_caps.add(cap)
+        entry = {"capacity_frac": frac, "capacity_pages": cap,
+                 "worst_batch_pages": worst}
+        for transfer in ("per_page", "grouped"):
+            res = _serve_transfer(store, heads, traffic, cap, transfer, hbm)
+            entry[transfer] = res
+            rows.append((
+                f"transfer/pool{frac}/{transfer}",
+                res["p50_ms"] * 1e3,            # us per batch (p50)
+                f"miss={res['miss_rate']:.3f};"
+                f"group={res['mean_group_size']:.1f};"
+                f"fetch_p50_ms={res['fetch_p50_ms']:.3f}"))
+        # double-buffer demonstration: same grouped server driven by the
+        # overlapped engine — prestaged bytes ride under compute
+        entry["grouped_overlap"] = _serve_transfer(
+            store, heads, traffic, cap, "grouped", hbm, overlap=True)
+        entry["grouped_le_per_page_p50"] = \
+            entry["grouped"]["p50_ms"] <= entry["per_page"]["p50_ms"] + 1e-9
+        entry["grouped_le_per_page_fetch_p50"] = \
+            entry["grouped"]["fetch_p50_ms"] \
+            <= entry["per_page"]["fetch_p50_ms"] + 1e-9
+        entry["fetch_gap_ms"] = entry["per_page"]["fetch_p50_ms"] \
+            - entry["grouped"]["fetch_p50_ms"]
+        entry["overlap_engaged"] = \
+            entry["grouped_overlap"]["overlap_fraction"] > 0.0
+        configs.append(entry)
+
+    # fig-8 shape: the grouped win grows as capacity shrinks
+    by_cap = sorted(configs, key=lambda e: e["capacity_pages"])
+    gap_widens = by_cap[0]["fetch_gap_ms"] >= by_cap[-1]["fetch_gap_ms"] \
+        - 1e-9 if len(by_cap) > 1 else True
+    payload = {
+        "bench": "transfer",
+        "scenario": {**scenario, "batches": batches,
+                     "batch_size": batch_size, "pages": pages,
+                     "storage": "dram", "smoke": smoke},
+        "hbm_channel": {"bandwidth_mbps": hbm.bw / 1e6,
+                        "seek_us": hbm.seek * 1e6},
+        "configs": configs,
+        "grouped_le_per_page_p50_all": all(
+            e["grouped_le_per_page_p50"] for e in configs),
+        "grouped_le_per_page_fetch_p50_all": all(
+            e["grouped_le_per_page_fetch_p50"] for e in configs),
+        "gap_widens_as_capacity_shrinks": gap_widens,
+        "overlap_engaged_all": all(e["overlap_engaged"] for e in configs),
+    }
+    with open(TRANSFER_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows
 
 
 # ----------------------------------------------------- sharding-axis bench --
@@ -448,9 +660,18 @@ def main() -> int:
               "hash-mod at some shard count")
     if not shpayload["two_shard_p50_le_one_shard"]:
         print("# WARN 2-shard p50 did not beat the 1-shard thrash floor")
+    with open(TRANSFER_JSON_PATH) as f:
+        tpayload = json.load(f)
+    if not tpayload["grouped_le_per_page_p50_all"]:
+        print("# WARN grouped transfer lost the p50 to per_page at some "
+              "miss rate")
+    if not tpayload["gap_widens_as_capacity_shrinks"]:
+        print("# WARN grouped-vs-per_page fetch gap did not widen as "
+              "capacity shrank")
     print(f"# wrote {os.path.abspath(JSON_PATH)}")
     print(f"# wrote {os.path.abspath(STORAGE_JSON_PATH)}")
     print(f"# wrote {os.path.abspath(SHARDING_JSON_PATH)}")
+    print(f"# wrote {os.path.abspath(TRANSFER_JSON_PATH)}")
     return 0
 
 

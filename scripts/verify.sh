@@ -14,3 +14,8 @@ cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving_backends --smoke
+# Bench regression guard: fresh BENCH_serving/BENCH_transfer p50s must
+# stay within tolerance of the baselines committed at HEAD (and the
+# grouped-transfer / device-vs-numpy claims must hold); see
+# scripts/check_bench_regression.py.
+python scripts/check_bench_regression.py

@@ -22,6 +22,7 @@ callbacks let the serving engine attach real host<->HBM page movement
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from collections import OrderedDict, defaultdict
@@ -62,7 +63,9 @@ class BufferPool:
                  page_sharers: Optional[Dict[PageId, Iterable[ModelId]]] = None,
                  page_locality: Optional[Dict[PageId, Hashable]] = None,
                  on_load: Optional[Callable[[PageId], None]] = None,
-                 on_evict: Optional[Callable[[PageId], None]] = None):
+                 on_evict: Optional[Callable[[PageId], None]] = None,
+                 on_load_group: Optional[Callable[[List[PageId]],
+                                                  None]] = None):
         self.cfg = cfg
         self.meta: Dict[PageId, _PageMeta] = {}
         self.resident: "OrderedDict[PageId, None]" = OrderedDict()
@@ -71,6 +74,14 @@ class BufferPool:
         self.page_locality = dict(page_locality or {})
         self.on_load = on_load
         self.on_evict = on_evict
+        # Grouped backing-tier attachment: inside a deferred_loads()
+        # window every miss's physical load is collected and flushed as
+        # ONE on_load_group call (e.g. a single batched host->HBM
+        # transfer) instead of per-page on_load round trips.  When only
+        # on_load is attached the flush falls back to per-page calls, so
+        # the per-page path is always preserved.
+        self.on_load_group = on_load_group
+        self._load_batch: Optional[List[PageId]] = None
         self.tick = 0
         self.hits = 0
         self.misses = 0
@@ -139,18 +150,63 @@ class BufferPool:
         while len(self.resident) >= self.cfg.capacity_pages:
             self._evict_one()
         self.resident[page] = None
-        if self.on_load:
-            self.on_load(page)
+        self._note_load(page)
         return False
+
+    def _note_load(self, page: PageId) -> None:
+        """Fire (or defer) the physical load for a freshly admitted page:
+        inside a deferred_loads() window the page joins the batch flushed
+        as one on_load_group; otherwise the per-page on_load fires."""
+        if self._load_batch is not None:
+            self._load_batch.append(page)
+        elif self.on_load:
+            self.on_load(page)
+
+    def _flush_loads(self, batch: List[PageId]) -> None:
+        # A page admitted and then evicted inside the same deferred
+        # window must NOT be physically loaded: its eviction already
+        # fired on_evict (a no-op slot free on an attached slab, since
+        # the deferred load never claimed one), and loading it anyway
+        # would create a ghost slab resident — or exhaust the slab's
+        # free slots outright.  Flush only what is still resident.
+        batch = [p for p in batch if p in self.resident]
+        if not batch:
+            return
+        if self.on_load_group is not None:
+            self.on_load_group(list(batch))
+        elif self.on_load:
+            for page in batch:
+                self.on_load(page)
+
+    @contextlib.contextmanager
+    def deferred_loads(self):
+        """Collect every physical page load admitted inside the window
+        and flush them as ONE grouped backing-tier transfer on exit
+        (``on_load_group``; per-page ``on_load`` fallback preserved).
+        Policy bookkeeping — hits/misses, evictions, recency — stays
+        per-page and immediate; only the *physical* movement batches.
+        Reentrant: a nested window joins the outer batch.  The flush
+        runs even if the body raises, so the residency bookkeeping and
+        the backing tier can never diverge."""
+        if self._load_batch is not None:         # nested: join outer batch
+            yield
+            return
+        self._load_batch = []
+        try:
+            yield
+        finally:
+            batch, self._load_batch = self._load_batch, None
+            self._flush_loads(batch)
 
     def access_group(self, model: ModelId, pages: Iterable[PageId]
                      ) -> List[bool]:
         """Touch a batch's whole page working set atomically: the group is
         *pinned* for the duration, so a later miss in the same group can
         never evict an earlier member (which would tear a device-resident
-        working set mid-batch).  Raises ValueError when the group cannot
-        possibly co-reside — callers fall back to unpinned access.
-        Returns the per-page hit flags."""
+        working set mid-batch), and the group's misses flush as ONE
+        physical load (``deferred_loads``).  Raises ValueError when the
+        group cannot possibly co-reside — callers fall back to unpinned
+        access.  Returns the per-page hit flags."""
         pages = list(pages)
         if len(set(pages)) > self.cfg.capacity_pages:
             raise ValueError(
@@ -158,7 +214,8 @@ class BufferPool:
                 f"{self.cfg.capacity_pages}")
         self._pinned = set(pages)
         try:
-            return [self.access(model, p) for p in pages]
+            with self.deferred_loads():
+                return [self.access(model, p) for p in pages]
         finally:
             self._pinned = set()
 
@@ -272,8 +329,7 @@ class BufferPool:
                                   last=self.cfg.policy.endswith("mru"))
         m.last_tick = max(m.last_tick, 0)
         self.prefetches += 1
-        if self.on_load:
-            self.on_load(page)
+        self._note_load(page)
         return True
 
 

@@ -285,13 +285,47 @@ class ModelStore:
 
     def _page_slot_ids(self) -> np.ndarray:
         """[num_pages, blocks_per_page] distinct-id matrix of the packing
-        (-1 marks an unfilled slot in a non-full page)."""
+        (-1 marks an unfilled slot in a non-full page), cached per
+        packing generation (page_pool and the grouped transfer staging
+        path both gather through it)."""
         pk = self.packing
+        hit = self._page_pool_cache.get("__slot_ids__")
+        if hit is not None and hit[0] == self.pack_generation:
+            return hit[1]
         l = self.cfg.blocks_per_page
         ids = np.full((pk.num_pages, l), -1, dtype=np.int64)
         for pid, page in enumerate(pk.pages):
             ids[pid, :len(page)] = page
+        self._page_pool_cache["__slot_ids__"] = (self.pack_generation, ids)
         return ids
+
+    def page_stack(self, page_ids, dtype=np.float32) -> np.ndarray:
+        """[k, blocks_per_page, bh, bw] stack of the requested pages —
+        the grouped transfer staging buffer.  One grouped backend fault
+        (:meth:`fault_pages`) plus one vectorized gather, never k
+        :meth:`page_array` calls (each of which would issue its own
+        backend round trip on a freshly opened store)."""
+        pids = [int(p) for p in page_ids]
+        bh, bw = self.cfg.dedup.block_shape
+        l = self.cfg.blocks_per_page
+        if self._unfetched:
+            self.fault_pages(pids)
+        if self._unfetched:
+            # other pages still live in the backend: assemble page by
+            # page from already-faulted blocks, no full densification
+            out = np.zeros((len(pids), l, bh, bw), dtype=dtype)
+            for i, pid in enumerate(pids):
+                page = self.packing.pages[pid]
+                for slot, did in enumerate(page):
+                    b = self.dedup.distinct[did]
+                    if b is not None:
+                        out[i, slot] = b
+            return out
+        ids = self._page_slot_ids()[np.asarray(pids, dtype=np.int64)]
+        out = self._distinct_stack()[np.clip(ids, 0, None)].astype(
+            dtype, copy=True)
+        out[ids < 0] = 0
+        return out
 
     def page_pool(self, dtype=np.float32) -> np.ndarray:
         """[num_pages, blocks_per_page, bh, bw] physical page array.
@@ -417,13 +451,17 @@ class ModelStore:
 
     def make_buffer_pool(self, capacity_pages: int,
                          policy: str = "optimized_mru",
-                         on_load=None, on_evict=None, **kw) -> BufferPool:
+                         on_load=None, on_evict=None,
+                         on_load_group=None, **kw) -> BufferPool:
         """``on_load``/``on_evict`` attach a backing tier (e.g. the device
-        page pool's host->HBM transfers) to the policy simulator."""
+        page pool's host->HBM transfers) to the policy simulator;
+        ``on_load_group`` attaches the grouped transfer path (a batch's
+        misses flush as one physical movement)."""
         sharers, locality = self.page_metadata()
         return BufferPool(PoolConfig(capacity_pages, policy, **kw),
                           page_sharers=sharers, page_locality=locality,
-                          on_load=on_load, on_evict=on_evict)
+                          on_load=on_load, on_evict=on_evict,
+                          on_load_group=on_load_group)
 
     # --------------------------------------------------------- persistence --
     def save(self, dest=None) -> Dict:

@@ -100,13 +100,16 @@ class DedupDB:
                       compute_backend: str = "numpy",
                       kernel_mode: str = "auto",
                       shards: int = 1,
-                      placement: str = "sharers") -> WeightServer:
+                      placement: str = "sharers",
+                      transfer: str = "grouped") -> WeightServer:
         """ModelStore + Eq.-2 buffer pool + calibrated storage clock.
         ``compute_backend="device"`` serves through the HBM page slab
         (DESIGN.md §3); slab faults then source pages straight from this
         database's backend.  ``shards > 1`` partitions the slab across a
         device mesh with the selected placement policy (DESIGN.md §5;
-        capacity is then per shard)."""
+        capacity is then per shard).  ``transfer`` selects the host->HBM
+        movement path (DESIGN.md §6: "grouped" batches a miss group into
+        one staged transfer; "per_page" is the legacy per-miss path)."""
         if capacity_pages is None:
             capacity_pages = max(1, self.store.num_pages())
         if shards > 1:
@@ -119,10 +122,12 @@ class DedupDB:
                                        storage or self.storage_model(),
                                        shards=shards, placement=placement,
                                        kernel_mode=kernel_mode,
-                                       devices=shard_devices(shards))
+                                       devices=shard_devices(shards),
+                                       transfer=transfer)
         return WeightServer(self.store, capacity_pages, policy,
                             storage or self.storage_model(),
-                            backend=compute_backend, kernel_mode=kernel_mode)
+                            backend=compute_backend, kernel_mode=kernel_mode,
+                            transfer=transfer)
 
     def serve_embedding(self, heads: Dict[str, np.ndarray],
                         capacity_pages: Optional[int] = None,
@@ -134,12 +139,14 @@ class DedupDB:
                         storage: Optional[StorageModel] = None,
                         embed_tensor: str = "embedding",
                         shards: int = 1, placement: str = "sharers",
+                        transfer: str = "grouped",
                         ) -> EmbeddingServingEngine:
         """The paper's multi-model embedding scenario, served out of this
         database in one call.  Returns the engine; ``submit``/``run`` it."""
         server = self.weight_server(capacity_pages, policy, storage,
                                     compute_backend, kernel_mode,
-                                    shards=shards, placement=placement)
+                                    shards=shards, placement=placement,
+                                    transfer=transfer)
         prefetcher = None
         if prefetch:
             from .serving.prefetch import Prefetcher
@@ -160,12 +167,14 @@ class DedupDB:
                  kernel_mode: str = "auto",
                  storage: Optional[StorageModel] = None,
                  shards: int = 1, placement: str = "sharers",
+                 transfer: str = "grouped",
                  ) -> LMServingEngine:
         """LM variants served via prefill/decode with weights faulted
         through the pool (and the backend) on model switch."""
         server = self.weight_server(capacity_pages, policy, storage,
                                     compute_backend, kernel_mode,
-                                    shards=shards, placement=placement)
+                                    shards=shards, placement=placement,
+                                    transfer=transfer)
         prefetcher = None
         if prefetch:
             from .serving.prefetch import Prefetcher

@@ -64,13 +64,22 @@ def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
               f"evicts={server.device_pool.evicts} "
               f"device_batches={stats.device_batches} "
               f"dense_fallbacks={stats.dense_fallbacks}")
+        hbm = server._hbm()
+        print(f"[transfer] mode={args.transfer} "
+              f"pages={stats.transfer_pages} ops={stats.transfer_groups} "
+              f"mean_group={stats.mean_group_size:.1f} "
+              f"moved={stats.transfer_seconds*1e3:.2f}ms "
+              f"overlap={stats.overlap_fraction:.2f} "
+              f"hbm_bw={hbm.bw/1e6:.0f}MB/s hbm_seek={hbm.seek*1e6:.0f}us")
     if getattr(args, "shards", 1) > 1:
         s = server.stats                 # borrow/routing live on the server
         print(f"[shards] n={args.shards} placement={args.placement} "
               f"batches_per_shard={dict(sorted(s.shard_batches.items()))} "
               f"borrows={s.borrow_pages} "
               f"(mirror={s.borrow_mirror_hits} "
-              f"owner_faults={s.borrow_store_faults}) "
+              f"owner_faults={s.borrow_store_faults} "
+              f"coalesced={s.borrow_coalesced}) "
+              f"rebalanced={server.router.rebalanced} "
               f"borrow={s.borrow_seconds*1e3:.2f}ms")
     print(f"[serve] batches={stats.batches} requests={stats.requests} "
           f"scheduler={args.scheduler} overlap={args.overlap} "
@@ -119,9 +128,10 @@ def _make_server(args, store: ModelStore, capacity_pages: int,
         return ShardedWeightServer(store, capacity_pages, args.policy,
                                    storage, shards=args.shards,
                                    placement=args.placement,
-                                   devices=shard_devices(args.shards))
+                                   devices=shard_devices(args.shards),
+                                   transfer=args.transfer)
     return WeightServer(store, capacity_pages, args.policy, storage,
-                        backend=args.backend)
+                        backend=args.backend, transfer=args.transfer)
 
 
 def serve_embedding(args) -> tuple:
@@ -139,7 +149,8 @@ def serve_embedding(args) -> tuple:
             heads, capacity_pages=args.capacity_pages, policy=args.policy,
             scheduler=args.scheduler, overlap=args.overlap,
             prefetch=args.prefetch, compute_backend=args.backend,
-            shards=args.shards, placement=args.placement)
+            shards=args.shards, placement=args.placement,
+            transfer=args.transfer)
         server = engine.server
     else:
         server = _make_server(args, store, args.capacity_pages)
@@ -216,7 +227,8 @@ def serve_lm(args) -> tuple:
                              policy=args.policy, scheduler=args.scheduler,
                              overlap=args.overlap, prefetch=args.prefetch,
                              compute_backend=args.backend,
-                             shards=args.shards, placement=args.placement)
+                             shards=args.shards, placement=args.placement,
+                             transfer=args.transfer)
         server = engine.server
     else:
         server = _make_server(args, store, cap)
@@ -257,6 +269,13 @@ def main(argv=None):
                     help="numpy: host materialization (policy simulator); "
                          "device: serve through the HBM page slab via the "
                          "Pallas dedup kernels (DESIGN.md §3)")
+    ap.add_argument("--transfer", default="grouped",
+                    choices=("per_page", "grouped"),
+                    help="host->HBM page movement: per_page (one "
+                         "device_put + slab update per miss) or grouped "
+                         "(a batch's misses coalesce into ONE staged "
+                         "stack, one device_put, one scatter, one remap "
+                         "generation bump; DESIGN.md §6)")
     ap.add_argument("--shards", type=int, default=1,
                     help="partition the device page pool across N shards "
                          "(per-shard slabs + majority-cover routing + "

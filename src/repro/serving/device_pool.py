@@ -39,6 +39,7 @@ Kernel mode — how :meth:`gather_rows` / :meth:`virtual_matmul` execute:
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, List, Optional, Set, Tuple
 
 import jax
@@ -48,6 +49,7 @@ import numpy as np
 from ..core.blocks import BlockGrid
 from ..core.store import ModelStore, VirtualTensor
 from ..kernels import ops
+from .transfer import TransferEngine
 
 __all__ = ["DevicePagePool"]
 
@@ -99,7 +101,7 @@ class DevicePagePool:
 
     def __init__(self, store: ModelStore, capacity_pages: int,
                  dtype=jnp.float32, kernel_mode: str = "auto",
-                 device=None):
+                 device=None, stage_rows: int = 0):
         if kernel_mode not in ("auto", "pallas", "xla", "host"):
             raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
         self.store = store
@@ -107,23 +109,30 @@ class DevicePagePool:
         self.block_shape = (bh, bw)
         self.blocks_per_page = store.cfg.blocks_per_page
         self.capacity = int(capacity_pages)
+        # Borrow-staging tail (sharded serving): ``stage_rows`` extra
+        # page rows allocated PAST the resident slots, written by
+        # ShardedPagePool once per staging change.  Extended remaps
+        # point borrowed pages at ``capacity + stage_idx``, so the
+        # kernels read one stable buffer — no per-call slab concat.
+        self.stage_rows = int(stage_rows)
         self.dtype = dtype
         self.kernel_mode = kernel_mode
         # Mesh placement: a sharded pool pins each shard's slab (and its
         # compute) to one device of the serving mesh; None = default.
         self.device = device
+        rows = self.capacity + self.stage_rows
         # The preallocated HBM slab. jnp.zeros commits the allocation on
         # the default device up front; every load is an in-place-style
         # functional update of this one buffer.  In host mode the mirror
         # below is the tier's physical backing, so the device buffer is
         # never allocated at all.
         self.slab = None if self.mode() == "host" else self._put(jnp.zeros(
-            (self.capacity, self.blocks_per_page, bh, bw), dtype))
+            (rows, self.blocks_per_page, bh, bw), dtype))
         # Host mirror, kept page-for-page identical with the slab: the
         # "host" kernel mode computes from it, and off-accelerator it is
         # the physical backing of the tier anyway.
         self.host_slab = np.zeros(
-            (self.capacity, self.blocks_per_page, bh, bw), np.float32)
+            (rows, self.blocks_per_page, bh, bw), np.float32)
         self.slot_of: Dict[int, int] = {}        # physical page id -> slot
         self._free: List[int] = list(range(self.capacity - 1, -1, -1))
         # page id -> slot as an int64 array (-1 = absent), maintained O(1)
@@ -137,6 +146,11 @@ class DevicePagePool:
         #                     complete: no -1 holes)
         self._remap_cache: Dict[Tuple[str, str],
                                 Tuple[int, int, np.ndarray, bool]] = {}
+        # Batched/overlapped host->HBM movement (DESIGN.md §6): the
+        # buffer pool's on_load_group callback lands in load_group(),
+        # which stages a group's pages in ONE stacked buffer, ships it
+        # with one device_put and commits it with one scatter.
+        self.transfer = TransferEngine(self)
 
     def _put(self, x):
         """Commit an array to this pool's device (identity when unpinned)."""
@@ -159,6 +173,9 @@ class DevicePagePool:
             return
         slot = self._free.pop()
         page = self.store.page_array(pid, dtype=np.float32)
+        # time only the host->HBM leg: page_array may have faulted the
+        # storage backend, which must never leak into the fitted channel
+        t0 = time.perf_counter()
         if self.mode() != "host":
             self.slab = jax.lax.dynamic_update_slice(
                 self.slab, self._put(jnp.asarray(page[None], self.dtype)),
@@ -168,6 +185,15 @@ class DevicePagePool:
         self._page_to_slot[pid] = slot
         self.generation += 1
         self.loads += 1
+        self.transfer.record_single(time.perf_counter() - t0)
+
+    def load_group(self, pids) -> None:
+        """BufferPool ``on_load_group``: transfer a whole group of pages
+        host->device as ONE staged stack + one scatter + one generation
+        bump (vs. the per-page path's K round trips and K bumps).  Pages
+        prestaged by the engine's double buffer commit from the already
+        in-flight device bytes (see :class:`TransferEngine`)."""
+        self.transfer.load_group(pids)
 
     def evict(self, pid: int) -> None:
         """BufferPool ``on_evict``: release the page's slot.  The slab
@@ -189,6 +215,7 @@ class DevicePagePool:
         self._page_to_slot = np.full(self.store.packing.num_pages, -1,
                                      dtype=np.int64)
         self._remap_cache.clear()
+        self.transfer.drop_pending()             # staged bytes are stale too
         self.generation += 1
 
     # ----------------------------------------------------------- queries --
@@ -199,9 +226,10 @@ class DevicePagePool:
         return set(self.slot_of.values())
 
     def flat_pool(self) -> jnp.ndarray:
-        """Kernel view of the slab: [capacity*blocks_per_page, bh, bw]."""
+        """Kernel view of the slab (incl. any staging tail):
+        [(capacity+stage_rows)*blocks_per_page, bh, bw]."""
         bh, bw = self.block_shape
-        return self.slab.reshape(self.capacity * self.blocks_per_page,
+        return self.slab.reshape(self.slab.shape[0] * self.blocks_per_page,
                                  bh, bw)
 
     def slot_page(self, slot: int) -> np.ndarray:
@@ -256,33 +284,16 @@ class DevicePagePool:
         return all(p in self.slot_of for p in pages)
 
     # ------------------------------------------------------------ compute --
-    def _host_slab_ext(self, extra: Optional[np.ndarray]) -> np.ndarray:
-        """Host mirror, optionally extended with a borrow-staging slab
-        (``[k, blocks_per_page, bh, bw]``): a sharded pool maps borrowed
-        pages to slots past ``capacity``, so the extended stack is index-
-        compatible with an extended remap."""
-        if extra is None:
-            return self.host_slab
-        return np.concatenate([self.host_slab, extra], axis=0)
-
-    def _dev_slab_ext(self, extra: Optional[np.ndarray]):
-        if extra is None:
-            return self.slab
-        return jnp.concatenate(
-            [self.slab, self._put(jnp.asarray(extra, self.dtype))], axis=0)
-
     def gather_rows(self, dev_map: np.ndarray, grid: BlockGrid,
-                    rows: np.ndarray, pad: bool = False,
-                    extra: Optional[np.ndarray] = None):
+                    rows: np.ndarray, pad: bool = False):
         """Rows of the virtual 2-D tensor, gathered from the resident
         slab.  Pallas mode runs ``dedup_embedding`` per column stripe;
         xla mode one jitted gather; host mode a numpy fancy-index gather
         from the slab mirror (returns np.ndarray).
 
-        ``extra`` appends a fixed-size borrow-staging slab past the pool's
-        own slots (sharded serving: the remap points borrowed pages at
-        ``capacity + stage_idx``); its shape is constant per pool so the
-        jit modes keep stable input shapes.
+        Sharded serving's borrowed pages live in the slab's own staging
+        TAIL (``stage_rows`` past ``capacity`` — see ``__init__``), so
+        an extended remap needs no extra buffer here.
 
         For the jit modes ``rows`` is padded to a power-of-two bucket so
         caches stay warm across varying batch row counts; ``pad=True``
@@ -304,7 +315,7 @@ class DevicePagePool:
         mode = self.mode()
         l = self.blocks_per_page
         if mode == "host":
-            slab = self._host_slab_ext(extra)
+            slab = self.host_slab
             flat_rows = slab.reshape(slab.shape[0] * l * bh, bw)
             rb, off = rows // bh, rows % bh
             out = flat_rows[bmap2d[rb] * bh + off[:, None]]      # [n, gw, bw]
@@ -314,24 +325,22 @@ class DevicePagePool:
         ids = np.full(_pad_pow2(max(n, 1)), rows[0] if n else 0, np.int32)
         ids[:n] = rows
         if mode == "pallas":
-            slab = self._dev_slab_ext(extra)
-            pool = slab.reshape(slab.shape[0] * l, bh, bw)
+            pool = self.slab.reshape(self.slab.shape[0] * l, bh, bw)
             out = ops.dedup_embedding_striped(
                 self._put(jnp.asarray(ids)), pool,
                 self._put(jnp.asarray(bmap2d)), width=width)
         else:
-            out = _gather_rows_xla(self._dev_slab_ext(extra),
+            out = _gather_rows_xla(self.slab,
                                    self._put(jnp.asarray(bmap2d)),
                                    self._put(jnp.asarray(ids)),
                                    bh=bh, width=width)
         return out if pad else out[:n]
 
-    def virtual_matmul(self, dev_map: np.ndarray, grid: BlockGrid, x,
-                       extra: Optional[np.ndarray] = None):
+    def virtual_matmul(self, dev_map: np.ndarray, grid: BlockGrid, x):
         """``x @ W_virtual`` with W never densified: dedup_matmul streams
         slab blocks through the scalar-prefetched block map (pallas);
         host mode runs the same k-loop blockwise in numpy against the
-        slab mirror.  ``extra`` as in :meth:`gather_rows`."""
+        slab mirror."""
         bh, bw = self.block_shape
         gh, gw = grid.grid
         K, N = grid.shape2d
@@ -339,7 +348,7 @@ class DevicePagePool:
         mode = self.mode()
         l = self.blocks_per_page
         if mode == "host":
-            slab = self._host_slab_ext(extra)
+            slab = self.host_slab
             blocks = slab.reshape(slab.shape[0] * l, bh, bw)
             x = np.asarray(x, dtype=np.float32)
             xp = x
@@ -360,28 +369,26 @@ class DevicePagePool:
                 widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
                 x = jnp.pad(x, widths)
             bm = 128 if jax.default_backend() == "tpu" else 8
-            slab = self._dev_slab_ext(extra)
-            pool = slab.reshape(slab.shape[0] * l, bh, bw)
+            pool = self.slab.reshape(self.slab.shape[0] * l, bh, bw)
             y = ops.dedup_matmul(self._put(x), pool,
                                  self._put(jnp.asarray(bmap2d)), bm=bm)
             return y[..., :N]
         if x.shape[-1] != gh * bh:      # _matmul_xla slices x to K itself
             assert x.shape[-1] == K, (x.shape, K)
-        return _matmul_xla(self._dev_slab_ext(extra),
+        return _matmul_xla(self.slab,
                            self._put(jnp.asarray(bmap2d)), self._put(x),
                            grid=grid)
 
-    def unblock(self, dev_map: np.ndarray, grid: BlockGrid,
-                extra: Optional[np.ndarray] = None):
+    def unblock(self, dev_map: np.ndarray, grid: BlockGrid):
         """Full tensor reassembled from resident slab blocks (the LM
         model-switch path; np from the mirror in host mode, on-device
-        otherwise).  ``extra`` as in :meth:`gather_rows`."""
+        otherwise)."""
         l = self.blocks_per_page
         bh, bw = self.block_shape
         if self.mode() == "host":
             from ..core.blocks import unblock_tensor
-            slab = self._host_slab_ext(extra)
+            slab = self.host_slab
             blocks = slab.reshape(slab.shape[0] * l, bh, bw)[dev_map]
             return unblock_tensor(blocks, grid)
-        return _unblock_xla(self._dev_slab_ext(extra),
+        return _unblock_xla(self.slab,
                             self._put(jnp.asarray(dev_map)), grid=grid)

@@ -163,11 +163,22 @@ class ServeStats:
     overlapped: bool = False         # engine ran with overlap=True
     device_batches: int = 0          # batches computed against the HBM slab
     dense_fallbacks: int = 0         # device batches that fell back to host
+    # -- host->HBM transfer engine (serving/transfer.py) --
+    transfer_seconds: float = 0.0    # issue-side wall seconds moving pages
+    #                                  host->HBM (dispatch is async)
+    transfer_pages: int = 0          # pages moved
+    transfer_groups: int = 0         # physical transfer operations issued
+    transfer_bytes: int = 0          # bytes moved
+    transfer_overlapped_bytes: int = 0   # of those: staged under compute
+    group_sizes: List[float] = dataclasses.field(default_factory=list)
+    # ^ per batch: pages moved / transfer ops (1.0 = per-page path)
     # -- sharded serving (serving/shard_pool.py) --
     borrow_pages: int = 0            # minority pages staged cross-shard
     borrow_seconds: float = 0.0      # virtual fetch-channel time on borrows
     borrow_mirror_hits: int = 0      # borrows served from an owner's mirror
     borrow_store_faults: int = 0     # borrows that first faulted the owner
+    borrow_coalesced: int = 0        # borrows reused from a prior batch's
+    #                                  staging (consecutive-batch coalescing)
     shard_batches: Dict[int, int] = dataclasses.field(default_factory=dict)
     latencies: List[float] = dataclasses.field(default_factory=list)
     # per-batch virtual fetch-channel seconds (storage + interconnect):
@@ -195,6 +206,18 @@ class ServeStats:
             return self.timeline_seconds
         return self.total_seconds
 
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of host->HBM bytes whose transfer was staged ahead
+        of demand (issued under the previous batch's compute — the
+        double-buffered path)."""
+        return self.transfer_overlapped_bytes / self.transfer_bytes \
+            if self.transfer_bytes else 0.0
+
+    @property
+    def mean_group_size(self) -> float:
+        return float(np.mean(self.group_sizes)) if self.group_sizes else 0.0
+
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies, p)) if self.latencies \
             else 0.0
@@ -215,25 +238,44 @@ class WeightServer:
     jitted XLA gathers, for GPUs.  See DevicePagePool's docstring).
     """
 
+    TRANSFERS = ("per_page", "grouped")
+
     def __init__(self, store: ModelStore, capacity_pages: int,
                  policy: str = "optimized_mru",
                  storage: Optional[StorageModel] = None,
-                 backend: str = "numpy", kernel_mode: str = "auto"):
+                 backend: str = "numpy", kernel_mode: str = "auto",
+                 transfer: str = "grouped",
+                 charge_transfer: bool = False,
+                 hbm: Optional[StorageModel] = None):
         if backend not in ("numpy", "device"):
             raise ValueError(f"unknown backend {backend!r}")
+        if transfer not in self.TRANSFERS:
+            raise ValueError(f"unknown transfer mode {transfer!r}; "
+                             f"have {self.TRANSFERS}")
         self.store = store
         self.backend = backend
+        self.transfer = transfer
         self.device_pool = None
-        on_load = on_evict = None
+        on_load = on_evict = on_load_group = None
         if backend == "device":
             from .device_pool import DevicePagePool
             self.device_pool = DevicePagePool(store, capacity_pages,
                                               kernel_mode=kernel_mode)
             on_load = self.device_pool.load
             on_evict = self.device_pool.evict
+            if transfer == "grouped":
+                on_load_group = self.device_pool.load_group
         self.pool: BufferPool = store.make_buffer_pool(
-            capacity_pages, policy, on_load=on_load, on_evict=on_evict)
+            capacity_pages, policy, on_load=on_load, on_evict=on_evict,
+            on_load_group=on_load_group)
         self.storage = storage or StorageModel("ssd")
+        # Host<->HBM channel of the virtual clock.  When ``charge_
+        # transfer`` is set, misses additionally pay this channel —
+        # per-page seeks on the per_page path, one seek per group on the
+        # grouped path — calibrated lazily from the transfer engine's
+        # *measured* bandwidth unless an explicit model is given.
+        self.charge_transfer = charge_transfer
+        self.hbm_channel = hbm
         bh, bw = store.cfg.dedup.block_shape
         # a page's cost on the wire is its *persisted* size (fp16 stores
         # move half the bytes of fp32 ones)
@@ -279,16 +321,44 @@ class WeightServer:
                 pass
         return [self.pool.access(model, pid) for pid in page_ids]
 
+    def _hbm(self) -> StorageModel:
+        """The host<->HBM channel model, calibrated on first use from
+        the transfer engine's measured group-transfer bandwidth."""
+        if self.hbm_channel is None:
+            if self.device_pool is not None:
+                self.hbm_channel = self.device_pool.transfer.storage_model()
+            else:
+                self.hbm_channel = StorageModel("dram")
+        return self.hbm_channel
+
+    def _charge_hbm(self, misses: int) -> float:
+        """Virtual host->HBM seconds for ``misses`` pages, per the
+        server's transfer mode: the per_page path pays a seek per page,
+        the grouped path one seek for the whole group."""
+        if not self.charge_transfer or not misses \
+                or self.backend != "device":
+            return 0.0
+        hbm = self._hbm()
+        if self.transfer == "grouped":
+            return hbm.fetch_group_seconds(self.page_bytes, misses)
+        # drawn per page (not misses * one draw) so a jittered channel
+        # tails properly — each per-page transfer is its own sample
+        return float(sum(hbm.fetch_seconds(self.page_bytes)
+                         for _ in range(misses)))
+
     def access_pages(self, model: str, page_ids) -> float:
         """Touch pages through the pool one at a time (serial baseline:
         every miss pays its own seek, inline); returns virtual seconds."""
         self._sync_store()
         page_ids = list(page_ids)
         t = 0.0
+        misses = 0
         for hit in self._access(model, page_ids):
             if not hit:
                 t += self.storage.fetch_seconds(self.page_bytes)
+                misses += 1
                 self.stats.pages_fetched += 1
+        t += self._charge_hbm(misses)
         self.stats.fetch_seconds += t
         return t
 
@@ -307,9 +377,34 @@ class WeightServer:
         self.store.fault_pages(page_ids)
         misses = sum(not hit for hit in self._access(model, page_ids))
         t = self.storage.fetch_group_seconds(self.page_bytes, misses)
+        t += self._charge_hbm(misses)
         self.stats.pages_fetched += misses
         self.stats.fetch_seconds += t
         return t
+
+    # ---------------------------------------------- transfer double buffer --
+    def prestage(self, page_ids) -> None:
+        """Issue the host->HBM staging transfer for ``page_ids``'s
+        missing pages *now* (async), ahead of the buffer pool admitting
+        them: the engines call this for the next queued batch right
+        before computing the current one, so the copy overlaps compute
+        (JAX async dispatch) and the eventual commit finds the bytes
+        already device-side."""
+        if self.device_pool is None or self.transfer != "grouped":
+            return
+        self._sync_store()
+        self.device_pool.transfer.stage(page_ids)
+
+    def transfer_snapshot(self) -> Optional[Dict[str, float]]:
+        """Cumulative transfer-engine counters (None on the numpy
+        backend); the engines diff consecutive snapshots to attribute
+        movement to batches in ``ServeStats``."""
+        if self.device_pool is None:
+            return None
+        s = self.device_pool.transfer.stats
+        return {"seconds": s.seconds, "pages": s.pages, "bytes": s.bytes,
+                "groups": s.groups,
+                "overlapped_bytes": s.overlapped_bytes}
 
     def tensor_pages(self, model: str, tensor: str) -> List[int]:
         return self.store.packing.tensor_pages[(model, tensor)]
@@ -408,9 +503,46 @@ def _tok_logits(emb_tokens, head):
 
 
 class _PrefetchingEngine:
-    """Shared scheduler-engine plumbing: the per-batch prefetch step.
-    Subclasses provide ``prefetcher``, ``overlap``, ``timeline``,
-    ``stats``."""
+    """Shared scheduler-engine plumbing: the per-batch prefetch step,
+    transfer-stat attribution, and next-batch prestaging.  Subclasses
+    provide ``prefetcher``, ``overlap``, ``timeline``, ``stats``,
+    ``scheduler``, ``server``."""
+
+    def _transfer_snap(self):
+        return self.server.transfer_snapshot()
+
+    def _add_transfer_delta(self, snap) -> None:
+        """Fold the transfer engine's movement since ``snap`` into the
+        stats (per-batch attribution; group_sizes gets this batch's
+        pages-per-operation ratio: 1.0 on the per_page path)."""
+        cur = self.server.transfer_snapshot()
+        if snap is None or cur is None:
+            return
+        d_groups = cur["groups"] - snap["groups"]
+        d_pages = cur["pages"] - snap["pages"]
+        self.stats.transfer_seconds += cur["seconds"] - snap["seconds"]
+        self.stats.transfer_bytes += cur["bytes"] - snap["bytes"]
+        self.stats.transfer_overlapped_bytes += \
+            cur["overlapped_bytes"] - snap["overlapped_bytes"]
+        self.stats.transfer_pages += d_pages
+        self.stats.transfer_groups += d_groups
+        if d_groups > 0:
+            self.stats.group_sizes.append(d_pages / d_groups)
+
+    def _prestage_next(self) -> None:
+        """Double buffer: issue the NEXT queued batch's host->HBM staging
+        transfer before computing the current batch, so the copy rides
+        under compute (JAX async dispatch).  Approximation: the head of
+        the pending queue in arrival order — exact for fifo, a best
+        guess for rotating schedulers (a wrong guess only wastes one
+        staging buffer, it can never corrupt residency)."""
+        if not self.overlap:
+            return
+        gen = self.server.store.pack_generation
+        for b in self.scheduler.pending_batches()[:1]:
+            if b.pages is None or b.pages_gen != gen:
+                continue
+            self.server.prestage(sorted(b.pages))
 
     def _maybe_prefetch(self) -> None:
         """Speculative I/O rides the fetch channel *under* compute,
@@ -425,7 +557,9 @@ class _PrefetchingEngine:
         budget = self.timeline.compute_clock - self.timeline.fetch_clock
         if budget <= 0:
             return
+        snap = self._transfer_snap()
         pf_t = self.prefetcher.step(budget)
+        self._add_transfer_delta(snap)
         self.timeline.charge_fetch(pf_t)
         self.stats.prefetch_seconds += pf_t
         self.stats.prefetch_pages = self.prefetcher.stats.issued
@@ -497,12 +631,16 @@ class EmbeddingServingEngine(_PrefetchingEngine):
         else:
             pages = self.server.embedding_rows_pages(
                 model, self.embed_tensor, np.unique(docs))
+        snap = self._transfer_snap()
         if self.overlap:
             fetch_t = self.server.access_pages_grouped(model, pages)
         else:
             fetch_t = self.server.access_pages(model, pages)
         if self.prefetcher is not None:
             self.prefetcher.note_demand(pages)     # lookahead hit accounting
+        # double buffer: next batch's host->HBM copy issues now, rides
+        # under this batch's compute (async dispatch), commits next turn
+        self._prestage_next()
         t0 = time.perf_counter()
         logits = None
         if self.server.backend == "device":
@@ -531,6 +669,7 @@ class EmbeddingServingEngine(_PrefetchingEngine):
             logits = feats @ self.heads[model]
         compute_t = time.perf_counter() - t0
         self.last_logits = logits
+        self._add_transfer_delta(snap)
 
         if self.overlap:
             issue, done = self.timeline.advance(fetch_t, compute_t)
@@ -660,8 +799,10 @@ class LMServingEngine(_PrefetchingEngine):
 
     def generate(self, model: str, prompts: np.ndarray,
                  steps: int = 8) -> Tuple[np.ndarray, float]:
+        snap = self._transfer_snap()
         fetch_t = self._load_model(model)
         out, dt = self._compute(model, prompts, steps)
+        self._add_transfer_delta(snap)
         if self.overlap:
             # keep the timeline live on the direct call path too, so
             # makespan_seconds stays well-defined for overlap engines
@@ -692,11 +833,14 @@ class LMServingEngine(_PrefetchingEngine):
             if batch is None:
                 break
             prompts, steps = batch.payload
+            snap = self._transfer_snap()
             fetch_t = self._load_model(batch.model, grouped=self.overlap)
             if self.prefetcher is not None:
                 self.prefetcher.note_demand(
                     self.server.store.model_pages(batch.model))
+            self._prestage_next()       # next model's pages ∥ this compute
             out, compute_t = self._compute(batch.model, prompts, steps)
+            self._add_transfer_delta(snap)
             if self.overlap:
                 issue, done = self.timeline.advance(fetch_t, compute_t)
                 self.stats.latencies.append(done - issue)

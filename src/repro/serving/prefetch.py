@@ -25,6 +25,7 @@ report each batch's demand set via :meth:`Prefetcher.note_demand`).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -156,27 +157,37 @@ class Prefetcher:
         the demand path.  The round still amortizes like ONE grouped
         fetch: a single seek, then seek-less per-page transfers —
         page-at-a-time prefetching would pay a seek per page and lose to
-        the demand path's own group amortization."""
+        the demand path's own group amortization.
+
+        The *physical* reads group the same way the accounting does:
+        admission runs inside the pool's ``deferred_loads`` window, so
+        every page the policy admits this round flushes as ONE grouped
+        backend read + ONE host->HBM transfer (``on_load_group``) —
+        never a per-page ``store.page_array`` -> ``get_pages`` round
+        trip per admitted page."""
         storage = self.server.storage
         base_transfer = self.server.page_bytes / storage.bw
         issued = 0
         t = 0.0
-        for model, page in self.plan():
-            cost_floor = (storage.seek if issued == 0 else 0.0) \
-                + base_transfer
-            if budget_s is not None and t + cost_floor > budget_s:
-                break
-            if self.server.pool.prefetch(model, page):
-                if issued == 0:
-                    t += storage.fetch_seconds(self.server.page_bytes)
+        deferred = getattr(self.server.pool, "deferred_loads",
+                           contextlib.nullcontext)
+        with deferred():
+            for model, page in self.plan():
+                cost_floor = (storage.seek if issued == 0 else 0.0) \
+                    + base_transfer
+                if budget_s is not None and t + cost_floor > budget_s:
+                    break
+                if self.server.pool.prefetch(model, page):
+                    if issued == 0:
+                        t += storage.fetch_seconds(self.server.page_bytes)
+                    else:
+                        t += storage.transfer_seconds(self.server.page_bytes)
+                    issued += 1
+                    if page in self._plan_lookahead:
+                        self.stats.lookahead_issued += 1
+                        self._outstanding.add(int(page))
                 else:
-                    t += storage.transfer_seconds(self.server.page_bytes)
-                issued += 1
-                if page in self._plan_lookahead:
-                    self.stats.lookahead_issued += 1
-                    self._outstanding.add(int(page))
-            else:
-                self.stats.declined += 1
+                    self.stats.declined += 1
         self.stats.issued += issued
         self.stats.seconds += t
         return t

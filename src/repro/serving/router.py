@@ -3,7 +3,9 @@
 A batch's page working set rarely lives on one shard only; the router
 sends the batch to the shard that *owns the majority of its cover
 pages* (placement score = |pages ∩ shard's owned set|, ties to the
-lowest shard id so routing is deterministic), and splits the set into:
+lowest shard id — except replication ties, which spread to the tied
+shard with the lowest observed load so replicas actually absorb
+traffic), and splits the set into:
 
   * ``owned``    — pages placement assigned to the chosen shard.  These
     are demand-faulted through that shard's own buffer pool (shard-local
@@ -49,8 +51,17 @@ class ShardRouter:
     whose page ids they were made from.
     """
 
-    def __init__(self, placement_fn: Callable):
+    def __init__(self, placement_fn: Callable,
+                 balance_replicas: bool = True):
         self._placement = placement_fn
+        # Replica load balancing (ROADMAP): when several shards tie on
+        # cover *because the batch's pages are replicated on them*, send
+        # the batch to the least-loaded of the tied shards instead of
+        # always the lowest id — replication only pays off if the
+        # replicas actually absorb traffic.  ``rebalanced`` counts the
+        # batches this moved off the default (lowest-id) shard.
+        self.balance_replicas = balance_replicas
+        self.rebalanced = 0
         # Routing-DECISION counters (what the router asked for).  What
         # actually executed — borrows staged, fallbacks, per-shard batch
         # totals — lives on the serving ServeStats; the two differ when
@@ -58,18 +69,28 @@ class ShardRouter:
         self.batches_per_shard: Dict[int, int] = {}
         self.borrowed_pages = 0
 
-    def choose(self, pages) -> int:
-        """The shard owning the majority of ``pages`` (ties -> lowest)."""
+    def choose(self, pages, record: bool = True) -> int:
+        """The shard owning the majority of ``pages``.  Ties go to the
+        lowest shard id — except replication ties (the tied shards all
+        hold replicas of the batch's shared pages), which go to the tied
+        shard with the fewest batches routed so far, so replicated reads
+        move off the hot shard.  ``record=False`` (advisory probes)
+        never bumps the ``rebalanced`` proof counter."""
         pl = self._placement()
         ps = set(pages)
         if not ps or pl.num_shards == 1:
             return 0
-        best, best_score = 0, -1
-        for s in range(pl.num_shards):
-            score = len(ps & pl.owned_sets[s])
-            if score > best_score:
-                best, best_score = s, score
-        return best
+        scores = [len(ps & pl.owned_sets[s]) for s in range(pl.num_shards)]
+        best_score = max(scores)
+        tied = [s for s, sc in enumerate(scores) if sc == best_score]
+        if len(tied) > 1 and self.balance_replicas \
+                and ps & pl.replicated:
+            chosen = min(tied,
+                         key=lambda s: (self.batches_per_shard.get(s, 0), s))
+            if record and chosen != tied[0]:
+                self.rebalanced += 1
+            return chosen
+        return tied[0]
 
     def split(self, pages, shard: int) -> Tuple[List[int], List[int]]:
         """(owned, borrowed) of ``pages`` relative to ``shard``."""
@@ -80,10 +101,11 @@ class ShardRouter:
         return owned, borrowed
 
     def route(self, pages, record: bool = True) -> RouteDecision:
-        """Route one batch; ``record=False`` recomputes the (same,
-        deterministic) decision without double-counting stats."""
+        """Route one batch; ``record=False`` recomputes the decision
+        without counting stats (deterministic given the same observed
+        per-shard loads)."""
         pl = self._placement()
-        shard = self.choose(pages)
+        shard = self.choose(pages, record=record)
         owned, borrowed = self.split(pages, shard)
         if record:
             self.batches_per_shard[shard] = \

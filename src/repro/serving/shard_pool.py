@@ -49,6 +49,7 @@ is ever borrowed, and behavior matches the single-slab device backend.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -190,25 +191,34 @@ class ShardedPagePool:
                  policy: str = "optimized_mru", kernel_mode: str = "auto",
                  replicate_frac: float = 0.5,
                  borrow_capacity: Optional[int] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 transfer: str = "grouped"):
         if placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {placement!r}; "
                              f"have {PLACEMENTS}")
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
+        if transfer not in WeightServer.TRANSFERS:
+            raise ValueError(f"unknown transfer mode {transfer!r}; "
+                             f"have {WeightServer.TRANSFERS}")
         self.store = store
         self.num_shards = int(num_shards)
         self.capacity_per_shard = int(capacity_per_shard)
         self.placement_policy = placement
         self.replicate_frac = float(replicate_frac)
+        self.transfer = transfer
         self.borrow_capacity = int(borrow_capacity
                                    if borrow_capacity is not None
                                    else capacity_per_shard)
         devs = list(devices) if devices else []
+        # stage_rows: each shard's slab carries a borrow-staging TAIL
+        # past its resident slots, so extended remaps read one stable
+        # buffer — no per-compute-call slab concatenation.
         self.pools: List[DevicePagePool] = [
             DevicePagePool(store, self.capacity_per_shard,
                            kernel_mode=kernel_mode,
-                           device=devs[s % len(devs)] if devs else None)
+                           device=devs[s % len(devs)] if devs else None,
+                           stage_rows=self.borrow_capacity)
             for s in range(self.num_shards)]
         bh, bw = store.cfg.dedup.block_shape
         l = store.cfg.blocks_per_page
@@ -217,26 +227,44 @@ class ShardedPagePool:
                             for _ in range(self.num_shards)]
         self._staged: List[Dict[int, int]] = [dict()
                                               for _ in range(self.num_shards)]
+        # Slab tails are synced from _stage_host once per staging
+        # *change* (dirty flag), never once per compute call.
+        self._stage_dirty: List[bool] = [True] * self.num_shards
         self._placement_obj: Optional[Placement] = None
         self.buffer_pools: List[BufferPool] = [
-            store.make_buffer_pool(self.capacity_per_shard, policy,
-                                   on_load=self._mk_on_load(s),
-                                   on_evict=self.pools[s].evict)
+            store.make_buffer_pool(
+                self.capacity_per_shard, policy,
+                on_load=self._mk_on_load(s),
+                on_evict=self.pools[s].evict,
+                on_load_group=(self._mk_on_load_group(s)
+                               if transfer == "grouped" else None))
             for s in range(self.num_shards)]
         self.view = _ShardedPoolView(self)
         self.borrow_mirror_hits = 0
         self.borrow_store_faults = 0
+        self.borrow_coalesced = 0
+
+    def _check_owner(self, shard: int, pid: int) -> None:
+        owners = self.placement().shards_of(pid)
+        if shard not in owners:
+            raise RuntimeError(
+                f"placement invariant violated: page {pid} loading on "
+                f"shard {shard} but placement assigned {owners}")
 
     def _mk_on_load(self, shard: int):
         def on_load(pid):
             pid = int(pid)
-            owners = self.placement().shards_of(pid)
-            if shard not in owners:
-                raise RuntimeError(
-                    f"placement invariant violated: page {pid} loading on "
-                    f"shard {shard} but placement assigned {owners}")
+            self._check_owner(shard, pid)
             self.pools[shard].load(pid)
         return on_load
+
+    def _mk_on_load_group(self, shard: int):
+        def on_load_group(pids):
+            pids = [int(p) for p in pids]
+            for pid in pids:
+                self._check_owner(shard, pid)
+            self.pools[shard].load_group(pids)
+        return on_load_group
 
     # ----------------------------------------------------------- placement --
     def placement(self) -> Placement:
@@ -261,6 +289,7 @@ class ShardedPagePool:
             p.flush()
         for d in self._staged:
             d.clear()
+        self._stage_dirty = [True] * self.num_shards
         self._placement_obj = None
 
     # ------------------------------------------------------------- borrows --
@@ -268,44 +297,95 @@ class ShardedPagePool:
         return self._staged[shard]
 
     def stage_borrows(self, shard: int, pages, model
-                      ) -> Optional[Tuple[Dict[int, int], int, int]]:
+                      ) -> Optional[Tuple[Dict[int, int], int, int, int]]:
         """Stage ``pages`` (owned elsewhere) into ``shard``'s borrow slab.
 
-        Replaces the shard's previous staging (borrows are per-batch
-        transients, never slab residents).  Pages not resident on any
-        owning shard are demand-faulted into their primary owner's pool
-        first — loads only ever happen on owners, and the next borrow of
-        the same page hits the mirror.  Returns ``(staged map,
-        mirror_hits, owner_faults)``, or None when the borrow set cannot
-        fit the staging slab (caller falls back to the host)."""
+        **Coalesced across batches**: pages already staged on this shard
+        by an earlier batch are *reused* (page bytes are immutable per
+        packing, so a staged copy never goes stale within one
+        generation) — the consecutive-same-shard-batch win the ROADMAP
+        names.  Stale staged entries the current batch doesn't need are
+        dropped to free staging slots.
+
+        **Batched within a batch**: new pages are grouped by owning
+        shard; each owner's missing pages demand-fault through that
+        owner's pool as ONE pinned group (one grouped transfer on the
+        owner), and each owner's mirror rows copy into the staging slab
+        with one vectorized gather instead of a per-page loop.
+
+        Returns ``(staged map, mirror_hits, owner_faults, reused)``, or
+        None when the borrow set cannot fit the staging slab (caller
+        falls back to the host)."""
         pages = sorted(set(int(p) for p in pages))
         st = self._staged[shard]
-        st.clear()
         if not pages:
-            return {}, 0, 0
+            return dict(st), 0, 0, 0
         if len(pages) > self.borrow_capacity:
+            st.clear()
+            self._stage_dirty[shard] = True
             return None
         pl = self.placement()
         buf = self._stage_host[shard]
-        hits = faults = 0
-        for i, pid in enumerate(pages):
-            owners = pl.shards_of(pid)
-            assert shard not in owners, \
-                f"page {pid} is owned by shard {shard}; not a borrow"
-            owner = next((o for o in owners
-                          if pid in self.pools[o].slot_of), None)
-            if owner is None:
-                owner = owners[0]
-                self.buffer_pools[owner].access(model, pid)
-                faults += 1
-            else:
-                hits += 1
-            buf[i] = self.pools[owner].host_slab[
-                self.pools[owner].slot_of[pid]]
-            st[pid] = i
+        pset = set(pages)
+        reused = [p for p in pages if p in st]
+        new = [p for p in pages if p not in st]
+        if new:
+            # drop stale entries (not in this batch) to free their slots
+            for p in [p for p in st if p not in pset]:
+                del st[p]
+            free = sorted(set(range(self.borrow_capacity)) - set(st.values()),
+                          reverse=True)
+            for pid in new:
+                st[pid] = free.pop()
+            # owner resolution + mirror hits FIRST: their bytes are
+            # copied before any fault below can evict them
+            fault_by_owner: Dict[int, List[int]] = {}
+            hit_by_owner: Dict[int, List[int]] = {}
+            hits = 0
+            for pid in new:
+                owners = pl.shards_of(pid)
+                assert shard not in owners, \
+                    f"page {pid} is owned by shard {shard}; not a borrow"
+                owner = next((o for o in owners
+                              if pid in self.pools[o].slot_of), None)
+                if owner is None:
+                    fault_by_owner.setdefault(owners[0], []).append(pid)
+                else:
+                    hit_by_owner.setdefault(owner, []).append(pid)
+                    hits += 1
+            for owner, pids in hit_by_owner.items():
+                # one vectorized mirror->stage copy per owning shard
+                mirror = self.pools[owner].host_slab
+                slots = np.asarray([self.pools[owner].slot_of[p]
+                                    for p in pids])
+                buf[np.asarray([st[p] for p in pids])] = mirror[slots]
+            faults = 0
+            for owner, pids in sorted(fault_by_owner.items()):
+                bp = self.buffer_pools[owner]
+                with bp.deferred_loads():        # ONE transfer on the owner
+                    for pid in pids:
+                        bp.access(model, pid)
+                        faults += 1
+                # copy after the flush; a page the fault window itself
+                # evicted again (thrashing owner pool) sources its —
+                # identical — bytes straight from the store instead
+                pool_o = self.pools[owner]
+                live = [p for p in pids if p in pool_o.slot_of]
+                if live:
+                    slots = np.asarray([pool_o.slot_of[p] for p in live])
+                    buf[np.asarray([st[p] for p in live])] = \
+                        pool_o.host_slab[slots]
+                for p in pids:
+                    if p not in pool_o.slot_of:
+                        buf[st[p]] = self.store.page_array(
+                            p, dtype=np.float32)
+            self._stage_dirty[shard] = True
+        else:
+            hits = faults = 0
         self.borrow_mirror_hits += hits
         self.borrow_store_faults += faults
-        return dict(st), hits, faults
+        self.borrow_coalesced += len(reused)
+        return dict(st), hits, faults, len(reused)
 
     # --------------------------------------------------------------- remap --
     def remap(self, shard: int, vt: VirtualTensor,
@@ -336,8 +416,23 @@ class ShardedPagePool:
         return dev_map, True
 
     # ------------------------------------------------------------- compute --
-    def _extra(self, shard: int, uses_extra: bool) -> Optional[np.ndarray]:
-        return self._stage_host[shard] if uses_extra else None
+    def _sync_stage(self, shard: int) -> None:
+        """Flush the shard's staging buffer into its slab TAIL (the
+        ``stage_rows`` past ``capacity``) — host mirror always, device
+        slab via one fixed-shape ``dynamic_update_slice`` — once per
+        staging *change*, so compute calls read one stable buffer."""
+        if not self._stage_dirty[shard]:
+            return
+        pool = self.pools[shard]
+        buf = self._stage_host[shard]
+        pool.host_slab[pool.capacity:] = buf
+        if pool.mode() != "host":
+            import jax
+            import jax.numpy as jnp
+            pool.slab = jax.lax.dynamic_update_slice(
+                pool.slab, pool._put(jnp.asarray(buf, pool.dtype)),
+                (pool.capacity, 0, 0, 0))
+        self._stage_dirty[shard] = False
 
     def _unpin(self, shard: int, out):
         """Results computed on a pinned shard device come back committed
@@ -354,18 +449,23 @@ class ShardedPagePool:
 
     def gather_rows(self, shard: int, dev_map, grid, rows, pad: bool = False,
                     uses_extra: bool = False):
+        if uses_extra:
+            self._sync_stage(shard)
         return self._unpin(shard, self.pools[shard].gather_rows(
-            dev_map, grid, rows, pad=pad,
-            extra=self._extra(shard, uses_extra)))
+            dev_map, grid, rows, pad=pad))
 
     def virtual_matmul(self, shard: int, dev_map, grid, x,
                        uses_extra: bool = False):
+        if uses_extra:
+            self._sync_stage(shard)
         return self._unpin(shard, self.pools[shard].virtual_matmul(
-            dev_map, grid, x, extra=self._extra(shard, uses_extra)))
+            dev_map, grid, x))
 
     def unblock(self, shard: int, dev_map, grid, uses_extra: bool = False):
+        if uses_extra:
+            self._sync_stage(shard)
         return self._unpin(shard, self.pools[shard].unblock(
-            dev_map, grid, extra=self._extra(shard, uses_extra)))
+            dev_map, grid))
 
     # ----------------------------------------------------------- reporting --
     @property
@@ -399,7 +499,9 @@ class ShardedPagePool:
             return None
         # stage through the host: the per-shard slabs are committed to
         # different devices, so stacking them directly would mix devices
-        stacked = np.stack([np.asarray(p.slab) for p in self.pools])
+        # (the transient borrow-staging tails are not part of the pool)
+        stacked = np.stack([np.asarray(p.slab)[:p.capacity]
+                            for p in self.pools])
         if mesh is None:
             return jnp.asarray(stacked)
         from ..distributed.sharding import slab_sharding
@@ -472,6 +574,16 @@ class _ShardedPoolView:
         for bp in self._s.buffer_pools:
             bp.reset_stats()
 
+    @contextlib.contextmanager
+    def deferred_loads(self):
+        """Batch physical loads across every shard pool: whichever shard
+        a page routes to, its loads flush as one grouped transfer per
+        shard on exit (the prefetcher wraps its issuing loop in this)."""
+        with contextlib.ExitStack() as stack:
+            for bp in self._s.buffer_pools:
+                stack.enter_context(bp.deferred_loads())
+            yield
+
     def model_rates(self) -> Dict:
         """Per-model λ estimates summed over shards (each shard sees a
         slice of the model's demand stream)."""
@@ -518,17 +630,25 @@ class ShardedWeightServer(WeightServer):
                  interconnect: Optional[StorageModel] = None,
                  replicate_frac: float = 0.5,
                  borrow_capacity: Optional[int] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 transfer: str = "grouped",
+                 charge_transfer: bool = False,
+                 hbm: Optional[StorageModel] = None,
+                 balance_replicas: bool = True):
         self.store = store
         self.backend = "device"
+        self.transfer = transfer
+        self.charge_transfer = charge_transfer
+        self.hbm_channel = hbm
         self.sharded = ShardedPagePool(
             store, shards, capacity_pages, placement=placement,
             policy=policy, kernel_mode=kernel_mode,
             replicate_frac=replicate_frac, borrow_capacity=borrow_capacity,
-            devices=devices)
+            devices=devices, transfer=transfer)
         self.device_pool = self.sharded        # aggregate reporting view
         self.pool = self.sharded.view          # union view for the engines
-        self.router = ShardRouter(self.sharded.placement)
+        self.router = ShardRouter(self.sharded.placement,
+                                  balance_replicas=balance_replicas)
         self.storage = storage or StorageModel("ssd")
         # Borrow transfers move host-mirror bytes across the mesh, not
         # through the storage tier: charged at host-DRAM/interconnect
@@ -599,10 +719,13 @@ class ShardedWeightServer(WeightServer):
         except ValueError:        # group can't co-reside: unpinned
             flags = [bp.access(model, p) for p in route.owned]
         t = 0.0
+        misses = 0
         for hit in flags:
             if not hit:
                 t += self.storage.fetch_seconds(self.page_bytes)
+                misses += 1
                 self.stats.pages_fetched += 1
+        t += self._charge_hbm(misses)
         t += self._borrow(route, model, grouped=False)
         self.stats.fetch_seconds += t
         return t
@@ -623,6 +746,7 @@ class ShardedWeightServer(WeightServer):
             flags = [bp.access(model, p) for p in route.owned]
         misses = sum(not h for h in flags)
         t = self.storage.fetch_group_seconds(self.page_bytes, misses)
+        t += self._charge_hbm(misses)
         self.stats.pages_fetched += misses
         t += self._borrow(route, model, grouped=True)
         self.stats.fetch_seconds += t
@@ -649,8 +773,12 @@ class ShardedWeightServer(WeightServer):
             self.stats.pages_fetched += n
             self.stats.borrow_seconds += t
             return t
-        staged, mirror_hits, owner_faults = res
-        n = len(staged)
+        staged, mirror_hits, owner_faults, reused = res
+        # coalesced borrows (already staged by a previous same-shard
+        # batch) move no bytes and pay no interconnect charge — only the
+        # freshly staged pages do
+        n = mirror_hits + owner_faults
+        self.stats.borrow_coalesced += reused
         if not n:
             return 0.0
         if grouped:
@@ -666,6 +794,37 @@ class ShardedWeightServer(WeightServer):
         self.stats.borrow_mirror_hits += mirror_hits
         self.stats.borrow_store_faults += owner_faults
         return t
+
+    # ---------------------------------------------- transfer double buffer --
+    def _hbm(self) -> StorageModel:
+        """Host<->HBM channel calibrated from shard 0's transfer engine
+        (the shards' slabs are identical in shape and placement class)."""
+        if self.hbm_channel is None:
+            self.hbm_channel = self.sharded.pools[0].transfer.storage_model()
+        return self.hbm_channel
+
+    def prestage(self, page_ids) -> None:
+        """Stage the next batch's *owned* missing pages on the shard it
+        will route to (borrowed pages move through the staging slab, not
+        the transfer engine, so they are not prestaged)."""
+        if self.transfer != "grouped":
+            return
+        self._sync_store()
+        route = self.router.route(list(page_ids), record=False)
+        if route.owned:
+            self.sharded.pools[route.shard].transfer.stage(route.owned)
+
+    def transfer_snapshot(self):
+        out = {"seconds": 0.0, "pages": 0, "bytes": 0, "groups": 0,
+               "overlapped_bytes": 0}
+        for p in self.sharded.pools:
+            s = p.transfer.stats
+            out["seconds"] += s.seconds
+            out["pages"] += s.pages
+            out["bytes"] += s.bytes
+            out["groups"] += s.groups
+            out["overlapped_bytes"] += s.overlapped_bytes
+        return out
 
     # ------------------------------------------------- device (HBM) path --
     def device_gather_rows(self, model: str, tensor: str, rows,

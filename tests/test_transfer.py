@@ -1,0 +1,430 @@
+"""Batched/overlapped host->HBM transfers (serving/transfer.py, PR 5):
+grouped-vs-per-page logit equivalence (embedding + LM; host, Pallas
+interpret and XLA kernel modes; 1/2/4 shards), single-generation-bump
+per group, double-buffer overlap stats, grouped prefetcher backend
+reads, replica load balancing, and cross-batch borrow coalescing."""
+import numpy as np
+import pytest
+
+from repro.core import DedupConfig, LSHConfig, ModelStore, StoreConfig
+from repro.data.pipeline import SyntheticTextTask
+from repro.launch.serve import build_store
+from repro.serving.engine import (EmbeddingServingEngine, LMServingEngine,
+                                  ServeStats, StorageModel, WeightServer)
+from repro.serving.prefetch import Prefetcher
+from repro.serving.router import ShardRouter
+from repro.serving.scheduler import FifoScheduler
+from repro.serving.shard_pool import (ShardedWeightServer,
+                                      sharers_placement)
+from repro.serving.transfer import fit_channel
+from repro.storage import ObjectStoreSimBackend
+
+
+def _scenario(vocab=512, d=32, num_models=3, block=(32, 32), l=4, seed=0):
+    task = SyntheticTextTask(vocab=vocab, d=d, seed=seed)
+    store, heads = build_store(task, num_models=num_models,
+                               block_shape=block, blocks_per_page=l)
+    return task, store, heads
+
+
+def _run_batches(engine, task, num_models, batches=6, batch=16, seed=0):
+    out = []
+    for b in range(batches):
+        v = b % num_models
+        docs, _ = task.sample(batch, variant=v, seed=seed + 100 + b)
+        engine.submit(f"word2vec-v{v}", docs)
+        engine.run(max_batches=1)
+        out.append(engine.last_logits.copy())
+    return out
+
+
+# ------------------------------------------------------------- equivalence --
+@pytest.mark.parametrize("kernel_mode", ["host", "pallas", "xla"])
+def test_grouped_matches_per_page_embedding(kernel_mode):
+    """Acceptance: transfer="grouped" logits == transfer="per_page"
+    logits == numpy logits, in every kernel mode, with the pool small
+    enough that every batch faults a real miss group."""
+    small = kernel_mode == "pallas"
+    task, store, heads = _scenario(vocab=256 if small else 512)
+    batches, batch = (4, 8) if small else (6, 16)
+    # capacity holds any one batch but not necessarily the union, so
+    # batches fault real miss groups without tearing their own pins
+    probe = WeightServer(store, 2)
+    worst = 0
+    for b in range(batches):
+        v = b % 3
+        docs, _ = task.sample(batch, variant=v, seed=100 + b)
+        worst = max(worst, len(probe.embedding_rows_pages(
+            f"word2vec-v{v}", "embedding", np.unique(docs))))
+    cap = min(store.num_pages(), worst + 1)
+
+    def serve(backend, transfer):
+        server = WeightServer(store, cap, storage=StorageModel("dram"),
+                              backend=backend, kernel_mode=kernel_mode,
+                              transfer=transfer)
+        engine = EmbeddingServingEngine(server, heads)
+        logits = _run_batches(engine, task, 3, batches=batches, batch=batch)
+        return logits, engine.stats, server
+
+    ref, _, _ = serve("numpy", "grouped")
+    pp, pp_stats, _ = serve("device", "per_page")
+    gp, gp_stats, gp_server = serve("device", "grouped")
+    assert gp_stats.device_batches == len(gp)
+    assert gp_stats.dense_fallbacks == 0
+    # the grouped path moved the same pages in far fewer operations
+    assert gp_stats.transfer_pages == pp_stats.transfer_pages
+    assert gp_stats.transfer_groups <= pp_stats.transfer_groups
+    assert gp_server.pool.misses > 0
+    for a, b, c in zip(ref, pp, gp):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+        np.testing.assert_allclose(a, c, atol=1e-5)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_grouped_matches_per_page_sharded(shards):
+    """Sharded serving through grouped per-shard transfers == per_page
+    == numpy, at 1/2/4 shards (host mode; per-shard capacity below the
+    working set so owned groups and borrows both move)."""
+    task, store, heads = _scenario(vocab=1024, num_models=4)
+    cap = max(4, store.num_pages() - 2)
+
+    ref_server = WeightServer(store, cap, storage=StorageModel("dram"),
+                              backend="numpy")
+    ref = _run_batches(EmbeddingServingEngine(ref_server, heads),
+                       task, 4, batches=8)
+    out = {}
+    for transfer in ("per_page", "grouped"):
+        srv = ShardedWeightServer(store, cap, storage=StorageModel("dram"),
+                                  shards=shards, placement="sharers",
+                                  transfer=transfer)
+        out[transfer] = _run_batches(EmbeddingServingEngine(srv, heads),
+                                     task, 4, batches=8)
+        srv.sharded.check_invariants()
+    for a, b, c in zip(ref, out["per_page"], out["grouped"]):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+        np.testing.assert_allclose(a, c, atol=1e-5)
+
+
+class _TinyLMAPI:
+    """Minimal prefill/decode API over {emb, head} params: enough to
+    drive LMServingEngine's model-switch fault path deterministically."""
+
+    def prefill(self, params, batch, max_len):
+        import jax.numpy as jnp
+        tokens = jnp.asarray(batch["tokens"])
+        emb = jnp.asarray(params["emb"])
+        x = emb[tokens].mean(axis=1)                     # [B, d]
+        logits = x @ jnp.asarray(params["head"])         # [B, V]
+        return logits[:, None, :], {"x": x}
+
+    def decode(self, params, cache, tokens):
+        import jax.numpy as jnp
+        emb = jnp.asarray(params["emb"])
+        x = cache["x"] * 0.5 + emb[jnp.asarray(tokens)[:, 0]]
+        logits = x @ jnp.asarray(params["head"])
+        return logits[:, None, :], {"x": x}
+
+
+def _lm_setup(seed=0):
+    rng = np.random.default_rng(seed)
+    vocab, d = 96, 32
+    emb = (rng.standard_normal((vocab, d)) * 0.1).astype(np.float32)
+    head = (rng.standard_normal((d, vocab)) * 0.1).astype(np.float32)
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(16, 16),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=8.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=4))
+    names = []
+    for v in range(3):
+        name = f"lm-v{v}"
+        names.append(name)
+        emb_v = emb.copy()                   # private stripe per variant:
+        lo = v * vocab // 3                  # switches must refault pages
+        emb_v[lo:lo + vocab // 3] += (
+            rng.standard_normal((vocab // 3, d)) * 0.3).astype(np.float32)
+        store.register(name, {"emb": emb_v, "head": head})
+    api = _TinyLMAPI()
+    apis = {n: api for n in names}
+    templates = {n: {"rebuild": lambda ts: dict(ts)} for n in names}
+    return store, names, apis, templates
+
+
+def test_grouped_matches_per_page_lm():
+    """LM model switches fault whole page working sets: the grouped and
+    per-page transfer paths must produce identical generations."""
+    outs = {}
+    for transfer in ("per_page", "grouped"):
+        store, names, apis, templates = _lm_setup()
+        cap = max(2, store.num_pages() // 2)     # switches must refault
+        server = WeightServer(store, cap, storage=StorageModel("dram"),
+                              backend="device", transfer=transfer)
+        engine = LMServingEngine(server, apis, templates,
+                                 scheduler="fifo", overlap=True)
+        rng = np.random.default_rng(7)
+        for b in range(6):
+            prompts = rng.integers(1, 96, size=(2, 5)).astype(np.int32)
+            engine.submit(names[b % 3], prompts, steps=3)
+        engine.run()
+        assert engine.stats.batches == 6
+        assert engine.stats.transfer_pages > 0
+        outs[transfer] = engine.stats
+        # capture generations through a direct call for bit-equality
+        out, _ = engine.generate(names[0],
+                                 np.ones((2, 4), np.int32), steps=3)
+        outs[transfer + "_gen"] = out
+    np.testing.assert_array_equal(outs["per_page_gen"], outs["grouped_gen"])
+    assert outs["grouped"].transfer_groups < outs["per_page"].transfer_groups
+
+
+# ---------------------------------------------------- generation accounting --
+def test_group_load_bumps_generation_once():
+    """The remap-cache generation bumps ONCE per committed group, not
+    once per page (the per_page path keeps its bump-per-page)."""
+    _, store, _ = _scenario()
+    pages = list(range(store.num_pages()))
+    for transfer, expected in (("grouped", 1), ("per_page", len(pages))):
+        server = WeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"),
+                              backend="device", transfer=transfer)
+        gen0 = server.device_pool.generation
+        server.access_pages_grouped("word2vec-v0", pages)
+        assert server.device_pool.generation - gen0 == expected, transfer
+        assert server.device_pool.loads == len(pages)
+        assert set(server.device_pool.slot_of) == set(pages)
+        # slab contents identical to the store's pages either way
+        for pid in pages:
+            np.testing.assert_array_equal(
+                server.device_pool.slot_page(server.device_pool.slot_of[pid]),
+                store.page_array(pid))
+
+
+def test_page_stack_matches_page_arrays():
+    _, store, _ = _scenario()
+    pids = list(range(store.num_pages()))[::2]
+    stack = store.page_stack(pids)
+    for i, pid in enumerate(pids):
+        np.testing.assert_array_equal(stack[i], store.page_array(pid))
+
+
+# ------------------------------------------------------- overlap / prestage --
+def test_overlap_prestages_next_batch():
+    """Double buffer: with overlap on, the next queued batch's pages are
+    staged while the current batch computes, so its commit finds the
+    bytes in flight (overlap_fraction > 0) — and the stats stay sane."""
+    task, store, heads = _scenario(vocab=1024, num_models=4)
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"),
+                          backend="device", transfer="grouped")
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                    overlap=True)
+    for b in range(4):                       # queue up front: real lookahead
+        v = b % 4
+        docs, _ = task.sample(16, variant=v, seed=900 + b)
+        engine.submit(f"word2vec-v{v}", docs)
+    stats = engine.run()
+    assert stats.transfer_pages == server.device_pool.loads
+    assert stats.transfer_groups > 0
+    assert 0.0 < stats.overlap_fraction <= 1.0
+    assert stats.transfer_seconds >= 0.0
+    assert stats.group_sizes and min(stats.group_sizes) >= 1.0
+    assert stats.mean_group_size > 1.0       # groups actually coalesced
+
+
+def test_serial_engine_reports_zero_overlap():
+    """No overlap => no prestaging: the stat must not pretend."""
+    task, store, heads = _scenario()
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"),
+                          backend="device", transfer="grouped")
+    engine = EmbeddingServingEngine(server, heads, overlap=False)
+    _run_batches(engine, task, 3, batches=4)
+    assert engine.stats.overlap_fraction == 0.0
+    assert engine.stats.transfer_pages == server.device_pool.loads
+
+
+def test_deferred_window_drops_evicted_admissions():
+    """A page admitted and then evicted inside ONE deferred window must
+    never reach the physical flush: loading it would create a ghost
+    slab resident (or exhaust the slab's free slots outright)."""
+    _, store, _ = _scenario(num_models=3)
+    assert store.num_pages() >= 3
+    server = WeightServer(store, 2, storage=StorageModel("dram"),
+                          backend="device", transfer="grouped")
+    pool = server.pool
+    with pool.deferred_loads():
+        pool.access("word2vec-v0", 0)
+        pool.access("word2vec-v0", 1)
+        pool.access("word2vec-v0", 2)     # evicts a same-window admission
+    assert pool.resident_pages() == server.device_pool.resident_pages()
+    assert len(server.device_pool.slot_of) <= 2
+
+
+# ------------------------------------------------- prefetcher grouped reads --
+def test_prefetcher_uses_one_grouped_backend_read():
+    """Satellite: prefetch-admitted pages flush as ONE grouped backend
+    get_pages (and one grouped slab transfer), never a round trip per
+    page."""
+    _, store, _ = _scenario(num_models=3)
+    backend = ObjectStoreSimBackend()
+    store.save(backend)
+    opened = ModelStore.open(backend)
+    server = WeightServer(opened, opened.num_pages(),
+                          storage=StorageModel("dram"),
+                          backend="device", transfer="grouped")
+    sched = FifoScheduler()
+    model = sorted(opened.dedup.models)[0]
+    pages = opened.model_pages(model)
+    sched.submit(model, None, pages=pages,
+                 pages_gen=opened.pack_generation)
+    pf = Prefetcher(server, max_pages_per_step=len(pages))
+    pf.attach_scheduler(sched)
+    gets0 = backend.get_calls
+    groups0 = server.device_pool.transfer.stats.groups
+    pf.step()
+    assert pf.stats.issued == len(pages)
+    assert backend.get_calls - gets0 <= 1            # ONE grouped read
+    assert server.device_pool.transfer.stats.groups - groups0 == 1
+    assert set(pages) <= server.pool.resident_pages()
+
+
+def test_prefetcher_per_page_fallback_still_loads():
+    """transfer="per_page" keeps the legacy per-page on_load path alive
+    under the prefetcher's deferred window."""
+    _, store, _ = _scenario(num_models=3)
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"),
+                          backend="device", transfer="per_page")
+    sched = FifoScheduler()
+    model = sorted(store.dedup.models)[0]
+    pages = store.model_pages(model)
+    sched.submit(model, None, pages=pages, pages_gen=store.pack_generation)
+    pf = Prefetcher(server, max_pages_per_step=len(pages))
+    pf.attach_scheduler(sched)
+    pf.step()
+    assert set(pages) <= server.device_pool.resident_pages()
+
+
+# --------------------------------------------------- replica load balancing --
+def test_replica_ties_spread_by_observed_load():
+    """Satellite: fully-replicated page sets tie every shard; the router
+    must spread them off the hot shard, counting the moves."""
+    pl = sharers_placement(4, 2, {p: frozenset({"a", "b"})
+                                  for p in range(4)})
+    router = ShardRouter(lambda: pl)
+    shards = [router.route([0, 1]).shard for _ in range(6)]
+    assert router.rebalanced > 0                      # traffic moved
+    assert set(shards) == {0, 1}                      # both replicas used
+    assert router.batches_per_shard[0] == router.batches_per_shard[1] == 3
+    # load-oblivious mode keeps the legacy lowest-id tie break
+    fixed = ShardRouter(lambda: pl, balance_replicas=False)
+    assert [fixed.route([0, 1]).shard for _ in range(4)] == [0] * 4
+    assert fixed.rebalanced == 0
+
+
+def test_replica_balancing_end_to_end_counter():
+    """Identical models => every page replicated under sharers placement
+    => repeated batches spread across shards with the counter proving
+    it, and logits stay correct."""
+    rng = np.random.default_rng(0)
+    emb = (rng.standard_normal((256, 32)) * 0.1).astype(np.float32)
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(32, 32),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=8.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=2))
+    heads = {}
+    for v in range(2):
+        store.register(f"m{v}", {"embedding": emb})   # fully shared
+        heads[f"m{v}"] = (rng.standard_normal((32, 8)) * 0.1
+                          ).astype(np.float32)
+    srv = ShardedWeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"), shards=2,
+                              placement="sharers", replicate_frac=1.0)
+    assert srv.sharded.placement().replicated          # setup sanity
+    engine = EmbeddingServingEngine(srv, heads)
+    docs = rng.integers(0, 256, size=(8, 4))
+    expect = emb[docs].mean(axis=1) @ heads["m0"]
+    for _ in range(6):
+        engine.submit("m0", docs)
+        engine.run(max_batches=1)
+        np.testing.assert_allclose(engine.last_logits, expect, atol=1e-5)
+    assert srv.router.rebalanced > 0
+    assert len(srv.stats.shard_batches) == 2           # both shards served
+    srv.sharded.check_invariants()
+
+
+# ------------------------------------------------------- borrow coalescing --
+def test_borrow_coalescing_across_same_shard_batches():
+    """Satellite (ROADMAP): consecutive batches on the same shard reuse
+    already-staged borrows — no re-copy, no second interconnect charge,
+    counter proving it — and serve identical logits throughout."""
+    task, store, heads = _scenario(vocab=1024, num_models=4)
+    srv = ShardedWeightServer(store, store.num_pages(),
+                              storage=StorageModel("dram"),
+                              shards=2, placement="hash")
+    engine = EmbeddingServingEngine(srv, heads)
+    docs, _ = task.sample(16, variant=0, seed=42)
+    expect = None
+    for rep in range(3):                      # same batch, same shard
+        engine.submit("word2vec-v0", docs)
+        engine.run(max_batches=1)
+        if expect is None:
+            expect = engine.last_logits.copy()
+        else:
+            np.testing.assert_allclose(engine.last_logits, expect,
+                                       atol=1e-5)
+    assert srv.stats.borrow_pages > 0
+    assert srv.stats.borrow_coalesced > 0              # reuse happened
+    # reused pages were not re-charged: pages staged fresh only once
+    assert srv.stats.borrow_pages < 3 * (srv.stats.borrow_pages
+                                         + srv.stats.borrow_coalesced) / 2
+    srv.sharded.check_invariants()
+
+
+def test_stage_borrows_survives_owner_thrash():
+    """A borrow set larger than the owner's pool must still stage: the
+    owner-side faults evict each other (capacity 1), and pages evicted
+    between fault and copy source their bytes from the store instead of
+    crashing on a dead mirror slot."""
+    from repro.serving.shard_pool import ShardedPagePool
+
+    _, store, _ = _scenario(num_models=3)
+    assert store.num_pages() >= 4
+    pool = ShardedPagePool(store, 2, capacity_per_shard=1,
+                           placement="hash", borrow_capacity=8)
+    odd = [p for p in range(store.num_pages()) if p % 2 == 1][:3]
+    pool.buffer_pools[1].access("word2vec-v0", odd[0])   # warm a mirror hit
+    res = pool.stage_borrows(0, odd, "word2vec-v0")
+    assert res is not None
+    staged, hits, faults, reused = res
+    assert set(staged) == set(odd)
+    assert hits + faults == len(odd) and reused == 0
+    for pid in odd:                          # staged bytes == store bytes
+        np.testing.assert_array_equal(pool._stage_host[0][staged[pid]],
+                                      store.page_array(pid))
+    pool.check_invariants()
+
+
+# ----------------------------------------------------------- calibration --
+def test_fit_channel_recovers_bandwidth_and_seek():
+    bw, seek = 2e9, 5e-4
+    recs = [(n, n * 65536, seek + n * 65536 / bw) for n in (1, 2, 4, 8, 16)]
+    fbw, fseek = fit_channel(recs)
+    assert fbw == pytest.approx(bw, rel=1e-3)
+    assert fseek == pytest.approx(seek, rel=1e-3)
+    # flat size axis => per-op dominated: all seek, free bytes
+    flat = [(n, n * 65536, 1e-3) for n in (1, 2, 4, 8)]
+    fbw, fseek = fit_channel(flat)
+    assert fseek == pytest.approx(1e-3, rel=1e-6)
+    assert fbw >= 1e12
+
+
+def test_transfer_mode_validated():
+    _, store, _ = _scenario()
+    with pytest.raises(ValueError):
+        WeightServer(store, 4, backend="device", transfer="teleport")
+    with pytest.raises(ValueError):
+        ShardedWeightServer(store, 4, shards=2, transfer="teleport")
