@@ -1,8 +1,16 @@
-.PHONY: verify test-fast bench bench-smoke example
+.PHONY: verify test-fast lint sanitize bench bench-smoke example
 
 # Tier-1 verification (ROADMAP.md)
 verify:
 	./scripts/verify.sh
+
+# Contract lints (repro.analysis passes) + ruff when installed
+lint:
+	python scripts/run_lints.py
+
+# Full fast suite with the page-pool sanitizer armed (DESIGN.md §7)
+sanitize:
+	REPRO_SANITIZE=1 PYTHONPATH=src python -m pytest -q -m "not slow"
 
 # Everything except the slow subprocess/dry-run tests
 test-fast:

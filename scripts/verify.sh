@@ -6,6 +6,10 @@
 # are tracked from every verify run).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# Contract lints first (repro.analysis passes; ruff rides along when
+# installed): they are fast and fail with pinpointed path:line findings,
+# so a protocol violation surfaces before the test matrix spins up.
+python scripts/run_lints.py
 # The pytest run includes the storage-backend round-trip matrix
 # (tests/test_storage_backends.py: file/sqlite/objsim x fp32/fp16/bf16,
 # orphan pruning, interrupted-commit crash safety, two-writer optimistic

@@ -1,0 +1,32 @@
+"""Registry of the repo's contract lint passes."""
+from .api_drift import ApiDriftPass
+from .channel_charge import ChannelChargePass
+from .host_sync import HostSyncPass
+from .slab_writes import SlabWritePass
+from .unused import UnusedBindingPass
+from .wallclock import WallClockPass
+
+__all__ = [
+    "ApiDriftPass",
+    "ChannelChargePass",
+    "HostSyncPass",
+    "SlabWritePass",
+    "UnusedBindingPass",
+    "WallClockPass",
+    "ALL_PASSES",
+    "default_passes",
+]
+
+ALL_PASSES = (
+    SlabWritePass,
+    HostSyncPass,
+    ChannelChargePass,
+    WallClockPass,
+    ApiDriftPass,
+    UnusedBindingPass,
+)
+
+
+def default_passes():
+    """Fresh instances of every registered pass, default-configured."""
+    return [cls() for cls in ALL_PASSES]

@@ -38,6 +38,7 @@ POLICIES = ("lru", "mru", "lfu",
 
 @dataclasses.dataclass
 class PoolConfig:
+    """Eviction-policy parameters (paper Eq. 1/Eq. 2 constants)."""
     capacity_pages: int
     policy: str = "optimized_mru"
     c_w: float = 0.0        # weights are read-only -> no write-back cost
@@ -59,6 +60,10 @@ class _PageMeta:
 
 
 class BufferPool:
+    """Page residency policy simulator: tracks hits/misses, arrival
+    rates and eviction order (Eq. 1/Eq. 2), driving the physical tiers
+    through ``on_load`` / ``on_evict`` / ``on_load_group`` callbacks."""
+
     def __init__(self, cfg: PoolConfig,
                  page_sharers: Optional[Dict[PageId, Iterable[ModelId]]] = None,
                  page_locality: Optional[Dict[PageId, Hashable]] = None,

@@ -201,7 +201,6 @@ class Deduplicator:
 
     def _dedup_one(self, model: str, res: DedupResult,
                    blocked: Dict[str, np.ndarray], name: str, bid: int) -> None:
-        cfg = self.cfg
         block = blocked[name][bid]
         t0 = time.perf_counter()
         sig = self.index.lsh.signatures(block[None])[0]

@@ -32,6 +32,7 @@ TensorRef = Tuple[str, str]
 
 @dataclasses.dataclass(frozen=True)
 class StoreConfig:
+    """Knobs for dedup, page packing and the persisted page dtype."""
     dedup: DedupConfig = dataclasses.field(default_factory=DedupConfig)
     blocks_per_page: int = 16           # page size limit "l"
     pack_strategy: str = "two_stage"
@@ -51,6 +52,11 @@ class VirtualTensor:
 
 
 class ModelStore:
+    """The relational model store: deduplicated tensor blocks packed
+    into pages, plus the packing/caching state every serving tier
+    (buffer pool, device slab, shards) hangs off.  ``pack_generation``
+    names the packing epoch; all downstream caches key on it."""
+
     def __init__(self, cfg: Optional[StoreConfig] = None):
         self.cfg = cfg or StoreConfig()
         self.dedup = Deduplicator(self.cfg.dedup)
@@ -333,7 +339,7 @@ class ModelStore:
         Built by one vectorized gather from the distinct-block stack and
         cached per packing generation, so repeated callers (WeightServer,
         benchmarks) never re-run the old nested Python loops."""
-        pk = self.packing
+        self.packing         # may repack: read before the generation
         key = np.dtype(dtype).str
         hit = self._page_pool_cache.get(key)
         if hit is not None and hit[0] == self.pack_generation:

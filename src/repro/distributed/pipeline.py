@@ -24,7 +24,6 @@ if __name__ == "__main__":        # must precede the jax import below
                           "--xla_force_host_platform_device_count="
                           + os.environ.get("REPRO_PP_DEVICES", "8"))
 
-import functools
 from typing import Callable
 
 import jax
@@ -95,7 +94,6 @@ def pipeline_apply(stage_fn: Callable, stage_params, microbatches,
             outs = jax.lax.all_gather(outs, axis)[n_stages - 1]
         return outs
 
-    other = [a for a in mesh.axis_names if a != axis]
     pspec = P(axis)
     out = _shard_map(
         inner, mesh=mesh,

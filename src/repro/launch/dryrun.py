@@ -22,7 +22,7 @@ import subprocess
 import sys
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -250,7 +250,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool = False,
 
     api = build(cfg)
     record: Dict = {"meta": meta, "status": "ok"}
-    t0 = time.time()
+    t0 = time.perf_counter()
     with set_mesh_compat(mesh), use_recipe(recipe):
         params_sds = param_shapes(cfg, spec)
         pspecs = param_specs(params_sds, recipe)
@@ -317,11 +317,11 @@ def lower_cell(arch: str, shape: str, multi_pod: bool = False,
             step = make_serve_step(api)
             jfn = jax.jit(step, donate_argnums=(1,))
             lowered = jfn.lower(params_in, batch_in)
-        record["lower_seconds"] = time.time() - t0
+        record["lower_seconds"] = time.perf_counter() - t0
 
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        record["compile_seconds"] = time.time() - t1
+        record["compile_seconds"] = time.perf_counter() - t1
 
     try:
         mem = compiled.memory_analysis()
@@ -420,7 +420,7 @@ def main() -> None:
                 cmd.append("--multi-pod")
             if args.mini:
                 cmd.append("--mini")
-            t0 = time.time()
+            t0 = time.perf_counter()
             r = subprocess.run(cmd, capture_output=True, text=True)
             status = "ok" if r.returncode == 0 else "proc-error"
             if r.returncode != 0:
@@ -430,13 +430,13 @@ def main() -> None:
                                         "multi_pod": mp},
                                "status": "error",
                                "error": r.stderr[-4000:]}, f, indent=1)
-            print(f"[{status}] {label} ({time.time()-t0:.1f}s)")
+            print(f"[{status}] {label} ({time.perf_counter()-t0:.1f}s)")
         else:
-            t0 = time.time()
+            t0 = time.perf_counter()
             rec = run_cell_and_save(arch, shape, mp, args.variant, args.out,
                                     mini=args.mini)
             rl = rec.get("roofline", {})
-            print(f"[{rec['status']}] {label} ({time.time()-t0:.1f}s) "
+            print(f"[{rec['status']}] {label} ({time.perf_counter()-t0:.1f}s) "
                   f"dominant={rl.get('dominant')} "
                   f"compute={rl.get('compute_s', 0):.2e}s "
                   f"memory={rl.get('memory_s', 0):.2e}s "

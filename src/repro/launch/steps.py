@@ -1,10 +1,9 @@
 """Step builders shared by the trainer, serving engine, and dry-run."""
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..models.registry import ModelAPI
 from ..optim.optimizers import Optimizer

@@ -18,7 +18,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..configs import get_config, reduced
@@ -92,7 +91,7 @@ def main(argv=None) -> dict:
         next(data)
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     fixed = {k: jnp.asarray(v) for k, v in next(data).items()} \
         if args.overfit else None
     for step in range(start, args.steps):
@@ -108,7 +107,7 @@ def main(argv=None) -> dict:
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d} loss {loss:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({time.time()-t0:.1f}s)")
+                  f"({time.perf_counter()-t0:.1f}s)")
         if mgr and (step + 1) % args.ckpt_every == 0:
             mgr.save(step + 1, params, opt_state,
                      extra={"arch": cfg.name, "loss": loss})

@@ -17,12 +17,11 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ModelConfig
 from ..distributed.sharding import hint
 from .attention import attend, decode_attend
-from .layers import dot, embed, mlp, norm, rms_norm, rotary, softcap, unembed
+from .layers import dot, embed, mlp, norm, rms_norm, rotary, unembed
 from .ssm import mamba_mixer, ssm_dims
 
 F32 = jnp.float32

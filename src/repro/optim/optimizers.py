@@ -13,7 +13,7 @@ roofline/§Perf analysis treats optimizer memory explicitly).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -69,6 +69,7 @@ class StorageModel:
     seed: int = 0
     bandwidth: Optional[float] = None      # B/s override (calibrated)
     seek: Optional[float] = None           # seconds override (calibrated)
+    channel: str = "storage"               # named virtual-clock channel
 
     def __post_init__(self):
         if self.bandwidth is None or self.seek is None:
@@ -152,6 +153,8 @@ class FetchComputeTimeline:
 
 @dataclasses.dataclass
 class ServeStats:
+    """Per-engine serving counters (virtual fetch seconds, wall
+    compute seconds, transfer/overlap/borrow accounting)."""
     requests: int = 0
     batches: int = 0
     fetch_seconds: float = 0.0       # virtual storage time (demand)
@@ -268,7 +271,7 @@ class WeightServer:
         self.pool: BufferPool = store.make_buffer_pool(
             capacity_pages, policy, on_load=on_load, on_evict=on_evict,
             on_load_group=on_load_group)
-        self.storage = storage or StorageModel("ssd")
+        self.storage = storage or StorageModel("ssd", channel="storage")
         # Host<->HBM channel of the virtual clock.  When ``charge_
         # transfer`` is set, misses additionally pay this channel —
         # per-page seeks on the per_page path, one seek per group on the
@@ -328,7 +331,7 @@ class WeightServer:
             if self.device_pool is not None:
                 self.hbm_channel = self.device_pool.transfer.storage_model()
             else:
-                self.hbm_channel = StorageModel("dram")
+                self.hbm_channel = StorageModel("dram", channel="hbm")
         return self.hbm_channel
 
     def _charge_hbm(self, misses: int) -> float:
@@ -479,6 +482,7 @@ class WeightServer:
 
 # ------------------------------------------------------- embedding serving --
 def jnp_asarray(x):
+    """Device-put ``x`` lazily (keeps jax imports off module load)."""
     import jax.numpy as jnp
     return jnp.asarray(x)
 
@@ -657,6 +661,7 @@ class EmbeddingServingEngine(_PrefetchingEngine):
                 if isinstance(emb, np.ndarray):
                     logits = emb.mean(axis=1) @ self.heads[model]
                 else:
+                    # repro: allow-host (batch boundary: logits leave)
                     logits = np.asarray(_tok_logits(emb,
                                                     self._head_dev(model)))
                 self.stats.device_batches += 1
@@ -789,11 +794,13 @@ class LMServingEngine(_PrefetchingEngine):
         logits, cache = api.prefill(params,
                                     {"tokens": jnp.asarray(prompts)},
                                     prompts.shape[1] + steps)
+        # decode loop feeds tokens back through host; real serving
+        # would keep them on device (ROADMAP)  # repro: allow-host
         out = [np.asarray(logits.argmax(-1))]
         for _ in range(steps - 1):
             logits, cache = api.decode(params, cache,
                                        jnp.asarray(out[-1]).astype("int32"))
-            out.append(np.asarray(logits.argmax(-1)))
+            out.append(np.asarray(logits.argmax(-1)))  # repro: allow-host
         dt = time.perf_counter() - t0
         return np.concatenate(out, axis=1), dt
 

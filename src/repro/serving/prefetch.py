@@ -34,6 +34,7 @@ __all__ = ["PrefetchStats", "Prefetcher"]
 
 @dataclasses.dataclass
 class PrefetchStats:
+    """Prefetcher proof counters (issued/declined/lookahead hits)."""
     issued: int = 0            # pages actually loaded ahead of demand
     declined: int = 0          # offers the pool's admission refused
     seconds: float = 0.0       # virtual storage time spent prefetching

@@ -33,6 +33,8 @@ __all__ = ["ScheduledBatch", "BatchScheduler", "FifoScheduler",
 
 @dataclasses.dataclass
 class ScheduledBatch:
+    """One queued batch: payload + the page working set it was
+    estimated to touch (for affinity scheduling and lookahead)."""
     model: str
     payload: object                    # engine-specific (docs, prompts, ...)
     seq: int                           # global arrival order
@@ -93,6 +95,7 @@ class BatchScheduler:
 
 
 class FifoScheduler(BatchScheduler):
+    """Arrival-order baseline: next batch = oldest batch."""
     name = "fifo"
 
     def __init__(self) -> None:
@@ -206,6 +209,8 @@ SCHEDULERS = {
 
 
 def make_scheduler(policy, **kwargs) -> BatchScheduler:
+    """Resolve a policy name (or pass through an instance) to a
+    :class:`BatchScheduler`."""
     if isinstance(policy, BatchScheduler):
         return policy
     if policy not in SCHEDULERS:

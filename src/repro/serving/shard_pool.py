@@ -268,7 +268,7 @@ class ShardedPagePool:
 
     # ----------------------------------------------------------- placement --
     def placement(self) -> Placement:
-        pk = self.store.packing            # may repack: read before gen
+        self.store.packing                 # may repack: read before gen
         gen = self.store.pack_generation
         pl = self._placement_obj
         if pl is not None and pl.pack_generation == gen:
@@ -296,6 +296,9 @@ class ShardedPagePool:
     def staged(self, shard: int) -> Dict[int, int]:
         return self._staged[shard]
 
+    # The borrow fetch is charged by the caller (ShardedWeightServer.
+    # _borrow puts the seconds on the storage/interconnect channels);
+    # this method owns only the bytes.  # repro: allow-uncharged
     def stage_borrows(self, shard: int, pages, model
                       ) -> Optional[Tuple[Dict[int, int], int, int, int]]:
         """Stage ``pages`` (owned elsewhere) into ``shard``'s borrow slab.
@@ -356,8 +359,10 @@ class ShardedPagePool:
             for owner, pids in hit_by_owner.items():
                 # one vectorized mirror->stage copy per owning shard
                 mirror = self.pools[owner].host_slab
+                # repro: allow-host (index array for the mirror copy)
                 slots = np.asarray([self.pools[owner].slot_of[p]
                                     for p in pids])
+                # repro: allow-host — mirror->stage copy is host work
                 buf[np.asarray([st[p] for p in pids])] = mirror[slots]
             faults = 0
             for owner, pids in sorted(fault_by_owner.items()):
@@ -372,7 +377,9 @@ class ShardedPagePool:
                 pool_o = self.pools[owner]
                 live = [p for p in pids if p in pool_o.slot_of]
                 if live:
+                    # repro: allow-host — store-sourced fallback copy
                     slots = np.asarray([pool_o.slot_of[p] for p in live])
+                    # repro: allow-host
                     buf[np.asarray([st[p] for p in live])] = \
                         pool_o.host_slab[slots]
                 for p in pids:
@@ -649,11 +656,11 @@ class ShardedWeightServer(WeightServer):
         self.pool = self.sharded.view          # union view for the engines
         self.router = ShardRouter(self.sharded.placement,
                                   balance_replicas=balance_replicas)
-        self.storage = storage or StorageModel("ssd")
+        self.storage = storage or StorageModel("ssd", channel="storage")
         # Borrow transfers move host-mirror bytes across the mesh, not
         # through the storage tier: charged at host-DRAM/interconnect
         # rates unless told otherwise.
-        self.interconnect = interconnect or StorageModel("dram")
+        self.interconnect = interconnect or StorageModel("dram", channel="interconnect")
         bh, bw = store.cfg.dedup.block_shape
         self.page_bytes = store.cfg.blocks_per_page * bh * bw \
             * store.native_page_dtype().itemsize

@@ -19,6 +19,7 @@ MANIFEST_NAME = "manifest.json"
 
 
 class LocalDirBackend(PageBackend):
+    """Pages as one .npy file each under a local directory."""
     scheme = "file"
 
     def __init__(self, path: str):

@@ -26,6 +26,8 @@ DEFAULT_BANDWIDTH = 200e6
 
 
 class ObjectStoreSimBackend(PageBackend):
+    """Wraps another backend with object-store-like latency accounting
+    (per-request seek + bandwidth), for storage-tier experiments."""
     scheme = "objsim"
 
     def __init__(self, inner: Optional[PageBackend] = None,

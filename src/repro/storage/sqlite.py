@@ -81,6 +81,8 @@ _COMMIT_VERSION = "commit_version"
 
 
 class SQLiteBackend(PageBackend):
+    """Pages as BLOB rows in a single-file SQLite database — the
+    paper's models-in-the-RDBMS storage tier."""
     scheme = "sqlite"
 
     def __init__(self, path: str):

@@ -1,0 +1,11 @@
+"""Seeded __all__ / docstring-drift violations (parsed, never imported)."""
+__all__ = ["real_fn", "ghost_fn", "real_fn"]           # ghost + duplicate
+
+
+def real_fn(alpha, beta):
+    """Combine ``alpha=`` and ``gamma=`` (gamma was renamed to beta)."""
+    return alpha, beta
+
+
+def undocumented(x):
+    return x

@@ -1,0 +1,22 @@
+"""Seeded slab-write violations (never imported; parsed by the lints)."""
+import jax
+
+
+def sneak_scatter(pool, rows, slots):
+    pool.slab = pool.slab.at[slots].set(rows)          # grouped-path bypass
+    return pool.slab
+
+
+def sneak_mirror(pool, page, slot):
+    pool.host_slab[slot] = page                        # mirror write
+    return slot
+
+
+def sneak_dus(slab, rows, slot):
+    return jax.lax.dynamic_update_slice(slab, rows, (slot, 0, 0, 0))
+
+
+def allowed_scatter(pool, rows, slots):
+    # repro: allow-slab-write (fixture: pragma suppression must work)
+    pool.slab = pool.slab.at[slots].set(rows)
+    return pool.slab

@@ -1,0 +1,21 @@
+"""Seeded unused/shadow/dead-code violations (parsed, never imported)."""
+import json                                            # unused import
+import os
+
+
+def unused_local(xs):
+    total = sum(xs)                                    # assigned, never read
+    return len(xs)
+
+
+def shadows(list, id):                                 # two shadowed builtins
+    return [list, id]
+
+
+def dead_code(x):
+    return x + 1
+    x = os.getpid()                                    # unreachable
+
+
+def allowed_shadow(next):  # repro: allow-shadow (fixture)
+    return next

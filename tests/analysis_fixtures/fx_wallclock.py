@@ -1,0 +1,11 @@
+"""Seeded wallclock violation (never imported; parsed by the lints)."""
+import time
+
+
+def measure():
+    t0 = time.time()                                   # banned
+    return time.time() - t0                            # banned
+
+
+def allowed():
+    return time.time()  # repro: allow-wallclock (fixture)

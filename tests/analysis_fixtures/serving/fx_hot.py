@@ -1,0 +1,26 @@
+"""Seeded hot-path host-sync + uncharged-fetch violations.
+
+Parsed by tests with HostSyncPass(hot={"serving/fx_hot.py": ...}) and
+ChannelChargePass(path_fragment="analysis_fixtures/serving/"); never
+imported.
+"""
+import numpy as np
+
+
+class HotPool:
+    """Stand-in for a pool with a hot compute path."""
+
+    def gather(self, dev_map, x):
+        x = np.asarray(x)                              # host sync in hot path
+        return float(x.sum())                          # and a device float()
+
+    def cold(self, x):
+        return np.asarray(x)                           # not configured hot
+
+    def uncharged_fetch(self, store, pids):
+        return store.page_stack(pids)                  # fetch, no charge
+
+    def charged_fetch(self, store, storage, pids):
+        stack = store.page_stack(pids)
+        storage.fetch_group_seconds(len(pids), stack.nbytes)
+        return stack

@@ -9,3 +9,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # subprocesses with REPRO_DRYRUN_DEVICES instead).
 assert "xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", "")
+
+# REPRO_SANITIZE=1 runs the whole suite under the PoolSanitizer: every
+# BufferPool/DevicePagePool/ShardedPagePool constructed from here on is
+# born instrumented, and any protocol violation (stale-remap read,
+# evict-while-pinned, missed generation bump, non-owner shard load, ...)
+# raises at the violating call site.  See DESIGN.md §7.
+if os.environ.get("REPRO_SANITIZE", "") == "1":
+    import repro.analysis.sanitizer  # noqa: F401  (self-enables, strict)

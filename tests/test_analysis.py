@@ -1,0 +1,133 @@
+"""Contract-lint framework tests: each pass trips on its seeded fixture
+under tests/analysis_fixtures/, pragmas suppress, src/ is clean at HEAD,
+and the scripts/run_lints.py driver exits non-zero on violations.
+
+Stdlib-only on purpose (no jax import): the lints must work in a bare
+container.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import Source, parse_pragmas, run_lint
+from repro.analysis.passes import default_passes
+from repro.analysis.passes.api_drift import ApiDriftPass
+from repro.analysis.passes.channel_charge import ChannelChargePass
+from repro.analysis.passes.host_sync import HostSyncPass
+from repro.analysis.passes.slab_writes import SlabWritePass
+from repro.analysis.passes.unused import UnusedBindingPass
+from repro.analysis.passes.wallclock import WallClockPass
+
+ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "analysis_fixtures"
+
+
+def _names(findings):
+    return [f.name for f in findings]
+
+
+def _msgs(findings):
+    return "\n".join(f.message for f in findings)
+
+
+# ------------------------------------------------------------- framework --
+def test_pragma_parsing_tokens_and_rationale():
+    pragmas = parse_pragmas(
+        "x = 1  # repro: allow-host (reason text is fine)\n"
+        "y = 2  # repro: allow-host, allow-uncharged\n"
+        "z = 3  # unrelated comment\n")
+    assert pragmas[1] == frozenset({"allow-host"})
+    assert pragmas[2] == frozenset({"allow-host", "allow-uncharged"})
+    assert 3 not in pragmas
+
+
+def test_pragma_suppresses_on_line_and_line_above():
+    src = Source("m.py", "# repro: allow-wallclock\n"
+                         "import time\n"
+                         "t = time.time()  # repro: allow-wallclock\n"
+                         "u = time.time()\n")
+    findings = WallClockPass().run(src)
+    assert len(findings) == 1 and findings[0].line == 4
+
+
+def test_syntax_error_becomes_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    findings = run_lint([bad])
+    assert _names(findings) == ["syntax"]
+
+
+# ----------------------------------------------------------- fixture trips --
+def test_slab_write_fixture_trips_and_pragma_suppresses():
+    findings = SlabWritePass().run(Source.load(FIXTURES / "fx_slab_write.py"))
+    assert len(findings) == 3                  # scatter + mirror + dus
+    assert {f.name for f in findings} == {"slab-write"}
+    # the pragma'd fourth site stays quiet
+    assert all(f.line < 19 for f in findings)
+
+
+def test_slab_write_silent_in_owner_modules():
+    text = Path(ROOT / "src/repro/serving/transfer.py").read_text()
+    src = Source("src/repro/serving/transfer.py", text)
+    assert SlabWritePass().run(src) == []
+
+
+def test_wallclock_fixture_trips():
+    findings = WallClockPass().run(Source.load(FIXTURES / "fx_wallclock.py"))
+    assert len(findings) == 2
+
+
+def test_unused_fixture_trips():
+    findings = UnusedBindingPass().run(Source.load(FIXTURES / "fx_unused.py"))
+    msgs = _msgs(findings)
+    assert "import `json` is never used" in msgs
+    assert "local `total`" in msgs
+    assert "parameter `list`" in msgs and "parameter `id`" in msgs
+    assert "unreachable statement" in msgs
+    assert "`next`" not in msgs                # pragma'd shadow stays quiet
+
+
+def test_drift_fixture_trips():
+    src = Source.load(FIXTURES / "fx_drift.py")
+    findings = ApiDriftPass(surface=("analysis_fixtures/",)).run(src)
+    msgs = _msgs(findings)
+    assert "`ghost_fn` which is not defined" in msgs
+    assert "more than once" in msgs
+    assert "``gamma=``" in msgs and "``alpha=``" not in msgs
+    assert "`undocumented` has no docstring" in msgs
+
+
+def test_host_sync_fixture_trips_only_configured_qualnames():
+    src = Source.load(FIXTURES / "serving" / "fx_hot.py")
+    findings = HostSyncPass(
+        hot={"serving/fx_hot.py": {"HotPool.gather"}}).run(src)
+    assert len(findings) == 2                  # asarray + float, not cold()
+    assert all("HotPool.gather" in f.message for f in findings)
+
+
+def test_channel_charge_fixture_trips_uncharged_only():
+    src = Source.load(FIXTURES / "serving" / "fx_hot.py")
+    findings = ChannelChargePass(
+        path_fragment="analysis_fixtures/serving/").run(src)
+    assert len(findings) == 1
+    assert "uncharged_fetch" in findings[0].message
+
+
+# ------------------------------------------------------------ HEAD is clean --
+def test_src_tree_is_clean():
+    findings = run_lint([ROOT / "src"], default_passes())
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+# ----------------------------------------------------------------- driver --
+def test_run_lints_driver_fails_on_fixtures_and_passes_on_src():
+    script = str(ROOT / "scripts" / "run_lints.py")
+    bad = subprocess.run(
+        [sys.executable, script, "--no-ruff", str(FIXTURES)],
+        capture_output=True, text=True)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "slab-write" in bad.stdout and "wallclock" in bad.stdout
+    good = subprocess.run(
+        [sys.executable, script, "--no-ruff", str(ROOT / "src")],
+        capture_output=True, text=True)
+    assert good.returncode == 0, good.stdout + good.stderr

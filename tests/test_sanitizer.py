@@ -1,0 +1,372 @@
+"""PoolSanitizer: each protocol violation class, injected deliberately,
+must raise PoolSanitizerError at the violating call site — and clean
+production flows must stay silent under instrumentation.
+
+Injection pattern: break the instance FIRST (bypass or corrupt the
+production method), attach the sanitizer SECOND, trigger THIRD.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import (PoolSanitizer, PoolSanitizerError,
+                                      enable, disable, enabled)
+from repro.core.bufferpool import BufferPool, PoolConfig
+from repro.data.pipeline import SyntheticTextTask
+from repro.launch.serve import build_store
+from repro.serving.device_pool import DevicePagePool
+from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
+                                  WeightServer)
+from repro.serving.shard_pool import ShardedPagePool
+
+
+def _store(num_models=3, l=4):
+    # vocab=1024 -> ~10 pages: enough for group loads and a borrow tail
+    task = SyntheticTextTask(vocab=1024, d=32, seed=0)
+    store, heads = build_store(task, num_models=num_models,
+                               block_shape=(32, 32), blocks_per_page=l)
+    return task, store, heads
+
+
+def _pool(store, capacity=None):
+    return DevicePagePool(store, capacity or store.num_pages(),
+                          kernel_mode="host")
+
+
+# ------------------------------------------------------------ clean flows --
+def test_clean_serving_flow_is_silent():
+    """Full engine loop under instrumentation: no violations."""
+    task, store, heads = _store()
+    san = PoolSanitizer(strict=True)
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"), backend="device",
+                          transfer="grouped")
+    san.attach_device_pool(server.device_pool)
+    san.attach_buffer_pool(server.pool)
+    engine = EmbeddingServingEngine(server, heads)
+    for b in range(4):
+        docs, _ = task.sample(8, variant=b % 3, seed=b)
+        engine.submit(f"word2vec-v{b % 3}", docs)
+        engine.run(max_batches=1)
+    assert san.violations == []
+    assert len(san.events) > 0
+    assert "0 violations" in san.report()
+
+
+def test_clean_update_flush_reload_is_silent():
+    """Model update -> repack -> flush -> reload: the invalidation path
+    is exactly what the sanitizer watches; it must not false-positive."""
+    task, store, heads = _store()
+    san = PoolSanitizer(strict=True)
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"), backend="device")
+    san.attach_device_pool(server.device_pool)
+    san.attach_buffer_pool(server.pool)
+    engine = EmbeddingServingEngine(server, heads)
+    docs, _ = task.sample(8, variant=0, seed=1)
+    engine.submit("word2vec-v0", docs)
+    engine.run(max_batches=1)
+    store.update("word2vec-v0", {"embedding":
+                                 task.variant_embedding(0) + 0.5})
+    engine.submit("word2vec-v0", docs)
+    engine.run(max_batches=1)
+    assert san.violations == []
+
+
+# ------------------------------------------------------- injected: stale --
+def test_stale_remap_read_detected():
+    """A dev_map minted before a load must not feed gather_rows after
+    the slab generation moved on."""
+    _, store, _ = _store()
+    pool = _pool(store, capacity=store.num_pages())
+    vt = store.virtual_tensor("word2vec-v0", "embedding")
+    for pid in vt.page_ids[:-1]:
+        pool.load(pid)
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool)
+    stale_map = pool.remap(vt, strict=False)     # minted at gen g
+    pool.load(vt.page_ids[-1])                   # gen bump -> map is stale
+    with pytest.raises(PoolSanitizerError, match="stale-remap"):
+        pool.gather_rows(stale_map, vt.grid, np.arange(4))
+
+
+def test_fresh_remap_read_is_silent():
+    _, store, _ = _store()
+    pool = _pool(store)
+    vt = store.virtual_tensor("word2vec-v0", "embedding")
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool)
+    for pid in vt.page_ids:
+        pool.load(pid)
+    dev_map = pool.remap(vt)
+    pool.gather_rows(dev_map, vt.grid, np.arange(4))
+    assert san.violations == []
+
+
+def test_cross_pool_remap_read_detected():
+    """A remap from pool A consumed by pool B is a wrong-shard read even
+    if the generations happen to line up."""
+    _, store, _ = _store()
+    pool_a, pool_b = _pool(store), _pool(store)
+    vt = store.virtual_tensor("word2vec-v0", "embedding")
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool_a)
+    san.attach_device_pool(pool_b)
+    for pid in vt.page_ids:
+        pool_a.load(pid)
+        pool_b.load(pid)
+    map_a = pool_a.remap(vt)
+    with pytest.raises(PoolSanitizerError, match="different pool"):
+        pool_b.gather_rows(map_a, vt.grid, np.arange(4))
+
+
+# ------------------------------------------- injected: generation bumps --
+def test_missed_generation_bump_on_load_detected():
+    _, store, _ = _store()
+    pool = _pool(store)
+
+    def broken_load(pid):                        # admits without bumping
+        slot = pool._free.pop()
+        pool.slot_of[pid] = slot
+        pool._page_to_slot[pid] = slot
+
+    pool.load = broken_load
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool)
+    with pytest.raises(PoolSanitizerError, match="missed generation bump"):
+        pool.load(0)
+
+
+def test_missed_generation_bump_on_evict_detected():
+    _, store, _ = _store()
+    pool = _pool(store)
+    pool.load(0)
+
+    def broken_evict(pid):                       # frees without bumping
+        slot = pool.slot_of.pop(pid)
+        pool._free.append(slot)
+        pool._page_to_slot[pid] = -1
+
+    pool.evict = broken_evict
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool)
+    with pytest.raises(PoolSanitizerError, match="missed generation bump"):
+        pool.evict(0)
+
+
+def test_group_load_multi_bump_detected():
+    """PR 5 contract: ONE grouped load = ONE generation bump."""
+    _, store, _ = _store()
+    pool = _pool(store)
+
+    def per_page_group(pids):                    # K bumps for one group
+        for p in pids:
+            DevicePagePool.load(pool, p)
+
+    pool.load_group = per_page_group
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool)
+    with pytest.raises(PoolSanitizerError, match="one-group-one-bump"):
+        pool.load_group([0, 1, 2])
+
+
+def test_stage_must_not_bump_generation():
+    _, store, _ = _store()
+    pool = _pool(store)
+
+    orig_stage = pool.transfer.stage
+
+    def bumping_stage(pids):
+        out = orig_stage(pids)
+        pool.generation += 1                     # staging leaked a bump
+        return out
+
+    pool.transfer.stage = bumping_stage
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool)
+    with pytest.raises(PoolSanitizerError, match="stage"):
+        pool.transfer.stage([0, 1])
+
+
+# ------------------------------------------------- injected: double-load --
+def test_double_load_detected():
+    _, store, _ = _store()
+    pool = _pool(store)
+    pool.load(0)
+
+    def readmitting_load(pid):                   # skips the residency check
+        slot = pool._free.pop()
+        pool.slot_of[pid] = slot
+        pool._page_to_slot[pid] = slot
+        pool.generation += 1
+
+    pool.load = readmitting_load
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool)
+    with pytest.raises(PoolSanitizerError, match="double-load"):
+        pool.load(0)
+
+
+def test_slot_aliasing_detected():
+    _, store, _ = _store()
+    pool = _pool(store)
+    pool.load(0)
+
+    def aliasing_load(pid):                      # reuses an occupied slot
+        pool.slot_of[pid] = pool.slot_of[0]
+        pool.generation += 1
+
+    pool.load = aliasing_load
+    san = PoolSanitizer(strict=True)
+    san.attach_device_pool(pool)
+    with pytest.raises(PoolSanitizerError, match="slot aliasing"):
+        pool.load(1)
+
+
+# ------------------------------------------ injected: evict-while-pinned --
+def test_evict_while_pinned_detected():
+    cfg = PoolConfig(capacity_pages=2)
+    bp = BufferPool(cfg)
+
+    def pinned_blind_victim():                   # ignores the pinned set
+        return next(iter(bp.resident))
+
+    bp._pick_victim = pinned_blind_victim
+    san = PoolSanitizer(strict=True)
+    san.attach_buffer_pool(bp)
+    bp.access("m", 0)
+    bp.access("m", 1)
+    bp._pinned = {0, 1}                          # in-flight access_group
+    with pytest.raises(PoolSanitizerError, match="evict-while-pinned"):
+        bp.access("m", 2)
+
+
+def test_clean_buffer_pool_churn_is_silent():
+    bp = BufferPool(PoolConfig(capacity_pages=4))
+    san = PoolSanitizer(strict=True)
+    san.attach_buffer_pool(bp)
+    for i in range(64):
+        bp.access("m", i % 9)
+    assert san.violations == []
+
+
+# -------------------------------------------- injected: non-owner shard --
+def test_non_owner_shard_load_detected():
+    _, store, _ = _store()
+    sp = ShardedPagePool(store, 2, capacity_per_shard=store.num_pages(),
+                         placement="hash")
+    san = PoolSanitizer(strict=True)
+    san.attach_sharded_pool(sp)
+    pl = sp.placement()
+    pid = next(p for p in range(store.num_pages())
+               if 0 not in pl.shards_of(p))
+    with pytest.raises(PoolSanitizerError, match="non-owner shard load"):
+        sp.pools[0].load(pid)                    # bypasses _check_owner
+
+
+def test_owner_shard_load_is_silent():
+    _, store, _ = _store()
+    sp = ShardedPagePool(store, 2, capacity_per_shard=store.num_pages(),
+                         placement="hash")
+    san = PoolSanitizer(strict=True)
+    san.attach_sharded_pool(sp)
+    pl = sp.placement()
+    pid = next(p for p in range(store.num_pages())
+               if 0 in pl.shards_of(p))
+    sp.pools[0].load(pid)
+    assert san.violations == []
+
+
+# ----------------------------------------- injected: borrow-slab aliasing --
+def test_borrow_slab_aliasing_detected():
+    _, store, _ = _store()
+    sp = ShardedPagePool(store, 2, capacity_per_shard=store.num_pages(),
+                         placement="hash", borrow_capacity=8)
+    pl = sp.placement()
+    borrowed = [p for p in range(store.num_pages())
+                if 0 not in pl.shards_of(p)][:2]
+    assert len(borrowed) == 2
+
+    orig = sp.stage_borrows
+
+    def aliasing_stage(shard, pages, model):
+        out = orig(shard, pages, model)
+        st = sp._staged[shard]                   # corrupt: collapse slots
+        first = next(iter(st.values()))
+        for k in st:
+            st[k] = first
+        return out
+
+    sp.stage_borrows = aliasing_stage
+    san = PoolSanitizer(strict=True)
+    san.attach_sharded_pool(sp)
+    with pytest.raises(PoolSanitizerError, match="borrow-slab aliasing"):
+        sp.stage_borrows(0, borrowed, "word2vec-v0")
+
+
+def test_borrow_of_owned_page_detected():
+    _, store, _ = _store()
+    sp = ShardedPagePool(store, 2, capacity_per_shard=store.num_pages(),
+                         placement="hash", borrow_capacity=8)
+    pl = sp.placement()
+    owned = next(p for p in range(store.num_pages())
+                 if 0 in pl.shards_of(p))
+
+    orig = sp.stage_borrows
+
+    def sneaky_stage(shard, pages, model):       # stages an owned page
+        out = orig(shard, [p for p in pages if shard
+                           not in pl.shards_of(p)], model)
+        sp._staged[shard][owned] = 7
+        return out
+
+    sp.stage_borrows = sneaky_stage
+    san = PoolSanitizer(strict=True)
+    san.attach_sharded_pool(sp)
+    with pytest.raises(PoolSanitizerError, match="owned by this shard"):
+        sp.stage_borrows(0, [owned], "word2vec-v0")
+
+
+# ------------------------------------------------------- non-strict mode --
+def test_non_strict_mode_accumulates():
+    _, store, _ = _store()
+    pool = _pool(store)
+
+    def broken_load(pid):
+        slot = pool._free.pop()
+        pool.slot_of[pid] = slot
+        pool._page_to_slot[pid] = slot
+
+    pool.load = broken_load
+    san = PoolSanitizer(strict=False)
+    san.attach_device_pool(pool)
+    pool.load(0)
+    pool.load(1)
+    assert len(san.violations) >= 2
+    assert "VIOLATION" in san.report()
+
+
+# ------------------------------------------------------- global enable() --
+def test_enable_instruments_new_pools():
+    was_on = enabled() is not None               # REPRO_SANITIZE=1 run
+    if was_on:
+        disable()
+    san = enable(strict=True)
+    try:
+        assert enabled() is san
+        assert enable() is san                   # idempotent
+        _, store, _ = _store()
+        pool = _pool(store)
+        assert getattr(pool, "_repro_sanitizer", None) is san
+        bp = BufferPool(PoolConfig(capacity_pages=4))
+        assert getattr(bp, "_repro_sanitizer", None) is san
+        sp = ShardedPagePool(store, 2,
+                             capacity_per_shard=store.num_pages(),
+                             placement="hash")
+        assert getattr(sp, "_repro_sanitizer", None) is san
+        pool.load(0)
+        assert any(e.op == "load" for e in san.events)
+    finally:
+        disable()
+        if was_on:                               # restore the env switch
+            enable(strict=True)
+    assert (enabled() is not None) == was_on
