@@ -1,4 +1,5 @@
-.PHONY: verify test-fast lint sanitize bench bench-smoke example
+.PHONY: verify test-fast lint sanitize bench bench-smoke bench-faults \
+	chaos example
 
 # Tier-1 verification (ROADMAP.md)
 verify:
@@ -10,6 +11,13 @@ lint:
 
 # Full fast suite with the page-pool sanitizer armed (DESIGN.md §7)
 sanitize:
+	REPRO_SANITIZE=1 PYTHONPATH=src python -m pytest -q -m "not slow"
+
+# Fast suite under seeded storage-fault injection (REPRO_FAULTS wraps
+# every URL-opened backend) with the sanitizer armed: every grouped
+# load that survives a fault must leave the pool consistent
+chaos:
+	REPRO_FAULTS="transient=0.05,corrupt=0.03,lock=0.05,torn=0.05,seed=13" \
 	REPRO_SANITIZE=1 PYTHONPATH=src python -m pytest -q -m "not slow"
 
 # Everything except the slow subprocess/dry-run tests
@@ -25,6 +33,12 @@ bench:
 # (run by scripts/verify.sh so the perf trajectories are tracked per PR)
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_serving_backends --smoke
+	PYTHONPATH=src python -m benchmarks.bench_faults --smoke
+
+# Chaos benchmark alone: fault-rate ladder + naive-path-dies proof
+# -> BENCH_faults.json (DESIGN.md §8)
+bench-faults:
+	PYTHONPATH=src python -m benchmarks.bench_faults --smoke
 
 example:
 	PYTHONPATH=src python examples/multi_model_serving.py

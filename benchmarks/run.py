@@ -17,6 +17,7 @@ MODULES = [
     "fig13_validation_overheads",
     "fig14_cache_policies",
     "bench_serving_backends",
+    "bench_faults",
     "roofline_table",
 ]
 

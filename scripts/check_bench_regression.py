@@ -1,6 +1,7 @@
 #!/usr/bin/env python
 """Bench regression guard: compare freshly generated BENCH_serving.json /
-BENCH_transfer.json p50s against the baselines committed at HEAD.
+BENCH_transfer.json / BENCH_faults.json p50s against the baselines
+committed at HEAD.
 
 Run by scripts/verify.sh AFTER the smoke benchmark rewrites the JSON
 files in the working tree; the committed baseline is recovered with
@@ -10,7 +11,9 @@ files in the working tree; the committed baseline is recovered with
     against the committed baseline at the same capacity_frac, or
   * a grouped-transfer BENCH_transfer p50 regresses likewise, or
   * a fresh internal claim flag is False (grouped must beat per_page at
-    every miss rate; device must not lose to numpy below capacity 1.0).
+    every miss rate; device must not lose to numpy below capacity 1.0;
+    chaos serving must stay bit-exact with bounded p99 and the naive
+    no-recovery path must demonstrably die).
 
 Wall-clock p50s on shared CI runners are noisy, so the tolerance is
 deliberately loose: fresh <= TOL * baseline + ABS_MS.  Comparisons are
@@ -31,29 +34,61 @@ ABS_MS = 0.5      # additive floor: ignore sub-noise absolute drift
 
 
 def _fresh(name):
+    """The working-tree JSON the smoke bench just wrote.  A missing,
+    truncated or unparseable file is a clear FAIL message (the bench
+    did not complete), never a stack trace."""
     path = os.path.join(REPO, name)
     if not os.path.exists(path):
         print(f"[bench-guard] FAIL: {name} was not generated")
         return None
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            fresh = json.load(f)
+    except (json.JSONDecodeError, OSError) as exc:
+        print(f"[bench-guard] FAIL: {name} is unreadable or truncated "
+              f"({type(exc).__name__}: {exc}) — the benchmark did not "
+              "complete cleanly")
+        return None
+    if not isinstance(fresh, dict) or "configs" not in fresh:
+        print(f"[bench-guard] FAIL: {name} has no 'configs' section — "
+              "truncated or written by an incompatible benchmark version")
+        return None
+    return fresh
 
 
 def _baseline(name):
+    """The committed-at-HEAD JSON, or None with a skip notice.  Every
+    failure mode — file absent at HEAD, git itself unavailable, a
+    truncated or hand-mangled baseline — degrades to 'skip comparison',
+    never a stack trace: the fresh run's internal claims still gate."""
     try:
         out = subprocess.run(["git", "show", f"HEAD:{name}"], cwd=REPO,
                              capture_output=True, text=True, check=True)
-        return json.loads(out.stdout)
-    except (subprocess.CalledProcessError, json.JSONDecodeError,
-            FileNotFoundError):
+    except (subprocess.CalledProcessError, FileNotFoundError, OSError):
         print(f"[bench-guard] no committed baseline for {name}; "
               "skipping comparison (internal claims still checked)")
         return None
+    try:
+        base = json.loads(out.stdout)
+    except json.JSONDecodeError:
+        print(f"[bench-guard] baseline {name} at HEAD is truncated or "
+              "unparseable; skipping comparison (internal claims still "
+              "checked)")
+        return None
+    if not isinstance(base, dict):
+        print(f"[bench-guard] baseline {name} at HEAD is not a JSON "
+              "object; skipping comparison")
+        return None
+    return base
 
 
 def _comparable(fresh, base, name):
     fs, bs = fresh.get("scenario", {}), (base or {}).get("scenario", {})
     if base is None:
+        return False
+    if not isinstance(base.get("configs"), list):
+        print(f"[bench-guard] baseline {name} has no 'configs' list; "
+              "skipping p50 comparison")
         return False
     if fs != bs:
         print(f"[bench-guard] {name}: scenario changed "
@@ -133,6 +168,32 @@ def main() -> int:
                        f"grouped@frac={c['capacity_frac']}",
                        c["grouped"]["p50_ms"], b["grouped"]["p50_ms"],
                        failures)
+
+    faults = _fresh("BENCH_faults.json")
+    if faults is None:
+        return 1
+    # Internal chaos claims are zero-tolerance: bit-exactness and the
+    # naive-path-dies proof are determinism properties, not wall-clock
+    # measurements — there is no runner-noise excuse for losing them.
+    if not faults.get("logits_exact_all", False):
+        failures.append("BENCH_faults: recovered serving was not "
+                        "bit-exact across fault rates")
+    if not faults.get("naive_path_dies", False):
+        failures.append("BENCH_faults: the no-recovery path survived "
+                        "bit-exact — injection is not load-bearing")
+    if not faults.get("p99_bounded", False):
+        failures.append("BENCH_faults: p99 under faults exceeded "
+                        f"{faults.get('p99_factor_limit')}x the "
+                        "fault-free p99 + grace (retry storm?)")
+    base = _baseline("BENCH_faults.json")
+    if _comparable(faults, base, "BENCH_faults.json"):
+        by_rate = {c.get("rate"): c for c in base["configs"]}
+        for c in faults["configs"]:
+            b = by_rate.get(c.get("rate"))
+            if b is None or "p50_ms" not in b:
+                continue
+            _check_p50("BENCH_faults", f"rate={c['rate']}",
+                       c["p50_ms"], b["p50_ms"], failures)
 
     if failures:
         print("[bench-guard] FAILURES:")

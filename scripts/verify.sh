@@ -18,8 +18,13 @@ python scripts/run_lints.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving_backends --smoke
+# Chaos benchmark: serve identical traffic at 0/5/10% storage fault
+# rates through the recovery layer (bit-exact logits, bounded p99) and
+# prove the naive no-recovery path dies -> BENCH_faults.json.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_faults --smoke
 # Bench regression guard: fresh BENCH_serving/BENCH_transfer p50s must
 # stay within tolerance of the baselines committed at HEAD (and the
-# grouped-transfer / device-vs-numpy claims must hold); see
-# scripts/check_bench_regression.py.
+# grouped-transfer / device-vs-numpy / faults-recovery claims must
+# hold); see scripts/check_bench_regression.py.
 python scripts/check_bench_regression.py

@@ -2,6 +2,7 @@
 from .api_drift import ApiDriftPass
 from .channel_charge import ChannelChargePass
 from .host_sync import HostSyncPass
+from .silent_except import SilentExceptPass
 from .slab_writes import SlabWritePass
 from .unused import UnusedBindingPass
 from .wallclock import WallClockPass
@@ -10,6 +11,7 @@ __all__ = [
     "ApiDriftPass",
     "ChannelChargePass",
     "HostSyncPass",
+    "SilentExceptPass",
     "SlabWritePass",
     "UnusedBindingPass",
     "WallClockPass",
@@ -24,6 +26,7 @@ ALL_PASSES = (
     WallClockPass,
     ApiDriftPass,
     UnusedBindingPass,
+    SilentExceptPass,
 )
 
 

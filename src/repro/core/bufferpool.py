@@ -155,7 +155,12 @@ class BufferPool:
         while len(self.resident) >= self.cfg.capacity_pages:
             self._evict_one()
         self.resident[page] = None
-        self._note_load(page)
+        try:
+            self._note_load(page)
+        except BaseException:
+            # failed physical load: un-admit (no on_evict — no slot held)
+            self.resident.pop(page, None)
+            raise
         return False
 
     def _note_load(self, page: PageId) -> None:
@@ -177,11 +182,27 @@ class BufferPool:
         batch = [p for p in batch if p in self.resident]
         if not batch:
             return
+        # Exception safety: if the physical load throws (e.g. a storage
+        # fault past its retry budget), every page whose load did not
+        # complete must be UN-admitted — it is resident in the policy's
+        # books but holds no slab slot, a ghost that would serve garbage.
+        # on_evict is deliberately not fired: the failed load never
+        # claimed a slot, so there is nothing to free.
         if self.on_load_group is not None:
-            self.on_load_group(list(batch))
+            try:
+                self.on_load_group(list(batch))
+            except BaseException:
+                for page in batch:
+                    self.resident.pop(page, None)
+                raise
         elif self.on_load:
-            for page in batch:
-                self.on_load(page)
+            for i, page in enumerate(batch):
+                try:
+                    self.on_load(page)
+                except BaseException:
+                    for p in batch[i:]:
+                        self.resident.pop(p, None)
+                    raise
 
     @contextlib.contextmanager
     def deferred_loads(self):
@@ -334,7 +355,11 @@ class BufferPool:
                                   last=self.cfg.policy.endswith("mru"))
         m.last_tick = max(m.last_tick, 0)
         self.prefetches += 1
-        self._note_load(page)
+        try:
+            self._note_load(page)
+        except BaseException:
+            self.resident.pop(page, None)
+            raise
         return True
 
 

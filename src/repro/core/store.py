@@ -26,6 +26,9 @@ from .pagepack import PackResult, check_coverage, pack
 # storage is a lower layer (numpy-only, never imports core):
 # the manifest version and dtype resolution live there once
 from ..storage.backend import MANIFEST_VERSION, resolve_dtype
+from ..storage.faults import (CorruptPageError, FatalStorageError,
+                              RecoveryStats, RetryPolicy, fault_layer,
+                              maybe_wrap)
 
 TensorRef = Tuple[str, str]
 
@@ -78,6 +81,14 @@ class ModelStore:
         self._unfetched: Set[int] = set()        # pids still in the backend
         self._persisted_page_dtype = np.dtype(np.float32)
         self._index_stale = False
+        # Recovery layer (DESIGN.md §8): every backend round trip goes
+        # through retry_policy; fault_stats accumulates what recovery
+        # cost (serving tiers snapshot-diff it per batch).  verify_pages
+        # None = auto: sha256-check fetched pages iff a fault-injecting
+        # layer is attached (the paranoid mode costs a hash per page).
+        self.retry_policy = RetryPolicy()
+        self.fault_stats = RecoveryStats()
+        self.verify_pages: Optional[bool] = None
 
     def _mutate(self) -> None:
         """Invalidate everything derived from dedup state / packing."""
@@ -168,18 +179,85 @@ class ModelStore:
         purely in-memory store)."""
         return self._backend
 
+    def _verification_enabled(self) -> bool:
+        if self.verify_pages is not None:
+            return self.verify_pages
+        return fault_layer(self._backend) is not None
+
+    def _charged_run(self, fn, describe: str):
+        """``retry_policy.run`` with the retry cost charged to
+        ``fault_stats`` whether the call recovers OR exhausts its budget
+        (a failed call's retries/backoff are real recovery work — the
+        FatalStorageError carries them as ``.outcome``)."""
+        try:
+            result, outcome = self.retry_policy.run(fn, describe=describe)
+        except FatalStorageError as exc:
+            oc = getattr(exc, "outcome", None)
+            if oc is not None:
+                self.fault_stats.retries += oc.retries
+                self.fault_stats.backoff_seconds += oc.backoff_seconds
+            raise
+        self.fault_stats.retries += outcome.retries
+        self.fault_stats.backoff_seconds += outcome.backoff_seconds
+        return result
+
+    def _backend_get(self, hashes: List[str]) -> Dict[str, np.ndarray]:
+        """One grouped ``get_pages`` with bounded retries; retry cost is
+        accumulated in ``fault_stats`` (virtual seconds, never slept)."""
+        return self._charged_run(
+            lambda: self._backend.get_pages(hashes), describe="get_pages")
+
+    def _page_bytes_ok(self, pid: int, got: Dict[str, np.ndarray]) -> bool:
+        """End-to-end integrity: the content address IS the checksum —
+        re-derive ``save()``'s sha256 over the fetched bytes."""
+        raw = np.ascontiguousarray(
+            np.asarray(got[self._page_hash[pid]])).tobytes()
+        return hashlib.sha256(raw).hexdigest()[:24] == self._page_hash[pid]
+
+    def _verify_and_refetch(self, want: List[int],
+                            got: Dict[str, np.ndarray]) -> None:
+        """Quarantine pages whose bytes fail verification and re-fetch
+        them as their own grouped call (the rest of the batch proceeds);
+        bounded attempts, then :class:`CorruptPageError`."""
+        bad = [p for p in want if not self._page_bytes_ok(p, got)]
+        attempts = 0
+        while bad:
+            self.fault_stats.corrupt_detected += len(bad)
+            attempts += 1
+            if attempts > max(1, self.retry_policy.max_retries):
+                raise CorruptPageError(
+                    f"pages {bad} still fail sha256 verification after "
+                    f"{attempts - 1} grouped refetches")
+            got.update(self._backend_get([self._page_hash[p] for p in bad]))
+            self.fault_stats.refetch_pages += len(bad)
+            bad = [p for p in bad if not self._page_bytes_ok(p, got)]
+
+    def _drain_injected_latency(self) -> None:
+        fl = fault_layer(self._backend)
+        if fl is not None:
+            self.fault_stats.latency_seconds += fl.drain_injected_latency()
+
     def fault_pages(self, page_ids) -> int:
         """Fault not-yet-resident pages out of the attached backend with
         ONE grouped ``get_pages`` call (the serving miss path: a batch's
         misses share a single backend round trip).  No-op for in-memory
-        stores and already-faulted pages.  Returns pages fetched."""
+        stores and already-faulted pages.  Returns pages fetched.
+
+        Recovery semantics (DESIGN.md §8): transient backend errors are
+        retried with bounded virtual backoff; when verification is on,
+        every fetched page is sha256-checked against its content address
+        and corrupt pages are quarantined + re-fetched as their own
+        grouped call instead of crashing the batch."""
         if self._backend is None or not self._unfetched:
             return 0
         want = sorted(p for p in set(int(p) for p in page_ids)
                       if p in self._unfetched)
         if not want:
             return 0
-        got = self._backend.get_pages([self._page_hash[p] for p in want])
+        got = self._backend_get([self._page_hash[p] for p in want])
+        if self._verification_enabled():
+            self._verify_and_refetch(want, got)
+        self._drain_injected_latency()
         for pid in want:
             page = np.asarray(got[self._page_hash[pid]])
             if page.dtype.kind == "V":
@@ -486,14 +564,19 @@ class ModelStore:
         the diff) — a crash between commit and prune only ever leaves
         unreferenced extra pages, never a dangling manifest.
         """
-        from ..storage import open_backend
+        from ..storage import PageBackend, open_backend
         if dest is None:
             if self._backend is None:
                 raise ValueError("store has no attached backend; "
                                  "pass a backend, URL, or path to save()")
             backend = self._backend
+        elif isinstance(dest, PageBackend):
+            backend = dest
         else:
-            backend = open_backend(dest)
+            # URL/path attach point: chaos mode (REPRO_FAULTS) wraps the
+            # resolved backend; explicitly constructed instances above
+            # are never wrapped (tests assert exact call counts on them)
+            backend = maybe_wrap(open_backend(dest))
         pk = self.packing
         page_dtype = self.native_page_dtype()
         pool = self.page_pool().astype(page_dtype)
@@ -505,8 +588,11 @@ class ModelStore:
             page_hashes.append(h)
             payload.setdefault(h, pool[pid])     # dedup in the backend too
         existing = set(backend.list_pages())
-        backend.put_pages({h: arr for h, arr in payload.items()
-                           if h not in existing})
+        fresh = {h: arr for h, arr in payload.items() if h not in existing}
+        # content-addressed puts are idempotent, so transient write
+        # failures (including torn acks) are safely retried
+        self._charged_run(lambda: backend.put_pages(fresh),
+                          describe="put_pages")
         manifest = {
             "version": MANIFEST_VERSION,
             "blocks_per_page": self.cfg.blocks_per_page,
@@ -524,7 +610,12 @@ class ModelStore:
                     for t, e in res.tensors.items()}
                 for m, res in self.dedup.models.items()},
         }
-        backend.commit_manifest(manifest)        # atomic commit point
+        # atomic commit point — retried on transient faults (a torn
+        # commit re-commits idempotently: the version check passes after
+        # the first, acked-or-not, success); ManifestConflictError stays
+        # a hard conflict and propagates untouched
+        self._charged_run(lambda: backend.commit_manifest(manifest),
+                          describe="commit_manifest")
         orphans = existing - set(page_hashes)
         if orphans:                              # pages of older packings
             backend.delete_pages(sorted(orphans))
@@ -544,9 +635,13 @@ class ModelStore:
         restored, so ``register``/``update`` after open dedup against
         the reloaded blocks exactly as before the restart.
         """
-        from ..storage import open_backend
-        backend = open_backend(source)
-        manifest = backend.load_manifest()
+        from ..storage import PageBackend, open_backend
+        if isinstance(source, PageBackend):
+            backend = source
+        else:
+            backend = maybe_wrap(open_backend(source))
+        manifest, _ = RetryPolicy().run(backend.load_manifest,
+                                        describe="load_manifest")
         version = manifest.get("version", 1)    # v1: pre-PageBackend saves
         if version > MANIFEST_VERSION:
             raise ValueError(

@@ -49,7 +49,8 @@ class DedupDB:
         nothing densified); on a fresh target an empty store is bound to
         the backend and the first :meth:`commit` creates the manifest.
         ``cfg`` overrides the persisted store configuration."""
-        backend = open_backend(url)
+        from .storage.faults import maybe_wrap
+        backend = maybe_wrap(open_backend(url))   # REPRO_FAULTS chaos hook
         if backend.has_manifest():
             store = ModelStore.open(backend, cfg)
         else:

@@ -81,6 +81,16 @@ def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
               f"coalesced={s.borrow_coalesced}) "
               f"rebalanced={server.router.rebalanced} "
               f"borrow={s.borrow_seconds*1e3:.2f}ms")
+    if getattr(args, "faults", None):
+        # recovery counters accumulate on the server's stats (where the
+        # access-path accounting lives); degradation is an engine event
+        fs = server.stats
+        print(f"[faults] retries={fs.retries} "
+              f"corrupt={fs.corrupt_detected} "
+              f"refetch={fs.refetch_pages} "
+              f"failovers={fs.failovers} "
+              f"degraded={stats.degraded_batches} "
+              f"backoff={fs.fault_backoff_seconds*1e3:.2f}ms")
     print(f"[serve] batches={stats.batches} requests={stats.requests} "
           f"scheduler={args.scheduler} overlap={args.overlap} "
           f"backend={args.backend} "
@@ -99,9 +109,14 @@ def _open_db(args, store: ModelStore):
     from the backend's own microbenchmark calibration."""
     from ..db import DedupDB
     from ..storage import open_backend
+    from ..storage.faults import FaultInjectingBackend, FaultSpec
     # resolve the URL ONCE: a memory-backed objsim:// URL names a fresh
     # store per open_backend() call, so save and reopen must share it
     backend = open_backend(args.store_url)
+    if getattr(args, "faults", None):
+        backend = FaultInjectingBackend(backend,
+                                        FaultSpec.parse(args.faults))
+        print(f"[faults] injecting: {backend.spec}")
     store.save(backend)
     db = DedupDB.open(backend)
     storage = db.storage_model()
@@ -262,6 +277,13 @@ def main(argv=None):
                          "objsim://): commit the store there, reopen it "
                          "live, and serve with a microbench-calibrated "
                          "StorageModel instead of the --storage preset")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="chaos mode (requires --store-url): wrap the "
+                         "backend in a FaultInjectingBackend with this "
+                         "seeded spec, e.g. "
+                         "'transient=0.05,corrupt=0.02,seed=7' — the "
+                         "recovery layer retries/verifies/re-fetches and "
+                         "serving stays bit-exact (DESIGN.md §8)")
     ap.add_argument("--scheduler", default="round_robin",
                     choices=sorted(SCHEDULERS))
     ap.add_argument("--backend", default="numpy",
@@ -297,6 +319,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.prefetch:
         args.overlap = True
+    if args.faults and not args.store_url:
+        raise SystemExit("--faults requires --store-url (faults inject "
+                         "at the storage backend; the in-process store "
+                         "has no backend to wrap)")
 
     if args.engine == "lm":
         return serve_lm(args)

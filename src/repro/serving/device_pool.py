@@ -171,8 +171,10 @@ class DevicePagePool:
         pages in one backend round trip first."""
         if pid in self.slot_of:
             return
-        slot = self._free.pop()
+        # fetch BEFORE taking a slot: a storage fault mid-fetch must not
+        # leak a free slot (exception safety under fault injection)
         page = self.store.page_array(pid, dtype=np.float32)
+        slot = self._free.pop()
         # time only the host->HBM leg: page_array may have faulted the
         # storage backend, which must never leak into the fitted channel
         t0 = time.perf_counter()

@@ -41,6 +41,7 @@ import numpy as np
 
 from ..core.bufferpool import BufferPool
 from ..core.store import ModelStore
+from ..storage.faults import StorageFaultError
 from .scheduler import BatchScheduler, ScheduledBatch, make_scheduler
 
 # ------------------------------------------------------------------ storage --
@@ -183,6 +184,16 @@ class ServeStats:
     borrow_coalesced: int = 0        # borrows reused from a prior batch's
     #                                  staging (consecutive-batch coalescing)
     shard_batches: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # -- fault recovery (storage/faults.py, DESIGN.md §8) --
+    retries: int = 0                 # transient backend errors retried
+    corrupt_detected: int = 0        # pages failing sha256 verification
+    refetch_pages: int = 0           # quarantined pages re-fetched grouped
+    failovers: int = 0               # shards failed over mid-run
+    degraded_batches: int = 0        # batches that degraded to the host
+    #                                  path after a device-path fault
+    fault_backoff_seconds: float = 0.0   # virtual clock: retry backoff +
+    #                                      injected latency (its own named
+    #                                      channel so BENCH stays honest)
     latencies: List[float] = dataclasses.field(default_factory=list)
     # per-batch virtual fetch-channel seconds (storage + interconnect):
     # deterministic, so placement policies compare free of wall noise
@@ -287,6 +298,7 @@ class WeightServer:
         self.stats = ServeStats()
         self._pool_arr: Optional[np.ndarray] = None
         self._pool_gen = store.pack_generation   # make_buffer_pool packed
+        self._fault_snap = store.fault_stats.snapshot()
 
     def _sync_store(self) -> None:
         """Detect a repack (model registered/updated/removed since the
@@ -321,8 +333,26 @@ class WeightServer:
             try:
                 return self.pool.access_group(model, page_ids)
             except ValueError:
-                pass
+                # group exceeds the pool: unpinned per-page access, the
+                # compute path will fall back to the host
+                return [self.pool.access(model, pid) for pid in page_ids]
         return [self.pool.access(model, pid) for pid in page_ids]
+
+    def _charge_faults(self) -> float:
+        """Fold the store recovery layer's work since the last fold into
+        the stats; returns the virtual seconds it cost (retry backoff +
+        injected latency — the ``fault`` channel of the clock, kept
+        distinct from storage fetch time so BENCH numbers stay honest).
+        A cursor snapshot makes each recovery event count exactly once
+        no matter which access or compute path triggered it."""
+        d = self.store.fault_stats.since(self._fault_snap)
+        self._fault_snap = self.store.fault_stats.snapshot()
+        self.stats.retries += d.retries
+        self.stats.corrupt_detected += d.corrupt_detected
+        self.stats.refetch_pages += d.refetch_pages
+        t = d.backoff_seconds + d.latency_seconds
+        self.stats.fault_backoff_seconds += t
+        return t
 
     def _hbm(self) -> StorageModel:
         """The host<->HBM channel model, calibrated on first use from
@@ -362,6 +392,7 @@ class WeightServer:
                 misses += 1
                 self.stats.pages_fetched += 1
         t += self._charge_hbm(misses)
+        t += self._charge_faults()
         self.stats.fetch_seconds += t
         return t
 
@@ -381,6 +412,7 @@ class WeightServer:
         misses = sum(not hit for hit in self._access(model, page_ids))
         t = self.storage.fetch_group_seconds(self.page_bytes, misses)
         t += self._charge_hbm(misses)
+        t += self._charge_faults()
         self.stats.pages_fetched += misses
         self.stats.fetch_seconds += t
         return t
@@ -636,10 +668,19 @@ class EmbeddingServingEngine(_PrefetchingEngine):
             pages = self.server.embedding_rows_pages(
                 model, self.embed_tensor, np.unique(docs))
         snap = self._transfer_snap()
-        if self.overlap:
-            fetch_t = self.server.access_pages_grouped(model, pages)
-        else:
-            fetch_t = self.server.access_pages(model, pages)
+        degraded = False
+        try:
+            if self.overlap:
+                fetch_t = self.server.access_pages_grouped(model, pages)
+            else:
+                fetch_t = self.server.access_pages(model, pages)
+        except StorageFaultError:
+            # device-path access failed past its retry budget: degrade
+            # this batch to the host backend (the materialize path below
+            # retries with a fresh budget) instead of aborting the run
+            degraded = True
+            self.stats.degraded_batches += 1
+            fetch_t = self.server._charge_faults()
         if self.prefetcher is not None:
             self.prefetcher.note_demand(pages)     # lookahead hit accounting
         # double buffer: next batch's host->HBM copy issues now, rides
@@ -647,13 +688,17 @@ class EmbeddingServingEngine(_PrefetchingEngine):
         self._prestage_next()
         t0 = time.perf_counter()
         logits = None
-        if self.server.backend == "device":
+        if self.server.backend == "device" and not degraded:
             # Hot path: the batch's token rows come straight off the
             # resident slab through the dedup kernel path — no unique/
             # scatter bookkeeping, no host materialization of any weight.
             flat = docs.reshape(-1)
-            emb = self.server.device_gather_rows(model, self.embed_tensor,
-                                                 flat, pad=True, pages=pages)
+            try:
+                emb = self.server.device_gather_rows(
+                    model, self.embed_tensor, flat, pad=True, pages=pages)
+            except StorageFaultError:
+                emb = None
+                self.stats.degraded_batches += 1
             if emb is None:
                 self.stats.dense_fallbacks += 1
             else:
@@ -673,6 +718,9 @@ class EmbeddingServingEngine(_PrefetchingEngine):
             feats = emb_rows[idx].mean(axis=1)
             logits = feats @ self.heads[model]
         compute_t = time.perf_counter() - t0
+        # recovery work triggered by compute-side materialization (host
+        # fallback re-faulting pages) is charged here, not lost
+        fetch_t += self.server._charge_faults()
         self.last_logits = logits
         self._add_transfer_delta(snap)
 
@@ -751,21 +799,30 @@ class LMServingEngine(_PrefetchingEngine):
         names = list(self.server.store.dedup.models[model].tensors)
         if self.server.backend == "device":
             pages = self.server.store.model_pages(model)
-            if grouped:
-                fetch_t = self.server.access_pages_grouped(model, pages)
-            else:
-                fetch_t = self.server.access_pages(model, pages)
-            tensors = {}
-            for name in names:
-                dt = self.server.device_tensor(model, name)
-                if dt is None:
-                    tensors = None
-                    break
-                tensors[name] = dt
+            try:
+                if grouped:
+                    fetch_t = self.server.access_pages_grouped(model, pages)
+                else:
+                    fetch_t = self.server.access_pages(model, pages)
+                tensors = {}
+                for name in names:
+                    dt = self.server.device_tensor(model, name)
+                    if dt is None:
+                        tensors = None
+                        break
+                    tensors[name] = dt
+            except StorageFaultError:
+                # device-path switch failed past its retry budget:
+                # degrade this model switch to host materialization
+                # (fresh retry budget) instead of aborting the run
+                self.stats.degraded_batches += 1
+                fetch_t = self.server._charge_faults()
+                tensors = None
             if tensors is None:
                 self.stats.dense_fallbacks += 1
                 tensors = {name: self.server.store.materialize(model, name)
                            for name in names}
+                fetch_t += self.server._charge_faults()
             else:
                 self.stats.device_batches += 1
         elif grouped:

@@ -24,7 +24,7 @@ scheduler's page-set scoring.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 __all__ = ["RouteDecision", "ShardRouter"]
 
@@ -52,8 +52,15 @@ class ShardRouter:
     """
 
     def __init__(self, placement_fn: Callable,
-                 balance_replicas: bool = True):
+                 balance_replicas: bool = True,
+                 dead_fn: Optional[Callable] = None):
         self._placement = placement_fn
+        # Failover awareness: ``dead_fn`` returns the currently-dead
+        # shard ids (ShardedPagePool.dead).  Routing only ever considers
+        # alive shards; a dead shard's owned pages fall into the batch's
+        # ``borrowed`` minority and serve via the borrow-staging path
+        # from surviving owners or the store.
+        self._dead = dead_fn or (lambda: ())
         # Replica load balancing (ROADMAP): when several shards tie on
         # cover *because the batch's pages are replicated on them*, send
         # the batch to the least-loaded of the tied shards instead of
@@ -77,12 +84,17 @@ class ShardRouter:
         move off the hot shard.  ``record=False`` (advisory probes)
         never bumps the ``rebalanced`` proof counter."""
         pl = self._placement()
+        dead = set(self._dead())
+        alive = [s for s in range(pl.num_shards) if s not in dead]
+        if not alive:
+            raise RuntimeError("no alive shards to route to "
+                               f"({pl.num_shards} shards, all failed)")
         ps = set(pages)
-        if not ps or pl.num_shards == 1:
-            return 0
-        scores = [len(ps & pl.owned_sets[s]) for s in range(pl.num_shards)]
-        best_score = max(scores)
-        tied = [s for s, sc in enumerate(scores) if sc == best_score]
+        if not ps or len(alive) == 1:
+            return alive[0]
+        scores = {s: len(ps & pl.owned_sets[s]) for s in alive}
+        best_score = max(scores.values())
+        tied = [s for s in alive if scores[s] == best_score]
         if len(tied) > 1 and self.balance_replicas \
                 and ps & pl.replicated:
             chosen = min(tied,

@@ -243,6 +243,11 @@ class ShardedPagePool:
         self.borrow_mirror_hits = 0
         self.borrow_store_faults = 0
         self.borrow_coalesced = 0
+        # Failover state (DESIGN.md §8): dead shards take no traffic,
+        # hold no pages, and their owned pages serve via the borrow
+        # staging path from surviving owners or the store.
+        self.dead: Set[int] = set()
+        self.failovers = 0
 
     def _check_owner(self, shard: int, pid: int) -> None:
         owners = self.placement().shards_of(pid)
@@ -291,6 +296,35 @@ class ShardedPagePool:
             d.clear()
         self._stage_dirty = [True] * self.num_shards
         self._placement_obj = None
+
+    # ------------------------------------------------------------ failover --
+    def fail_shard(self, shard: int) -> None:
+        """Mark ``shard`` dead: its slab contents are gone (residency
+        dropped, staged borrows cleared), the router stops choosing it,
+        and pages it owned serve through the borrow-staging path from
+        surviving owners' mirrors or straight from the store.  Idempotent
+        for an already-dead shard."""
+        s = int(shard)
+        if not 0 <= s < self.num_shards:
+            raise ValueError(f"no shard {s} (have {self.num_shards})")
+        if s in self.dead:
+            return
+        self.dead.add(s)
+        self.failovers += 1
+        # invalidate fires on_evict, so the slab slots free too — the
+        # per-shard residency invariant holds through the failure
+        self.buffer_pools[s].invalidate_resident()
+        self._staged[s].clear()
+        self._stage_dirty[s] = True
+
+    def revive_shard(self, shard: int) -> None:
+        """Re-place a recovered shard back into the rotation.  It comes
+        back *empty* (demand faulting refills it); routing sees it again
+        immediately."""
+        self.dead.discard(int(shard))
+
+    def alive_shards(self) -> List[int]:
+        return [s for s in range(self.num_shards) if s not in self.dead]
 
     # ------------------------------------------------------------- borrows --
     def staged(self, shard: int) -> Dict[int, int]:
@@ -344,18 +378,22 @@ class ShardedPagePool:
             # copied before any fault below can evict them
             fault_by_owner: Dict[int, List[int]] = {}
             hit_by_owner: Dict[int, List[int]] = {}
+            orphaned: List[int] = []       # every owner dead: store-direct
             hits = 0
             for pid in new:
                 owners = pl.shards_of(pid)
                 assert shard not in owners, \
                     f"page {pid} is owned by shard {shard}; not a borrow"
-                owner = next((o for o in owners
+                alive = [o for o in owners if o not in self.dead]
+                owner = next((o for o in alive
                               if pid in self.pools[o].slot_of), None)
-                if owner is None:
-                    fault_by_owner.setdefault(owners[0], []).append(pid)
-                else:
+                if owner is not None:
                     hit_by_owner.setdefault(owner, []).append(pid)
                     hits += 1
+                elif alive:
+                    fault_by_owner.setdefault(alive[0], []).append(pid)
+                else:
+                    orphaned.append(pid)
             for owner, pids in hit_by_owner.items():
                 # one vectorized mirror->stage copy per owning shard
                 mirror = self.pools[owner].host_slab
@@ -386,6 +424,14 @@ class ShardedPagePool:
                     if p not in pool_o.slot_of:
                         buf[st[p]] = self.store.page_array(
                             p, dtype=np.float32)
+            if orphaned:
+                # failover tail: every owning shard is dead, so the
+                # bytes come straight from the storage tier (counted as
+                # store faults — the caller charges them accordingly)
+                self.store.fault_pages(orphaned)
+                for p in orphaned:
+                    buf[st[p]] = self.store.page_array(p, dtype=np.float32)
+                faults += len(orphaned)
             self._stage_dirty[shard] = True
         else:
             hits = faults = 0
@@ -532,6 +578,11 @@ class ShardedPagePool:
                 assert s in pl.shards_of(pid), \
                     f"page {pid} resident on shard {s}, owned by " \
                     f"{pl.shards_of(pid)}"
+        for s in self.dead:
+            assert not self.pools[s].resident_pages(), \
+                f"dead shard {s} still holds resident pages"
+            assert not self._staged[s], \
+                f"dead shard {s} still has staged borrows"
 
 
 class _ShardedPoolView:
@@ -606,7 +657,9 @@ class _ShardedPoolView:
         already resident on any owner."""
         pid = int(page)
         pl = self._s.placement()
-        owners = pl.shards_of(pid)
+        owners = [o for o in pl.shards_of(pid) if o not in self._s.dead]
+        if not owners:                    # every owner failed: no home
+            return False
         if any(pid in self._s.pools[o].slot_of for o in owners):
             return False
         return self._s.buffer_pools[owners[0]].prefetch(model, pid)
@@ -655,7 +708,8 @@ class ShardedWeightServer(WeightServer):
         self.device_pool = self.sharded        # aggregate reporting view
         self.pool = self.sharded.view          # union view for the engines
         self.router = ShardRouter(self.sharded.placement,
-                                  balance_replicas=balance_replicas)
+                                  balance_replicas=balance_replicas,
+                                  dead_fn=lambda: self.sharded.dead)
         self.storage = storage or StorageModel("ssd", channel="storage")
         # Borrow transfers move host-mirror bytes across the mesh, not
         # through the storage tier: charged at host-DRAM/interconnect
@@ -668,10 +722,24 @@ class ShardedWeightServer(WeightServer):
         self._pool_arr: Optional[np.ndarray] = None
         self._pool_gen = store.pack_generation
         self._route: Optional[RouteDecision] = None
+        self._fault_snap = store.fault_stats.snapshot()
 
     @property
     def num_shards(self) -> int:
         return self.sharded.num_shards
+
+    # ------------------------------------------------------------- failover --
+    def fail_shard(self, shard: int) -> None:
+        """Fail a shard mid-run: traffic re-routes to survivors, its
+        owned pages serve via borrow staging (mirror or store), and the
+        cached route is dropped if it pointed there."""
+        self.sharded.fail_shard(shard)
+        self.stats.failovers = self.sharded.failovers
+        if self._route is not None and self._route.shard == int(shard):
+            self._route = None
+
+    def revive_shard(self, shard: int) -> None:
+        self.sharded.revive_shard(shard)
 
     # -------------------------------------------------------- invalidation --
     def _sync_store(self) -> None:
@@ -701,6 +769,7 @@ class ShardedWeightServer(WeightServer):
         ps = set(int(p) for p in pages)
         r = self._route
         if r is not None and r.pack_generation == pl.pack_generation \
+                and r.shard not in self.sharded.dead \
                 and ps <= r.page_set:
             owned, borrowed = self.router.split(ps, r.shard)
             return RouteDecision(r.shard, tuple(owned), tuple(borrowed),
@@ -734,6 +803,7 @@ class ShardedWeightServer(WeightServer):
                 self.stats.pages_fetched += 1
         t += self._charge_hbm(misses)
         t += self._borrow(route, model, grouped=False)
+        t += self._charge_faults()
         self.stats.fetch_seconds += t
         return t
 
@@ -756,6 +826,7 @@ class ShardedWeightServer(WeightServer):
         t += self._charge_hbm(misses)
         self.stats.pages_fetched += misses
         t += self._borrow(route, model, grouped=True)
+        t += self._charge_faults()
         self.stats.fetch_seconds += t
         return t
 

@@ -263,22 +263,30 @@ class TransferEngine:
         t0 = time.perf_counter()
         slots = np.asarray([self.pool._free.pop() for _ in missing],  # repro: allow-host
                            dtype=np.int64)
-
-        self.pool.host_slab[slots] = host_stack
-        if self.pool.mode() != "host":
-            if pg is not None and pg.dev is not None:
-                # reuse the staged device bytes: bucket-pad the gather
-                # and the scatter to the SAME pow2 shape (repeat index 0;
-                # duplicate writes of identical rows are harmless), so
-                # varying group sizes hit a few compiled shapes
-                rows_p, slots_p = _bucket_pad(rows, slots)
-                import jax.numpy as jnp
-                staged = pg.dev[jnp.asarray(rows_p, jnp.int32)]
-                self.pool.slab = self._scatter(self.pool.slab, slots_p,
-                                               staged)
-            else:
-                self.pool.slab = self._scatter(
-                    self.pool.slab, slots, self._to_device(host_stack))
+        # Exception safety: slots are popped, but residency maps are not
+        # yet touched.  If the device leg fails, every popped slot goes
+        # back to the free list and the generation is NOT bumped — the
+        # pool looks exactly as before the call (no half-mapped slots;
+        # slab bytes in an unmapped slot are unreachable by any remap).
+        try:
+            self.pool.host_slab[slots] = host_stack
+            if self.pool.mode() != "host":
+                if pg is not None and pg.dev is not None:
+                    # reuse the staged device bytes: bucket-pad the gather
+                    # and the scatter to the SAME pow2 shape (repeat index 0;
+                    # duplicate writes of identical rows are harmless), so
+                    # varying group sizes hit a few compiled shapes
+                    rows_p, slots_p = _bucket_pad(rows, slots)
+                    import jax.numpy as jnp
+                    staged = pg.dev[jnp.asarray(rows_p, jnp.int32)]
+                    self.pool.slab = self._scatter(self.pool.slab, slots_p,
+                                                   staged)
+                else:
+                    self.pool.slab = self._scatter(
+                        self.pool.slab, slots, self._to_device(host_stack))
+        except BaseException:
+            self.pool._free.extend(int(s) for s in slots)
+            raise
 
         for pid, slot in zip(missing, slots):
             self.pool.slot_of[pid] = int(slot)

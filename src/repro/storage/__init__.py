@@ -9,6 +9,7 @@ URL                                        backend
 ``sqlite:///rel.db``, ``sqlite:////abs.db``  :class:`SQLiteBackend`
 ``objsim://[dir][?seek_ms=&bandwidth_mbps=]``  :class:`ObjectStoreSimBackend`
 ``memory://``                              :class:`MemoryBackend`
+``fault+<inner-url>#<spec>``               :class:`FaultInjectingBackend`
 ===========  =========================================================
 
 SQLite paths follow the SQLAlchemy convention: three slashes for a
@@ -25,6 +26,9 @@ from urllib.parse import parse_qs, urlparse
 from .backend import (MANIFEST_VERSION, ManifestConflictError,
                       MemoryBackend, PageBackend, StorageProfile,
                       resolve_dtype)
+from .faults import (CorruptPageError, FatalStorageError,
+                     FaultInjectingBackend, FaultSpec, RetryPolicy,
+                     StorageFaultError, TransientStorageError)
 from .localdir import LocalDirBackend
 from .objsim import ObjectStoreSimBackend
 from .sqlite import SQLiteBackend
@@ -33,6 +37,9 @@ __all__ = [
     "MANIFEST_VERSION", "ManifestConflictError", "MemoryBackend",
     "PageBackend", "StorageProfile", "resolve_dtype",
     "LocalDirBackend", "SQLiteBackend", "ObjectStoreSimBackend",
+    "FaultInjectingBackend", "FaultSpec", "RetryPolicy",
+    "StorageFaultError", "TransientStorageError", "CorruptPageError",
+    "FatalStorageError",
     "open_backend",
 ]
 
@@ -49,6 +56,13 @@ def open_backend(url) -> PageBackend:
     if isinstance(url, PageBackend):
         return url
     url = str(url)
+    if url.startswith("fault+"):
+        # fault-injection composition: fault+<inner-url>#<spec>, e.g.
+        # fault+sqlite:///m.db#transient=0.1,corrupt=0.05,seed=7 — the
+        # spec rides in the fragment so inner query strings stay intact
+        inner_url, _, spec = url[len("fault+"):].partition("#")
+        return FaultInjectingBackend(open_backend(inner_url),
+                                     FaultSpec.parse(spec))
     if "://" not in url:                       # bare path: legacy call sites
         return LocalDirBackend(url)
     scheme, rest = url.split("://", 1)

@@ -35,11 +35,13 @@ from __future__ import annotations
 import json
 import os
 import sqlite3
+import time
 from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
 from .backend import ManifestConflictError, PageBackend, resolve_dtype
+from .faults import TransientStorageError, is_transient
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS pages(
@@ -85,11 +87,17 @@ class SQLiteBackend(PageBackend):
     paper's models-in-the-RDBMS storage tier."""
     scheme = "sqlite"
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, timeout: float = 5.0,
+                 lock_retries: int = 4, lock_backoff: float = 0.01):
         self.path = str(path)
+        # explicit busy timeout: sqlite3's own lock wait, BEFORE the
+        # bounded retry loop in commit_manifest gets involved
+        self.timeout = float(timeout)
+        self.lock_retries = int(lock_retries)
+        self.lock_backoff = float(lock_backoff)
         parent = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(parent, exist_ok=True)
-        self._con = sqlite3.connect(self.path)
+        self._con = sqlite3.connect(self.path, timeout=self.timeout)
         self._con.executescript(_SCHEMA)
         self._con.commit()
         # Test seam: invoked after the manifest rows are written but
@@ -165,6 +173,35 @@ class SQLiteBackend(PageBackend):
         return int(json.loads(row[0])) if row else 0
 
     def commit_manifest(self, manifest: Dict) -> None:
+        """Commit with bounded retry on lock contention.
+
+        A concurrent writer holding the reservation surfaces as
+        ``sqlite3.OperationalError: database is locked`` — a *transient*
+        condition (the winner commits and releases), classified via
+        :func:`~repro.storage.faults.is_transient` and retried with
+        bounded exponential backoff on top of the connection's own
+        ``timeout``.  :class:`ManifestConflictError` is the opposite — a
+        hard optimistic-locking conflict that must NOT be retried
+        blindly (the caller reloads and re-applies) — and propagates on
+        the first occurrence."""
+        attempt = 0
+        while True:
+            try:
+                return self._commit_manifest_once(manifest)
+            except ManifestConflictError:
+                raise
+            except sqlite3.OperationalError as exc:
+                if not is_transient(exc):
+                    raise
+                attempt += 1
+                if attempt > self.lock_retries:
+                    raise TransientStorageError(
+                        f"commit_manifest on {self.path}: lock still "
+                        f"contended after {self.lock_retries} retries"
+                    ) from exc
+                time.sleep(self.lock_backoff * 2 ** (attempt - 1))
+
+    def _commit_manifest_once(self, manifest: Dict) -> None:
         con = self._con
         con.commit()                   # close any implicit transaction
         try:

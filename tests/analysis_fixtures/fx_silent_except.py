@@ -1,0 +1,22 @@
+"""Fixture for SilentExceptPass: a bare except and a broad silent
+handler trip; a pragma'd broad catch and a narrow typed probe stay
+quiet."""
+
+
+def swallow_everything(fn):
+    try:
+        fn()
+    except:                                    # TRIP: bare except
+        print("recovered?")
+    try:
+        fn()
+    except Exception:                          # TRIP: broad + do-nothing
+        pass
+    try:
+        fn()
+    except BaseException:  # repro: allow-silent-except (fixture rationale)
+        ...
+    try:
+        return {"k": 1}["missing"]
+    except KeyError:                           # narrow probe: legal
+        pass

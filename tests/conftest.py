@@ -17,3 +17,13 @@ assert "xla_force_host_platform_device_count" not in \
 # raises at the violating call site.  See DESIGN.md §7.
 if os.environ.get("REPRO_SANITIZE", "") == "1":
     import repro.analysis.sanitizer  # noqa: F401  (self-enables, strict)
+
+# REPRO_FAULTS=<spec> runs the suite under seeded storage-fault
+# injection: every backend opened by URL/path (ModelStore.save/open
+# attach points) is wrapped in a FaultInjectingBackend with this spec,
+# and the recovery layer (retry + verify + quarantine, DESIGN.md §8)
+# must keep every test green anyway.  The env var is read directly by
+# repro.storage.faults.global_fault_spec() at each wrap point — no
+# import or registration needed here; this note is the contract.
+# Explicitly constructed backend INSTANCES are never wrapped, so tests
+# asserting exact backend call counts stay deterministic.

@@ -113,6 +113,19 @@ def test_channel_charge_fixture_trips_uncharged_only():
     assert "uncharged_fetch" in findings[0].message
 
 
+def test_silent_except_fixture_trips_pragma_and_narrow_stay_quiet():
+    from repro.analysis.passes.silent_except import SilentExceptPass
+    findings = SilentExceptPass().run(
+        Source.load(FIXTURES / "fx_silent_except.py"))
+    assert len(findings) == 2                  # bare + broad-silent
+    assert {f.name for f in findings} == {"silent-except"}
+    msgs = _msgs(findings)
+    assert "bare except" in msgs
+    assert "do-nothing body" in msgs
+    # the pragma'd BaseException catch and the KeyError probe stay quiet
+    assert "BaseException" not in msgs
+
+
 # ------------------------------------------------------------ HEAD is clean --
 def test_src_tree_is_clean():
     findings = run_lint([ROOT / "src"], default_passes())

@@ -1,0 +1,624 @@
+"""Fault injection + the end-to-end recovery layer (DESIGN.md §8):
+seeded schedules, the typed taxonomy and retry policy, store-level
+verify/quarantine/refetch, SQLite lock contention, pool consistency
+after mid-load failures, engine degradation, and the chaos acceptance
+runs — bit-exact logits under injected faults on the embedding and LM
+paths, single-slab and 2-shard (with a mid-run shard failover)."""
+import sqlite3
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DedupConfig, LSHConfig, ModelStore, StoreConfig
+from repro.data.pipeline import SyntheticTextTask
+from repro.launch.serve import build_store
+from repro.serving.engine import (EmbeddingServingEngine, StorageModel,
+                                  WeightServer)
+from repro.serving.shard_pool import ShardedWeightServer
+from repro.storage import (ManifestConflictError, MemoryBackend,
+                           SQLiteBackend, open_backend)
+from repro.storage.faults import (CorruptPageError, FatalStorageError,
+                                  FaultInjectingBackend, FaultSpec,
+                                  RetryPolicy, StorageFaultError,
+                                  TransientStorageError, fault_layer,
+                                  global_fault_spec, is_transient,
+                                  set_global_fault_spec)
+
+
+def _store(l=4, block=16):
+    return ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(block, block),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=8.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=l))
+
+
+def _variants(n=2, shape=(64, 64), seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal(shape).astype(np.float32)
+    return {f"m{i}": {"w": base + np.float32(1e-4) * i} for i in range(n)}
+
+
+def _saved(n=2):
+    """A populated store committed to a MemoryBackend (the clean inner
+    tier every chaos wrapper composes over)."""
+    store = _store()
+    tensors = _variants(n)
+    for name, ts in tensors.items():
+        store.register(name, ts)
+    inner = MemoryBackend()
+    store.save(inner)
+    return store, tensors, inner
+
+
+# ----------------------------------------------------------- spec grammar --
+def test_fault_spec_parse_and_str_roundtrip():
+    spec = FaultSpec.parse("transient=0.1,corrupt=0.05,lock=0.2,"
+                           "torn=0.02,latency=0.3,latency_ms=2.5,"
+                           "seed=7,max_consecutive=3")
+    assert spec.transient == 0.1 and spec.corrupt == 0.05
+    assert spec.lock == 0.2 and spec.torn == 0.02
+    assert spec.latency == 0.3 and spec.latency_ms == 2.5
+    assert spec.seed == 7 and spec.max_consecutive == 3
+    # str() emits only non-default fields and parses back to equality
+    assert FaultSpec.parse(str(spec)) == spec
+    assert FaultSpec.parse("") == FaultSpec()
+    assert not FaultSpec.parse("").any_faults()
+    assert FaultSpec.parse(spec) is spec            # idempotent
+    assert FaultSpec.parse(None) == FaultSpec()
+
+
+def test_fault_spec_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        FaultSpec.parse("transient")                # no '='
+    with pytest.raises(ValueError):
+        FaultSpec.parse("bogus_knob=1.0")           # unknown key
+    with pytest.raises(ValueError):
+        FaultSpec.parse("transient=lots")           # not a float
+
+
+def test_is_transient_classification():
+    assert is_transient(TransientStorageError("x"))
+    assert is_transient(sqlite3.OperationalError("database is locked"))
+    assert not is_transient(sqlite3.OperationalError("no such table: t"))
+    assert not is_transient(ManifestConflictError("stale"))
+    assert not is_transient(ValueError("x"))
+    assert not is_transient(CorruptPageError("x"))
+
+
+def test_fault_url_grammar_and_roundtrip():
+    b = open_backend("fault+memory://#transient=0.1,seed=7")
+    assert isinstance(b, FaultInjectingBackend)
+    assert isinstance(b.inner, MemoryBackend)
+    assert b.spec.transient == 0.1 and b.spec.seed == 7
+    # wrapper URLs round-trip through open_backend, spec included
+    r = open_backend(b.url())
+    assert isinstance(r, FaultInjectingBackend)
+    assert r.spec == b.spec
+    # fault_layer resolves through composition chains
+    assert fault_layer(b) is b
+    assert fault_layer(MemoryBackend()) is None
+
+
+# ------------------------------------------------------------- injection --
+def test_injection_schedule_is_deterministic():
+    """Same spec + same call sequence -> identical faults, bit for bit
+    (including which page corrupted and which bit flipped)."""
+    def run():
+        _, _, inner = _saved()
+        fb = FaultInjectingBackend(
+            inner, "transient=0.3,corrupt=0.3,latency=0.5,seed=42")
+        hashes = list(inner.list_pages())
+        events, got = [], {}
+        for _ in range(6):
+            try:
+                got = fb.get_pages(hashes)
+                events.append("ok")
+            except TransientStorageError:
+                events.append("transient")
+        return events, dict(fb.injected), \
+            np.concatenate([got[h].reshape(-1) for h in sorted(got)])
+
+    ev_a, inj_a, bytes_a = run()
+    ev_b, inj_b, bytes_b = run()
+    assert ev_a == ev_b
+    assert inj_a == inj_b and sum(inj_a.values()) > 0
+    np.testing.assert_array_equal(bytes_a, bytes_b)
+
+
+def test_transient_injection_forced_success_after_cap():
+    """max_consecutive bounds every failure run: two injected failures,
+    then the op is forced clean — the property that makes bounded
+    retries convergent by construction."""
+    _, _, inner = _saved()
+    fb = FaultInjectingBackend(inner, "transient=1.0,max_consecutive=2")
+    hashes = list(inner.list_pages())
+    for _ in range(2):
+        with pytest.raises(TransientStorageError):
+            fb.get_pages(hashes)
+    got = fb.get_pages(hashes)                      # forced clean
+    assert sorted(got) == sorted(hashes)
+    assert fb.injected["transient"] == 2
+
+
+def test_corruption_is_on_a_copy_inner_stays_clean():
+    """A bit flip lands on a copy: the quarantine refetch must be able
+    to observe the true bytes from the inner tier."""
+    _, _, inner = _saved()
+    fb = FaultInjectingBackend(inner, "corrupt=1.0,max_consecutive=2")
+    hashes = sorted(inner.list_pages())
+    clean = inner.get_pages(hashes)
+    got = fb.get_pages(hashes)
+    assert fb.injected["corrupt"] >= 1
+    assert any(not np.array_equal(got[h], clean[h]) for h in hashes)
+    # the inner tier never saw the flip
+    again = inner.get_pages(hashes)
+    for h in hashes:
+        np.testing.assert_array_equal(again[h], clean[h])
+
+
+def test_lock_and_torn_commit_injection():
+    _, _, inner = _saved()
+    lock = FaultInjectingBackend(inner, "lock=1.0,max_consecutive=1")
+    manifest = inner.load_manifest()
+    with pytest.raises(sqlite3.OperationalError) as ei:
+        lock.commit_manifest(manifest)
+    assert is_transient(ei.value)                   # classifier, not type
+    lock.commit_manifest(manifest)                  # forced clean
+
+    # torn commit: the write LANDS, only the ack is lost — the error is
+    # transient and the blind re-commit must be idempotent
+    torn = FaultInjectingBackend(inner, "torn=1.0,max_consecutive=1")
+    m2 = dict(manifest)
+    with pytest.raises(TransientStorageError):
+        torn.commit_manifest(m2)
+    assert inner.load_manifest()["pages"] == manifest["pages"]
+    torn.commit_manifest(m2)                        # idempotent retry
+
+
+def test_latency_spikes_accumulate_and_drain_virtually():
+    _, _, inner = _saved()
+    fb = FaultInjectingBackend(inner, "latency=1.0,latency_ms=5.0")
+    hashes = list(inner.list_pages())
+    t0 = time.perf_counter()
+    fb.get_pages(hashes)
+    fb.get_pages(hashes)
+    wall = time.perf_counter() - t0
+    drained = fb.drain_injected_latency()
+    assert drained == pytest.approx(2 * 5e-3)
+    assert fb.drain_injected_latency() == 0.0       # drain resets
+    assert wall < 1.0                               # spikes never sleep
+
+
+def test_bench_scratch_pages_exempt_from_injection():
+    """Calibration is not traffic: zbench- pages bypass the schedule."""
+    inner = MemoryBackend()
+    inner.put_pages({"zbench-0": np.zeros(8, np.float32)})
+    fb = FaultInjectingBackend(inner, "transient=1.0,corrupt=1.0,"
+                               "max_consecutive=0")
+    for _ in range(5):
+        got = fb.get_pages(["zbench-0"])            # never raises
+        assert not got["zbench-0"].any()
+    assert fb.injected == {}
+
+
+# ----------------------------------------------------------- retry policy --
+def test_retry_policy_recovers_and_charges_virtual_backoff():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientStorageError("flap")
+        return "ok"
+
+    t0 = time.perf_counter()
+    result, outcome = RetryPolicy(max_retries=4).run(flaky)
+    assert result == "ok" and calls["n"] == 3
+    assert outcome.retries == 2
+    assert outcome.backoff_seconds > 0.0            # charged, not slept
+    assert time.perf_counter() - t0 < 0.5
+
+
+def test_retry_policy_exhaustion_is_fatal_and_chained():
+    def always():
+        raise TransientStorageError("down")
+
+    with pytest.raises(FatalStorageError) as ei:
+        RetryPolicy(max_retries=2).run(always, describe="probe")
+    assert isinstance(ei.value.__cause__, TransientStorageError)
+    assert "probe" in str(ei.value)
+
+
+def test_retry_policy_passes_through_non_transient():
+    def conflict():
+        raise ManifestConflictError("stale view")
+
+    # hard conflicts must surface on attempt 1 — blind re-commit on a
+    # stale manifest is exactly the bug the taxonomy exists to prevent
+    with pytest.raises(ManifestConflictError):
+        RetryPolicy(max_retries=5).run(conflict)
+    with pytest.raises(ValueError):
+        RetryPolicy().run(lambda: (_ for _ in ()).throw(ValueError("x")))
+
+
+def test_retry_policy_virtual_timeout_budget():
+    def always():
+        raise TransientStorageError("down")
+
+    with pytest.raises(FatalStorageError) as ei:
+        RetryPolicy(max_retries=10_000, backoff_base=0.4,
+                    call_timeout=1.0).run(always)
+    assert "budget" in str(ei.value)
+
+
+# --------------------------------------------------------- chaos attach --
+def test_global_spec_wraps_url_opens_only(tmp_path, monkeypatch):
+    """REPRO_FAULTS / set_global_fault_spec wrap backends at the URL
+    resolution attach points ONLY — an explicitly constructed backend
+    instance is never wrapped (exact call-count tests stay exact)."""
+    store, _, inner = _saved()
+    dest = str(tmp_path / "store")
+    store.save(dest)
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    set_global_fault_spec(None)
+    try:
+        assert global_fault_spec() is None
+        assert fault_layer(ModelStore.open(dest).backend) is None
+
+        set_global_fault_spec("transient=0.2,seed=3")
+        fl = fault_layer(ModelStore.open(dest).backend)
+        assert fl is not None and fl.spec.transient == 0.2
+        # instance attach point: never wrapped, even in chaos mode
+        assert fault_layer(ModelStore.open(inner).backend) is None
+
+        # env fallback, and the programmatic override beats it
+        set_global_fault_spec(None)
+        monkeypatch.setenv("REPRO_FAULTS", "corrupt=0.5")
+        assert global_fault_spec().corrupt == 0.5
+        set_global_fault_spec("corrupt=0.25")
+        assert global_fault_spec().corrupt == 0.25
+    finally:
+        set_global_fault_spec(None)
+
+
+# ------------------------------------------------------- store recovery --
+def test_store_verifies_quarantines_and_refetches_corrupt_pages():
+    """Opt-in sha256 verification (auto-on behind a fault layer): bit
+    flips are detected, the bad pages are re-fetched as their own
+    grouped call, and the served bytes are the TRUE bytes."""
+    store, tensors, inner = _saved()
+    fb = FaultInjectingBackend(inner, "corrupt=0.6,seed=5")
+    opened = ModelStore.open(fb)
+    assert opened._verification_enabled()           # auto: fault layer on
+    opened.fault_all()
+    fs = opened.fault_stats
+    assert fs.corrupt_detected > 0
+    assert fs.refetch_pages > 0
+    # recovery serves exactly what a clean open serves (the store is
+    # approximately deduplicated, so the reference is the dedup'd
+    # bytes, not the raw registered tensors)
+    clean = ModelStore.open(inner)
+    for model, ts in tensors.items():
+        for name in ts:
+            np.testing.assert_array_equal(
+                opened.materialize(model, name),
+                clean.materialize(model, name))
+
+
+def test_naive_store_serves_corrupt_bytes():
+    """The same schedule with verification forced off silently serves
+    flipped bytes — the load-bearing proof for the recovery layer."""
+    store, tensors, inner = _saved()
+    fb = FaultInjectingBackend(inner, "corrupt=0.6,seed=5")
+    opened = ModelStore.open(fb)
+    opened.verify_pages = False
+    opened.retry_policy = RetryPolicy(max_retries=0)
+    try:
+        opened.fault_all()
+        served = np.concatenate([
+            opened.materialize(m, t).reshape(-1)
+            for m, ts in tensors.items() for t in ts])
+        clean = ModelStore.open(inner)
+        truth = np.concatenate([
+            clean.materialize(m, t).reshape(-1)
+            for m, ts in tensors.items() for t in ts])
+        assert not np.array_equal(served, truth)
+    except StorageFaultError:
+        pass                                        # crashing also proves it
+    assert opened.fault_stats.corrupt_detected == 0
+
+
+def test_torn_commit_save_retries_idempotently():
+    """store.save through a torn-commit backend: the ack-lost commit is
+    retried blind, the retry is idempotent, and a clean reopen serves
+    bit-exact tensors."""
+    store = _store()
+    tensors = _variants()
+    for name, ts in tensors.items():
+        store.register(name, ts)
+    inner = MemoryBackend()
+    fb = FaultInjectingBackend(inner, "torn=1.0,max_consecutive=1,seed=1")
+    store.save(fb)
+    assert store.fault_stats.retries >= 1
+    reopened = ModelStore.open(inner)               # clean tier
+    for model, ts in tensors.items():
+        for name in ts:
+            np.testing.assert_array_equal(
+                reopened.materialize(model, name),
+                store.materialize(model, name))
+
+
+# ------------------------------------------------------- sqlite satellite --
+def test_sqlite_commit_retries_through_real_lock_contention(tmp_path):
+    """Two contending writers on one database file: writer A holds the
+    reservation (BEGIN IMMEDIATE) while B commits.  B's bounded backoff
+    retry must ride out the contention and land once A releases —
+    distinct from the ManifestConflictError path, which is a version
+    conflict and never retried blindly."""
+    path = str(tmp_path / "models.db")
+    store = _store()
+    for name, ts in _variants().items():
+        store.register(name, ts)
+    writer = SQLiteBackend(path, timeout=0.05, lock_retries=10,
+                           lock_backoff=0.02)
+    store.save(writer)
+    manifest = writer.load_manifest()
+
+    holder = sqlite3.connect(path, timeout=0.05, check_same_thread=False)
+    holder.execute("BEGIN IMMEDIATE")               # take the write lock
+
+    def release():
+        time.sleep(0.25)
+        holder.commit()
+
+    t = threading.Thread(target=release)
+    t.start()
+    try:
+        writer.commit_manifest(manifest)            # retries until release
+    finally:
+        t.join()
+        holder.close()
+    assert sorted(writer.load_manifest()["models"]) == ["m0", "m1"]
+    writer.close()
+
+
+def test_sqlite_lock_exhaustion_surfaces_typed_transient(tmp_path):
+    """A lock that never releases exhausts the bounded retry budget and
+    surfaces as TransientStorageError (the caller may still retry at a
+    higher level) — never a raw sqlite3 stack or a silent clobber."""
+    path = str(tmp_path / "models.db")
+    store = _store()
+    for name, ts in _variants().items():
+        store.register(name, ts)
+    writer = SQLiteBackend(path, timeout=0.01, lock_retries=2,
+                           lock_backoff=0.005)
+    store.save(writer)
+    manifest = writer.load_manifest()
+
+    holder = sqlite3.connect(path, timeout=0.01)
+    holder.execute("BEGIN IMMEDIATE")
+    try:
+        with pytest.raises(TransientStorageError):
+            writer.commit_manifest(manifest)
+    finally:
+        holder.rollback()
+        holder.close()
+    writer.commit_manifest(manifest)                # fine once released
+    writer.close()
+
+
+# ------------------------------------------------ pool exception safety --
+def _embedding_scenario(vocab=512, d=32, num_models=3, batches=8,
+                        batch=32, seed=0):
+    task = SyntheticTextTask(vocab=vocab, d=d, seed=seed)
+    store, heads = build_store(task, num_models=num_models,
+                               block_shape=(32, 32), blocks_per_page=4)
+    rng = np.random.default_rng(seed)
+    traffic = []
+    for b in range(batches):
+        v = int(rng.integers(0, num_models))
+        docs, _ = task.sample(batch, variant=v, seed=7_000 + b)
+        traffic.append((f"word2vec-v{v}", docs))
+    probe = WeightServer(store, 2)
+    worst = max(len(probe.embedding_rows_pages(m, "embedding",
+                                               np.unique(docs)))
+                for m, docs in traffic)
+    cap = min(store.num_pages(), worst + 1)         # all-miss regime
+    inner = MemoryBackend()
+    store.save(inner)
+    return heads, traffic, cap, inner
+
+
+def _serve(heads, traffic, cap, backend, shards=0, fail_at=None,
+           revive_at=None, placement="sharers"):
+    opened = ModelStore.open(backend)
+    if shards:
+        server = ShardedWeightServer(opened, cap,
+                                     storage=StorageModel("dram"),
+                                     shards=shards, placement=placement)
+    else:
+        server = WeightServer(opened, cap, "optimized_mru",
+                              StorageModel("dram"), backend="device")
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                    overlap=True)
+    logits = []
+    for i, (model, docs) in enumerate(traffic):
+        if fail_at is not None and i == fail_at:
+            server.fail_shard(0)
+        if revive_at is not None and i == revive_at:
+            server.revive_shard(0)
+        engine.submit(model, docs)
+        engine.run(max_batches=1)
+        logits.append(np.asarray(engine.last_logits, np.float32))
+    return np.concatenate([l.reshape(-1) for l in logits]), server, engine
+
+
+def test_failed_grouped_load_leaves_pool_consistent():
+    """Satellite: an exception mid-grouped-load must not leak slots or
+    half-admit pages — after the failure heals, the same server serves
+    bit-exact logits (REPRO_SANITIZE=1 CI re-checks this test with the
+    pool sanitizer armed)."""
+    heads, traffic, cap, inner = _embedding_scenario()
+    fb = FaultInjectingBackend(inner)               # clean for open()
+    opened = ModelStore.open(fb)
+    # max_consecutive=0: never forced clean, so the retry budget
+    # genuinely exhausts and the failure escapes to the pool layers
+    fb.spec = FaultSpec.parse("transient=1.0,max_consecutive=0")
+    server = WeightServer(opened, cap, "optimized_mru",
+                          StorageModel("dram"), backend="device")
+    model, docs = traffic[0]
+    pages = server.embedding_rows_pages(model, "embedding",
+                                        np.unique(docs))
+    free_before = len(server.device_pool._free)
+    with pytest.raises(FatalStorageError):
+        server.access_pages_grouped(model, pages)
+    assert opened.fault_stats.retries > 0
+    # nothing half-admitted: no resident entries, no leaked slots
+    assert not server.pool.resident
+    assert len(server.device_pool._free) == free_before
+
+    fb.spec = FaultSpec()                           # storage heals
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                    overlap=True)
+    got = []
+    for m, d in traffic:
+        engine.submit(m, d)
+        engine.run(max_batches=1)
+        got.append(np.asarray(engine.last_logits, np.float32))
+    clean, _, _ = _serve(heads, traffic, cap, inner)
+    np.testing.assert_array_equal(
+        np.concatenate([l.reshape(-1) for l in got]), clean)
+
+
+def test_engine_degrades_batch_on_device_fault(monkeypatch):
+    """Graceful degradation: a device-path failure past its budget costs
+    that batch a host fallback (degraded_batches++), never the run."""
+    heads, traffic, cap, inner = _embedding_scenario(batches=4)
+    clean, _, _ = _serve(heads, traffic, cap, inner)
+
+    opened = ModelStore.open(inner)
+    server = WeightServer(opened, cap, "optimized_mru",
+                          StorageModel("dram"), backend="device")
+    real = server.device_gather_rows
+    state = {"fired": False}
+
+    def flaky_gather(*a, **kw):
+        if not state["fired"]:
+            state["fired"] = True
+            raise FatalStorageError("injected device-path failure")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(server, "device_gather_rows", flaky_gather)
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                    overlap=True)
+    got = []
+    for m, d in traffic:
+        engine.submit(m, d)
+        engine.run(max_batches=1)
+        got.append(np.asarray(engine.last_logits, np.float32))
+    assert engine.stats.degraded_batches == 1
+    assert engine.stats.dense_fallbacks >= 1
+    assert engine.stats.batches == len(traffic)
+    np.testing.assert_allclose(
+        np.concatenate([l.reshape(-1) for l in got]), clean, atol=1e-5)
+
+
+# ------------------------------------------------------ chaos acceptance --
+def _chaos_spec(rate, seed=11):
+    return FaultSpec(transient=rate, corrupt=rate, lock=rate, torn=rate,
+                     latency=min(1.0, 2 * rate), seed=seed)
+
+
+@pytest.mark.parametrize("rate", [0.05, 0.10])
+def test_chaos_embedding_single_slab_bit_exact(rate):
+    """Acceptance: identical traffic at fault rate 0 vs `rate` through
+    the recovery layer -> bit-identical logits, with the recovery
+    actually engaged (injection counters non-zero)."""
+    heads, traffic, cap, inner = _embedding_scenario()
+    clean, _, _ = _serve(heads, traffic, cap, inner)
+    fb = FaultInjectingBackend(inner, _chaos_spec(rate))
+    chaos, server, engine = _serve(heads, traffic, cap, fb)
+    np.testing.assert_array_equal(clean, chaos)
+    assert sum(fb.injected.values()) > 0            # schedule engaged
+    fs = server.stats
+    assert fs.retries + fs.corrupt_detected \
+        + engine.stats.degraded_batches >= 0
+    if fs.corrupt_detected:
+        assert fs.refetch_pages > 0
+    assert fs.fault_backoff_seconds >= 0.0
+
+
+def test_chaos_embedding_two_shards_with_midrun_failover():
+    """Acceptance: 2-shard config, one shard failed mid-run and revived
+    later, at 10% injection — logits bit-identical to the same sharded
+    run without faults, invariants + failover accounting intact."""
+    heads, traffic, cap, inner = _embedding_scenario()
+    kw = dict(shards=2, fail_at=3, revive_at=6)
+    clean, ref_srv, _ = _serve(heads, traffic, cap, inner, **kw)
+    fb = FaultInjectingBackend(inner, _chaos_spec(0.10))
+    chaos, srv, _ = _serve(heads, traffic, cap, fb, **kw)
+    np.testing.assert_array_equal(clean, chaos)
+    assert sum(fb.injected.values()) > 0
+    assert srv.stats.failovers == 1
+    assert ref_srv.stats.failovers == 1
+    srv.sharded.check_invariants()
+    # the failover run agrees with an undisturbed single-slab run too
+    flat, _, _ = _serve(heads, traffic, cap, inner)
+    np.testing.assert_allclose(chaos, flat, atol=1e-5)
+
+
+def test_chaos_lm_path_bit_exact():
+    """Acceptance (LM engine): generate() under 10% injection returns
+    the exact tokens of the fault-free run, device path retained."""
+    from repro.serving.engine import LMServingEngine
+
+    store = _store(l=4, block=16)
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((48, 32)).astype(np.float32)
+    for v in range(2):
+        store.register(f"lm-v{v}", {"w": base + v * 1e-5,
+                                    "b": base[:16] * 0.5 + v * 1e-5})
+    inner = MemoryBackend()
+    store.save(inner)
+
+    class TinyApi:
+        def prefill(self, params, batch, _):
+            x = np.asarray(batch["tokens"], np.float32)
+            h = x @ params["w"][:x.shape[-1]]
+            logits = h @ params["b"][:, :h.shape[-1]].T
+            return logits[:, None, :], h
+
+        def decode(self, params, cache, toks):
+            h = cache + np.asarray(toks, np.float32).mean()
+            logits = h @ params["b"][:, :h.shape[-1]].T
+            return logits[:, None, :], h
+
+    apis = {m: TinyApi() for m in ("lm-v0", "lm-v1")}
+    templates = {m: {"rebuild": lambda ts: {k: np.asarray(v)
+                                            for k, v in ts.items()}}
+                 for m in ("lm-v0", "lm-v1")}
+    prompts = rng.standard_normal((2, 48)).astype(np.float32)
+
+    def generate(backend):
+        opened = ModelStore.open(backend)
+        cap = max(2, opened.num_pages() // 2)
+        server = WeightServer(opened, cap, "optimized_mru",
+                              StorageModel("dram"), backend="device")
+        engine = LMServingEngine(server, apis, templates)
+        outs = []
+        for m in ("lm-v0", "lm-v1", "lm-v0"):
+            out, _ = engine.generate(m, prompts, steps=3)
+            outs.append(out)
+        return outs, engine
+
+    clean, _ = generate(inner)
+    fb = FaultInjectingBackend(inner, _chaos_spec(0.10, seed=3))
+    chaos, engine = generate(fb)
+    for a, b in zip(clean, chaos):
+        np.testing.assert_array_equal(a, b)
+    assert sum(fb.injected.values()) > 0
+    assert engine.stats.batches == 3
