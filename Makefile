@@ -34,6 +34,7 @@ bench:
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_serving_backends --smoke
 	PYTHONPATH=src python -m benchmarks.bench_faults --smoke
+	PYTHONPATH=src python -m benchmarks.bench_traffic --smoke
 
 # Chaos benchmark alone: fault-rate ladder + naive-path-dies proof
 # -> BENCH_faults.json (DESIGN.md §8)

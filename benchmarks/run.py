@@ -18,6 +18,7 @@ MODULES = [
     "fig14_cache_policies",
     "bench_serving_backends",
     "bench_faults",
+    "bench_traffic",
     "roofline_table",
 ]
 

@@ -13,8 +13,9 @@ import numpy as np
 
 from repro.data.pipeline import SyntheticTextTask
 from repro.launch.serve import build_store
-from repro.serving import (EmbeddingServingEngine, Prefetcher, StorageModel,
-                           WeightServer)
+from repro.serving import (BatchComputeModel, EmbeddingServingEngine,
+                           OpenLoopTraffic, Prefetcher, ServingFrontend,
+                           StorageModel, WeightServer)
 
 
 def serve_once(store, heads, task, *, scheduler, overlap, prefetch,
@@ -50,6 +51,41 @@ def serve_once(store, heads, task, *, scheduler, overlap, prefetch,
     return stats, eval_sets
 
 
+def serve_traffic(store, heads, task, *, rate, label):
+    """Open-loop request traffic (Poisson arrivals, Zipf popularity)
+    through the SLO-driven frontend: individual requests arrive over
+    virtual time, merge into batches under a 25ms SLO, and hopeless
+    requests are shed instead of served dead-on-arrival."""
+    server = WeightServer(store, capacity_pages=store.num_pages() // 2,
+                          policy="optimized_mru",
+                          storage=StorageModel("ssd"))
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                    overlap=True)
+
+    def payload(model, rid, rng):
+        v = int(model.rsplit("-v", 1)[1])
+        docs, _ = task.sample(4, variant=v, seed=10_000 + rid)
+        return docs
+
+    gen = OpenLoopTraffic([f"word2vec-v{v}" for v in range(6)],
+                          rate=rate, zipf_alpha=1.1, slo_s=0.025,
+                          seed=7, payload_fn=payload)
+    frontend = ServingFrontend(engine, max_batch=8,
+                               compute_model=BatchComputeModel())
+    stats = frontend.run(gen.generate(160))
+    served = len(stats.request_latencies)
+    print(f"[{label}]")
+    print(f"  offered {stats.offered_requests} requests at {rate:g}/s, "
+          f"served {served}, shed {stats.shed_requests}, "
+          f"missed SLO {stats.slo_misses}")
+    print(f"  goodput         : {stats.goodput:.3f}")
+    if served:
+        print(f"  request p50/p99 : "
+              f"{stats.request_percentile(50) * 1e3:.2f} / "
+              f"{stats.request_percentile(99) * 1e3:.2f} ms")
+    return stats
+
+
 def main():
     task = SyntheticTextTask(vocab=2048, d=64, seed=0)
     store, heads = build_store(task, num_models=6)
@@ -64,6 +100,9 @@ def main():
         prefetch=True, label="async dedup-affinity + prefetch")
     print(f"end-to-end speedup: "
           f"{serial.makespan_seconds / asynch.makespan_seconds:.2f}x")
+
+    serve_traffic(store, heads, task, rate=2000,
+                  label="open-loop traffic @ 2000 req/s, 25ms SLO")
 
     # verify served accuracy against the deduplicated weights
     correct = total = 0

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Bench regression guard: compare freshly generated BENCH_serving.json /
-BENCH_transfer.json / BENCH_faults.json p50s against the baselines
-committed at HEAD.
+BENCH_transfer.json / BENCH_faults.json / BENCH_traffic.json p50s
+against the baselines committed at HEAD.
 
 Run by scripts/verify.sh AFTER the smoke benchmark rewrites the JSON
 files in the working tree; the committed baseline is recovered with
@@ -13,7 +13,9 @@ files in the working tree; the committed baseline is recovered with
   * a fresh internal claim flag is False (grouped must beat per_page at
     every miss rate; device must not lose to numpy below capacity 1.0;
     chaos serving must stay bit-exact with bounded p99 and the naive
-    no-recovery path must demonstrably die).
+    no-recovery path must demonstrably die; the SLO-driven frontend
+    must beat naive per-arrival dispatch on p99 — without losing
+    goodput — at the highest traffic load rung).
 
 Wall-clock p50s on shared CI runners are noisy, so the tolerance is
 deliberately loose: fresh <= TOL * baseline + ABS_MS.  Comparisons are
@@ -194,6 +196,36 @@ def main() -> int:
                 continue
             _check_p50("BENCH_faults", f"rate={c['rate']}",
                        c["p50_ms"], b["p50_ms"], failures)
+
+    traffic = _fresh("BENCH_traffic.json")
+    if traffic is None:
+        return 1
+    # The traffic bench runs entirely on the virtual clock (modeled
+    # fetch + modeled compute), so both claims are deterministic under
+    # the fixed seed — zero tolerance, same as the chaos claims.
+    if not traffic.get("slo_beats_naive_p99_at_peak", False):
+        failures.append("BENCH_traffic: SLO-aware formation/admission "
+                        "did not beat naive per-arrival dispatch on p99 "
+                        "at the highest load rung")
+    if not traffic.get("slo_goodput_no_worse_at_peak", False):
+        failures.append("BENCH_traffic: SLO-aware goodput lost to naive "
+                        "dispatch at the highest load rung (shedding is "
+                        "discarding servable requests)")
+    base = _baseline("BENCH_traffic.json")
+    if _comparable(traffic, base, "BENCH_traffic.json"):
+        by_load = {c.get("load_frac"): c for c in base["configs"]}
+        for c in traffic["configs"]:
+            b = by_load.get(c.get("load_frac"))
+            if b is None or b.get("slo", {}).get("p50_ms") is None:
+                continue
+            if c["slo"]["p50_ms"] is None:
+                failures.append(
+                    f"BENCH_traffic load={c['load_frac']}: frontend "
+                    "served zero requests where the baseline served "
+                    "some")
+                continue
+            _check_p50("BENCH_traffic", f"slo@load={c['load_frac']}",
+                       c["slo"]["p50_ms"], b["slo"]["p50_ms"], failures)
 
     if failures:
         print("[bench-guard] FAILURES:")

@@ -23,8 +23,14 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # prove the naive no-recovery path dies -> BENCH_faults.json.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_faults --smoke
+# Open-loop traffic benchmark: SLO-driven frontend vs naive per-arrival
+# dispatch across a 3-rung load sweep on the virtual clock
+# -> BENCH_traffic.json (p99 + goodput claims at the peak rung).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_traffic --smoke
 # Bench regression guard: fresh BENCH_serving/BENCH_transfer p50s must
 # stay within tolerance of the baselines committed at HEAD (and the
-# grouped-transfer / device-vs-numpy / faults-recovery claims must
-# hold); see scripts/check_bench_regression.py.
+# grouped-transfer / device-vs-numpy / faults-recovery /
+# traffic-frontend claims must hold); see
+# scripts/check_bench_regression.py.
 python scripts/check_bench_regression.py

@@ -1,6 +1,7 @@
 """Registry of the repo's contract lint passes."""
 from .api_drift import ApiDriftPass
 from .channel_charge import ChannelChargePass
+from .frontend_clock import FrontendClockPass
 from .host_sync import HostSyncPass
 from .silent_except import SilentExceptPass
 from .slab_writes import SlabWritePass
@@ -10,6 +11,7 @@ from .wallclock import WallClockPass
 __all__ = [
     "ApiDriftPass",
     "ChannelChargePass",
+    "FrontendClockPass",
     "HostSyncPass",
     "SilentExceptPass",
     "SlabWritePass",
@@ -23,6 +25,7 @@ ALL_PASSES = (
     SlabWritePass,
     HostSyncPass,
     ChannelChargePass,
+    FrontendClockPass,
     WallClockPass,
     ApiDriftPass,
     UnusedBindingPass,

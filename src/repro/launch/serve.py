@@ -29,8 +29,10 @@ from ..core.lsh import estimate_r
 from ..data.pipeline import SyntheticTextTask
 from ..serving.engine import (EmbeddingServingEngine, ServeStats,
                               StorageModel, WeightServer)
+from ..serving.frontend import ServingFrontend
 from ..serving.prefetch import Prefetcher
 from ..serving.scheduler import SCHEDULERS
+from ..serving.traffic import OpenLoopTraffic, TrafficSpec
 
 
 def build_store(task: SyntheticTextTask, num_models: int,
@@ -91,6 +93,11 @@ def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
               f"failovers={fs.failovers} "
               f"degraded={stats.degraded_batches} "
               f"backoff={fs.fault_backoff_seconds*1e3:.2f}ms")
+    # percentile() raises on an empty run (a silent 0.0 would read as an
+    # impossibly fast tail); an empty run prints n/a instead
+    lat = (f"p50={stats.percentile(50)*1e3:.2f}ms "
+           f"p99={stats.percentile(99)*1e3:.2f}ms") if stats.latencies \
+        else "p50=n/a p99=n/a"
     print(f"[serve] batches={stats.batches} requests={stats.requests} "
           f"scheduler={args.scheduler} overlap={args.overlap} "
           f"backend={args.backend} "
@@ -98,9 +105,24 @@ def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
           f"fetch={stats.fetch_seconds*1e3:.1f}ms "
           f"prefetch={stats.prefetch_seconds*1e3:.1f}ms "
           f"compute={stats.compute_seconds*1e3:.1f}ms "
-          f"makespan={stats.makespan_seconds*1e3:.1f}ms "
-          f"p50={stats.percentile(50)*1e3:.2f}ms "
-          f"p99={stats.percentile(99)*1e3:.2f}ms")
+          f"makespan={stats.makespan_seconds*1e3:.1f}ms " + lat)
+
+
+def _print_traffic(spec: TrafficSpec, fe: ServingFrontend,
+                   stats: ServeStats) -> None:
+    """The ``[traffic]`` report line: request-level latency/goodput for
+    an open-loop run (virtual-clock quantities throughout)."""
+    served = len(stats.request_latencies)
+    lat = (f"p50={stats.request_percentile(50)*1e3:.2f}ms "
+           f"p99={stats.request_percentile(99)*1e3:.2f}ms") if served \
+        else "p50=n/a p99=n/a"
+    print(f"[traffic] policy={fe.policy} rate={spec.rate:g}/s "
+          f"zipf={spec.zipf:g} slo={spec.slo_ms:g}ms seed={spec.seed} "
+          f"offered={stats.offered_requests} served={served} "
+          f"shed={stats.shed_requests} slo_miss={stats.slo_misses} "
+          f"goodput={stats.goodput:.3f} " + lat +
+          f" clock={fe.clock.now*1e3:.1f}ms "
+          f"idle={fe.clock.spent('idle')*1e3:.1f}ms")
 
 
 def _open_db(args, store: ModelStore):
@@ -173,14 +195,32 @@ def serve_embedding(args) -> tuple:
             server, heads, scheduler=args.scheduler,
             prefetcher=Prefetcher(server) if args.prefetch else None,
             overlap=args.overlap)
-    rng = np.random.default_rng(args.seed + 9)
-    for b in range(args.batches):
-        v = int(rng.integers(0, args.models))
-        name = f"word2vec-v{v}"
-        docs, labels = task.sample(args.batch_size, variant=v,
-                                   seed=args.seed + 100 + b)
-        engine.submit(name, docs)
-    stats: ServeStats = engine.run()
+    if args.traffic:
+        spec = TrafficSpec.parse(args.traffic)
+        docs_per_req = max(1, args.batch_size // spec.max_batch)
+        names = [f"word2vec-v{v}" for v in range(args.models)]
+
+        def _payload(model, rid, rng):
+            v = int(model.rsplit("-v", 1)[1])
+            docs, _ = task.sample(docs_per_req, variant=v,
+                                  seed=args.seed + 100 + rid)
+            return docs
+
+        gen = OpenLoopTraffic(names, rate=spec.rate, zipf_alpha=spec.zipf,
+                              slo_s=spec.slo_ms * 1e-3, seed=spec.seed,
+                              payload_fn=_payload)
+        fe = ServingFrontend(engine, max_batch=spec.max_batch)
+        stats: ServeStats = fe.run(gen.generate(spec.requests))
+        _print_traffic(spec, fe, stats)
+    else:
+        rng = np.random.default_rng(args.seed + 9)
+        for b in range(args.batches):
+            v = int(rng.integers(0, args.models))
+            name = f"word2vec-v{v}"
+            docs, labels = task.sample(args.batch_size, variant=v,
+                                       seed=args.seed + 100 + b)
+            engine.submit(name, docs)
+        stats = engine.run()
     _print_stats(args, stats, server)
     return stats, server
 
@@ -250,11 +290,25 @@ def serve_lm(args) -> tuple:
         engine = LMServingEngine(server, apis, templates,
                                  scheduler=args.scheduler,
                                  overlap=args.overlap)
-    for b in range(args.batches):
-        name = names[int(rng.integers(0, num_models))]
-        prompts = rng.integers(1, 64, size=(2, 8)).astype(np.int32)
-        engine.submit(name, prompts, steps=args.lm_steps)
-    stats: ServeStats = engine.run()
+    if args.traffic:
+        spec = TrafficSpec.parse(args.traffic)
+
+        def _payload(model, rid, prng):
+            prompts = prng.integers(1, 64, size=(1, 8)).astype(np.int32)
+            return prompts, args.lm_steps
+
+        gen = OpenLoopTraffic(names, rate=spec.rate, zipf_alpha=spec.zipf,
+                              slo_s=spec.slo_ms * 1e-3, seed=spec.seed,
+                              payload_fn=_payload)
+        fe = ServingFrontend(engine, max_batch=spec.max_batch)
+        stats: ServeStats = fe.run(gen.generate(spec.requests))
+        _print_traffic(spec, fe, stats)
+    else:
+        for b in range(args.batches):
+            name = names[int(rng.integers(0, num_models))]
+            prompts = rng.integers(1, 64, size=(2, 8)).astype(np.int32)
+            engine.submit(name, prompts, steps=args.lm_steps)
+        stats = engine.run()
     _print_stats(args, stats, server)
     return stats, server
 
@@ -284,6 +338,14 @@ def main(argv=None):
                          "'transient=0.05,corrupt=0.02,seed=7' — the "
                          "recovery layer retries/verifies/re-fetches and "
                          "serving stays bit-exact (DESIGN.md §8)")
+    ap.add_argument("--traffic", default=None, metavar="SPEC",
+                    help="open-loop request traffic instead of pre-built "
+                         "batches: 'rate=200,zipf=1.1,slo_ms=50,seed=0,"
+                         "requests=200,max_batch=8' — Poisson arrivals, "
+                         "Zipf model popularity, SLO-driven continuous "
+                         "batching + cost-based admission through the "
+                         "ServingFrontend; prints a [traffic] report "
+                         "line (p50/p99/goodput on the virtual clock)")
     ap.add_argument("--scheduler", default="round_robin",
                     choices=sorted(SCHEDULERS))
     ap.add_argument("--backend", default="numpy",

@@ -1,6 +1,7 @@
 from .device_pool import DevicePagePool
 from .engine import (EmbeddingServingEngine, FetchComputeTimeline,
                      LMServingEngine, ServeStats, StorageModel, WeightServer)
+from .frontend import BatchComputeModel, ServingFrontend
 from .kvcache import PagedKVCache
 from .prefetch import Prefetcher, PrefetchStats
 from .router import RouteDecision, ShardRouter
@@ -10,13 +11,18 @@ from .scheduler import (SCHEDULERS, BatchScheduler, DedupAffinityScheduler,
 from .shard_pool import (PLACEMENTS, Placement, ShardedPagePool,
                          ShardedWeightServer, hash_placement, make_placement,
                          sharers_placement)
+from .traffic import (OpenLoopTraffic, Request, TrafficSpec, VirtualClock,
+                      zipf_weights, zoo_popularity)
 
 __all__ = ["DevicePagePool", "EmbeddingServingEngine",
            "FetchComputeTimeline", "LMServingEngine", "ServeStats",
-           "StorageModel", "WeightServer", "PagedKVCache", "Prefetcher",
+           "StorageModel", "WeightServer", "BatchComputeModel",
+           "ServingFrontend", "PagedKVCache", "Prefetcher",
            "PrefetchStats", "SCHEDULERS", "BatchScheduler",
            "DedupAffinityScheduler", "FifoScheduler", "RoundRobinScheduler",
            "ScheduledBatch", "make_scheduler",
            "RouteDecision", "ShardRouter", "PLACEMENTS", "Placement",
            "ShardedPagePool", "ShardedWeightServer", "hash_placement",
-           "make_placement", "sharers_placement"]
+           "make_placement", "sharers_placement",
+           "OpenLoopTraffic", "Request", "TrafficSpec", "VirtualClock",
+           "zipf_weights", "zoo_popularity"]

@@ -198,6 +198,16 @@ class ServeStats:
     # per-batch virtual fetch-channel seconds (storage + interconnect):
     # deterministic, so placement policies compare free of wall noise
     fetch_latencies: List[float] = dataclasses.field(default_factory=list)
+    # -- request-level serving (serving/frontend.py) --
+    offered_requests: int = 0        # arrivals presented to the frontend
+    shed_requests: int = 0           # admission-shed (never served)
+    slo_misses: int = 0              # served, but past their deadline
+    queue_latencies: List[float] = dataclasses.field(default_factory=list)
+    # ^ per served request: arrival -> dispatch (virtual seconds)
+    service_latencies: List[float] = dataclasses.field(default_factory=list)
+    # ^ per served request: dispatch -> done (its batch's service time)
+    request_latencies: List[float] = dataclasses.field(default_factory=list)
+    # ^ per served request: arrival -> done (queue + service)
 
     @property
     def total_seconds(self) -> float:
@@ -232,9 +242,36 @@ class ServeStats:
     def mean_group_size(self) -> float:
         return float(np.mean(self.group_sizes)) if self.group_sizes else 0.0
 
+    @property
+    def goodput(self) -> float:
+        """Fraction of *offered* requests served within their SLO
+        (sheds and deadline misses both count against it); 0.0 before
+        any request-level traffic has been offered."""
+        if not self.offered_requests:
+            return 0.0
+        ok = len(self.request_latencies) - self.slo_misses
+        return ok / self.offered_requests
+
     def percentile(self, p: float) -> float:
-        return float(np.percentile(self.latencies, p)) if self.latencies \
-            else 0.0
+        """p-th percentile of per-batch latencies.  Raises
+        ``ValueError`` when no batch has been served yet — a silent
+        0.0 reads as an impossibly fast tail in reports; callers that
+        want a default must guard explicitly."""
+        if not self.latencies:
+            raise ValueError(
+                "percentile() on an empty latency list (no batches "
+                "served); guard on stats.latencies for a default")
+        return float(np.percentile(self.latencies, p))
+
+    def request_percentile(self, p: float) -> float:
+        """p-th percentile of per-request total latencies (frontend
+        traffic); raises ``ValueError`` when no request was served."""
+        if not self.request_latencies:
+            raise ValueError(
+                "request_percentile() on an empty request-latency list "
+                "(no frontend traffic served); guard on "
+                "stats.request_latencies for a default")
+        return float(np.percentile(self.request_latencies, p))
 
 
 # ------------------------------------------------------------- weight serve --
@@ -440,6 +477,15 @@ class WeightServer:
         return {"seconds": s.seconds, "pages": s.pages, "bytes": s.bytes,
                 "groups": s.groups,
                 "overlapped_bytes": s.overlapped_bytes}
+
+    def shard_resident_pages(self, shard: Optional[int] = None):
+        """Resident page ids of one shard's pool — the admission
+        probe's view of dedup affinity.  A single-slab server has
+        exactly one 'shard'; :class:`~repro.serving.shard_pool.
+        ShardedWeightServer` overrides this with the per-shard pools so
+        a routed batch is scored against the residency of the shard it
+        would actually land on."""
+        return self.pool.resident_pages()
 
     def tensor_pages(self, model: str, tensor: str) -> List[int]:
         return self.store.packing.tensor_pages[(model, tensor)]
@@ -780,6 +826,7 @@ class LMServingEngine(_PrefetchingEngine):
         self.overlap = overlap
         self.timeline = FetchComputeTimeline()
         self.stats = ServeStats(overlapped=overlap)
+        self.last_tokens: Optional[np.ndarray] = None  # test/frontend hook
         self._resident_model: Optional[str] = None
         self._params = None
         self._params_gen = -1          # packing generation of _params
@@ -866,6 +913,7 @@ class LMServingEngine(_PrefetchingEngine):
         snap = self._transfer_snap()
         fetch_t = self._load_model(model)
         out, dt = self._compute(model, prompts, steps)
+        self.last_tokens = out
         self._add_transfer_delta(snap)
         if self.overlap:
             # keep the timeline live on the direct call path too, so
@@ -904,6 +952,7 @@ class LMServingEngine(_PrefetchingEngine):
                     self.server.store.model_pages(batch.model))
             self._prestage_next()       # next model's pages ∥ this compute
             out, compute_t = self._compute(batch.model, prompts, steps)
+            self.last_tokens = out
             self._add_transfer_delta(snap)
             if self.overlap:
                 issue, done = self.timeline.advance(fetch_t, compute_t)

@@ -1,0 +1,347 @@
+"""Request-level serving front end: SLO-driven continuous batching and
+cost-based admission over the existing engines.
+
+The generator (``serving/traffic.py``) produces an open-loop arrival
+stream; this module turns it into engine batches:
+
+  arrival -> admission -> formation -> (engine) schedule -> route -> serve
+
+* **Continuous batch formation** — queued requests for the same model
+  merge into one engine batch.  A model's batch closes when it reaches
+  ``max_batch`` or when the oldest member's SLO slack no longer covers
+  the batch's estimated service time (waiting any longer would blow the
+  deadline the batch was being held open to amortize).
+* **Cost-based admission** — among closeable batches the frontend
+  dispatches the one with the lowest estimated fetch cost per request:
+  the candidate's page working set (``ModelStore.model_pages`` /
+  the batch's own page estimate) is diffed against the routed shard's
+  *own* resident set (``ShardRouter`` + per-shard residency), so a
+  batch whose pages are already slab-resident on its shard — the dedup
+  affinity win — goes first and cold batches pay their fetch when they
+  must, not ahead of hot ones.
+* **Shedding** — a request whose deadline cannot be met even by
+  dispatching *now* (``deadline < now + est_service``) is shed instead
+  of served dead-on-arrival; shed counts land in
+  :class:`~repro.serving.engine.ServeStats` and goodput reports the
+  fraction of offered requests served within SLO.
+* **Virtual-clock discipline** — the whole simulation runs on a
+  :class:`~repro.serving.traffic.VirtualClock`: queueing time is idle
+  channel time, fetch time is the engine's (deterministic) virtual
+  storage seconds, compute time is either a deterministic
+  :class:`BatchComputeModel` (benchmarks: bit-stable under a seed) or
+  the engine's measured wall compute folded onto the clock.  The
+  ``frontend-clock`` lint enforces that no path here consumes time
+  without charging a named channel.
+
+``policy="naive"`` is the control: per-arrival FIFO dispatch, one
+request per batch, no admission, no shedding — what a serving tier
+without a front end does.  ``BENCH_traffic.json`` measures both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .engine import LMServingEngine, ServeStats
+from .traffic import Request, VirtualClock
+
+__all__ = ["BatchComputeModel", "ServingFrontend"]
+
+#: EMA smoothing for observed per-model arrival rates and compute cost
+#: (mirrors BufferPool's rate_ema so the λ feeds compare like for like)
+_RATE_EMA = 0.2
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class BatchComputeModel:
+    """Deterministic per-batch compute-time model for the virtual
+    clock: ``base + per_request * n`` seconds per dispatched batch.
+    Benchmarks use it so latency distributions are bit-stable under a
+    fixed seed; without one the frontend folds the engine's measured
+    wall compute onto the clock instead."""
+    base: float = 5e-4
+    per_request: float = 5e-5
+
+    def batch_seconds(self, n: int) -> float:
+        """Virtual compute seconds for an ``n``-request batch."""
+        return self.base + self.per_request * max(0, int(n))
+
+
+class ServingFrontend:
+    """Continuous-batching front end over one serving engine.
+
+    ``engine``: an :class:`EmbeddingServingEngine` or
+    :class:`LMServingEngine` (1 or N shards — routing happens inside
+    the engine's server).  ``max_batch``: formation cap per dispatched
+    batch.  ``policy``: ``"slo"`` (formation + admission + shedding) or
+    ``"naive"`` (per-arrival FIFO control).  ``compute_model``: a
+    :class:`BatchComputeModel` for deterministic virtual compute;
+    ``None`` folds measured wall compute onto the clock.
+    ``capture=True`` keeps each request's result rows (logits / tokens)
+    in :attr:`results` for the bit-equality tests.
+
+    When the engine has a prefetcher, the frontend feeds it the
+    *observed* per-model arrival rates (EMA over the virtual clock) via
+    ``Prefetcher.attach_rates`` — the λ of Eq. 2 measured at the door
+    instead of back-derived from pool access counts.
+    """
+
+    POLICIES = ("slo", "naive")
+
+    def __init__(self, engine, max_batch: int = 8, policy: str = "slo",
+                 compute_model: Optional[BatchComputeModel] = None,
+                 capture: bool = True):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"have {self.POLICIES}")
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.policy = policy
+        self.compute_model = compute_model
+        self.capture = capture
+        self.clock = VirtualClock()
+        self.results: Dict[int, np.ndarray] = {}
+        self.dispatched: List[Tuple[str, List[Request]]] = []
+        self._lm = isinstance(engine, LMServingEngine)
+        self._queues: Dict[str, List[Request]] = {}   # model -> FIFO
+        self._fifo: List[Request] = []                # naive global FIFO
+        self._rates: Dict[str, float] = {}            # observed λ (EMA)
+        self._last_arrival: Dict[str, float] = {}
+        self._cpr: Optional[float] = None             # EMA compute/request
+        pf = getattr(engine, "prefetcher", None)
+        if pf is not None and hasattr(pf, "attach_rates"):
+            pf.attach_rates(self.arrival_rates)
+
+    # -- observability -----------------------------------------------------
+    def arrival_rates(self) -> Dict[str, float]:
+        """Observed per-model arrival rates (requests per virtual
+        second, EMA-smoothed) — the λ feed for the prefetcher."""
+        return dict(self._rates)
+
+    @property
+    def stats(self) -> ServeStats:
+        """The engine's stats object (request-level counters included)."""
+        return self.engine.stats
+
+    # -- sizing helpers ----------------------------------------------------
+    def _rows(self, req: Request) -> int:
+        payload = req.payload[0] if self._lm else req.payload
+        return int(np.asarray(payload).shape[0])
+
+    def _merge(self, reqs: List[Request]):
+        """One engine payload from a batch's requests (same model)."""
+        if self._lm:
+            steps = {int(r.payload[1]) for r in reqs}
+            if len(steps) != 1:
+                raise ValueError(
+                    f"cannot merge LM requests with mixed decode steps "
+                    f"{sorted(steps)} into one batch")
+            prompts = np.concatenate([np.asarray(r.payload[0])
+                                      for r in reqs], axis=0)
+            return prompts, steps.pop()
+        return np.concatenate([np.asarray(r.payload) for r in reqs],
+                              axis=0)
+
+    # -- cost model --------------------------------------------------------
+    def _batch_pages(self, model: str, reqs: List[Request]) -> List[int]:
+        server = self.engine.server
+        if self._lm:
+            return server.store.model_pages(model)
+        rows = np.unique(np.concatenate(
+            [np.asarray(r.payload).reshape(-1) for r in reqs]))
+        return server.embedding_rows_pages(
+            model, self.engine.embed_tensor, rows)
+
+    def _est_fetch(self, model: str, reqs: List[Request]) -> float:
+        """Estimated virtual fetch seconds for this batch: its page
+        working set diffed against the shard the router would place it
+        on (advisory route, nothing recorded), costed as one grouped
+        fetch.  This is the admission score — misses against the
+        routed shard's *own* residency, so dedup affinity (pages kept
+        hot by other variants on the same shard) directly lowers a
+        candidate's price."""
+        server = self.engine.server
+        pages = self._batch_pages(model, reqs)
+        router = getattr(server, "router", None)
+        if router is not None:
+            shard = router.route(pages, record=False).shard
+            resident = server.shard_resident_pages(shard)
+        else:
+            resident = server.shard_resident_pages()
+        misses = len(set(pages) - resident)
+        return server.storage.fetch_group_seconds(server.page_bytes,
+                                                  misses)
+
+    def _est_compute(self, n: int) -> float:
+        if self.compute_model is not None:
+            return self.compute_model.batch_seconds(n)
+        return (self._cpr or 0.0) * n
+
+    def _est_service(self, model: str, reqs: List[Request]) -> float:
+        rows = sum(self._rows(r) for r in reqs)
+        return self._est_fetch(model, reqs) + self._est_compute(rows)
+
+    # -- queue management --------------------------------------------------
+    def _pending(self) -> int:
+        if self.policy == "naive":
+            return len(self._fifo)
+        return sum(len(q) for q in self._queues.values())
+
+    def _admit(self, req: Request) -> None:
+        """Enqueue one arrival and fold it into the λ estimate."""
+        last = self._last_arrival.get(req.model)
+        self._last_arrival[req.model] = req.arrival_t
+        if last is not None and req.arrival_t > last:
+            inst = 1.0 / (req.arrival_t - last)
+            prev = self._rates.get(req.model)
+            self._rates[req.model] = inst if prev is None else \
+                (1.0 - _RATE_EMA) * prev + _RATE_EMA * inst
+        if self.policy == "naive":
+            self._fifo.append(req)
+        else:
+            self._queues.setdefault(req.model, []).append(req)
+
+    # -- formation ---------------------------------------------------------
+    def _form(self) -> Optional[Tuple[str, List[Request]]]:
+        """Pick the next batch to dispatch, or None to keep waiting.
+
+        A model's queue is *closeable* when it holds ``max_batch``
+        requests (nothing to gain by waiting) or when its oldest
+        member's slack no longer covers the estimated service time
+        (*forced*: wait any longer and the deadline dies).  Forced
+        batches dispatch first (earliest deadline); otherwise the
+        cheapest candidate per request wins — cost-based admission."""
+        if self.policy == "naive":
+            if not self._fifo:
+                return None
+            req = self._fifo.pop(0)
+            return req.model, [req]
+        forced: List[Tuple[float, str]] = []
+        full: List[Tuple[float, float, str]] = []
+        now = self.clock.now
+        for model, q in self._queues.items():
+            take = q[: self.max_batch]
+            est = self._est_service(model, take)
+            if now >= take[0].deadline - est - _EPS:
+                forced.append((take[0].deadline, model))
+            elif len(q) >= self.max_batch:
+                n = max(1, sum(self._rows(r) for r in take))
+                full.append((self._est_fetch(model, take) / n,
+                             take[0].arrival_t, model))
+        if forced:
+            forced.sort()
+            model = forced[0][1]
+        elif full:
+            full.sort()
+            model = full[0][2]
+        else:
+            return None
+        q = self._queues[model]
+        batch, self._queues[model] = q[: self.max_batch], q[self.max_batch:]
+        if not self._queues[model]:
+            del self._queues[model]
+        return model, batch
+
+    def _next_forced_time(self) -> Optional[float]:
+        """Earliest future instant at which some queue becomes forced
+        (its oldest member's slack hits the estimated service time)."""
+        out = None
+        for model, q in self._queues.items():
+            take = q[: self.max_batch]
+            t = take[0].deadline - self._est_service(model, take)
+            if out is None or t < out:
+                out = t
+        return out
+
+    # -- dispatch ----------------------------------------------------------
+    def _capture_results(self, kept: List[Request]) -> None:
+        out = self.engine.last_tokens if self._lm \
+            else self.engine.last_logits
+        if out is None:
+            return
+        out = np.asarray(out)
+        row = 0
+        for r in kept:
+            n = self._rows(r)
+            self.results[r.rid] = out[row: row + n].copy()
+            row += n
+
+    def _dispatch(self, model: str, batch: List[Request]) -> None:
+        """Shed the dead, serve the rest, charge the clock, record
+        per-request latencies."""
+        st: ServeStats = self.engine.stats
+        kept = batch
+        if self.policy == "slo":
+            est = self._est_service(model, batch)
+            kept = [r for r in batch
+                    if r.deadline >= self.clock.now + est - _EPS]
+            st.shed_requests += len(batch) - len(kept)
+            if not kept:
+                return
+        start = self.clock.now
+        f0, c0 = st.fetch_seconds, st.compute_seconds
+        if self._lm:
+            prompts, steps = self._merge(kept)
+            self.engine.submit(model, prompts, steps=steps)
+        else:
+            self.engine.submit(model, self._merge(kept))
+        self.engine.run(max_batches=1)
+        d_fetch = st.fetch_seconds - f0
+        rows = sum(self._rows(r) for r in kept)
+        if self.compute_model is not None:
+            d_compute = self.compute_model.batch_seconds(rows)
+        else:
+            d_compute = st.compute_seconds - c0
+        self.clock.advance(d_fetch, self.engine.server.storage.channel)
+        self.clock.advance(d_compute, "compute")
+        done = self.clock.now
+        service = done - start
+        inst = d_compute / max(1, rows)
+        self._cpr = inst if self._cpr is None else \
+            (1.0 - _RATE_EMA) * self._cpr + _RATE_EMA * inst
+        for r in kept:
+            st.queue_latencies.append(start - r.arrival_t)
+            st.service_latencies.append(service)
+            st.request_latencies.append(done - r.arrival_t)
+            if done > r.deadline + _EPS:
+                st.slo_misses += 1
+        self.dispatched.append((model, kept))
+        if self.capture:
+            self._capture_results(kept)
+
+    # -- the event loop ----------------------------------------------------
+    def run(self, requests: List[Request]) -> ServeStats:
+        """Serve an arrival stream to completion (discrete-event loop
+        on the virtual clock); returns the engine's stats with the
+        request-level counters filled in."""
+        reqs = sorted(requests, key=lambda r: (r.arrival_t, r.rid))
+        st: ServeStats = self.engine.stats
+        st.offered_requests += len(reqs)
+        i = 0
+        while i < len(reqs) or self._pending():
+            while i < len(reqs) and reqs[i].arrival_t <= self.clock.now \
+                    + _EPS:
+                self._admit(reqs[i])
+                i += 1
+            batch = self._form()
+            if batch is not None:
+                self._dispatch(*batch)
+                continue
+            # nothing closeable: idle to the next decision point (next
+            # arrival, or the instant a queue's slack runs out)
+            candidates = []
+            if i < len(reqs):
+                candidates.append(reqs[i].arrival_t)
+            forced = self._next_forced_time()
+            if forced is not None:
+                candidates.append(forced)
+            if not candidates:
+                break
+            self.clock.tick_to(max(min(candidates), self.clock.now),
+                               channel="idle")
+        return st

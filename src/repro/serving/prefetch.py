@@ -62,6 +62,7 @@ class Prefetcher:
         self.max_pages_per_step = max_pages_per_step
         self.lookahead = lookahead
         self.scheduler = None
+        self._rate_fn = None
         self.stats = PrefetchStats()
         self._gen = None
         self._plan_lookahead: Set[int] = set()   # lookahead pages, last plan
@@ -72,6 +73,17 @@ class Prefetcher:
         """Give the prefetcher visibility into the pending queue (the
         engines call this at construction)."""
         self.scheduler = scheduler
+
+    def attach_rates(self, rate_fn) -> None:
+        """Override the λ source with *observed* arrival rates: a
+        zero-arg callable returning ``{model: requests/s}`` (the
+        serving frontend attaches its EMA over request arrivals on the
+        virtual clock).  The pool's access-count rates — a trailing
+        proxy measured after batching — are then only the fallback
+        while the feed is empty, so the speculative tier re-targets as
+        soon as the arrival mix shifts instead of waiting for the new
+        mix to dominate the access history."""
+        self._rate_fn = rate_fn
 
     def _refresh(self) -> None:
         """(Re)derive the per-model page working sets from the store's
@@ -117,8 +129,12 @@ class Prefetcher:
                     self._plan_lookahead.add(p)
                     if len(out) >= self.max_pages_per_step:
                         return out
-        # tier 2: λ speculation with whatever budget remains
-        rates = self.server.pool.model_rates()
+        # tier 2: λ speculation with whatever budget remains; observed
+        # arrival rates (frontend feed) beat the pool's access-count
+        # proxy whenever the feed has seen traffic
+        rates = self._rate_fn() if self._rate_fn is not None else {}
+        if not rates:
+            rates = self.server.pool.model_rates()
         hot = sorted(rates, key=rates.get, reverse=True)[: self.hot_models]
         for m in hot:
             missing = [p for p in self._model_pages.get(m, ())

@@ -728,6 +728,16 @@ class ShardedWeightServer(WeightServer):
     def num_shards(self) -> int:
         return self.sharded.num_shards
 
+    def shard_resident_pages(self, shard: Optional[int] = None):
+        """Resident page ids of ONE shard's pool (``None``: the union
+        view).  The frontend's admission probe scores a candidate batch
+        against the residency of the shard the router would place it on
+        — not the union — so cross-shard dedup affinity is never
+        overcounted."""
+        if shard is None:
+            return self.pool.resident_pages()
+        return self.sharded.buffer_pools[int(shard)].resident_pages()
+
     # ------------------------------------------------------------- failover --
     def fail_shard(self, shard: int) -> None:
         """Fail a shard mid-run: traffic re-routes to survivors, its

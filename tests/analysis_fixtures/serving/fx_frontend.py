@@ -1,0 +1,22 @@
+"""Fixture for FrontendClockPass: wall-time calls and an uncharged
+dispatch must trip; the charged dispatcher and the pragma'd helper stay
+quiet.  (Linted with files=("analysis_fixtures/serving/fx_frontend.py",).)
+"""
+import time
+
+
+class Frontend:
+    def bad_wall_time(self):
+        return time.perf_counter()            # trip: wall time
+
+    def bad_free_latency(self, engine):
+        engine.run(max_batches=1)             # trip: no clock charge
+        return engine.stats
+
+    def good_charged(self, engine, clock):
+        engine.run(max_batches=1)
+        clock.advance(1e-3, "compute")        # charged: quiet
+
+    # repro: allow-untimed (caller owns the charge)
+    def helper_caller_charges(self, engine):
+        engine.run(max_batches=1)

@@ -13,6 +13,7 @@ from repro.analysis.lint import Source, parse_pragmas, run_lint
 from repro.analysis.passes import default_passes
 from repro.analysis.passes.api_drift import ApiDriftPass
 from repro.analysis.passes.channel_charge import ChannelChargePass
+from repro.analysis.passes.frontend_clock import FrontendClockPass
 from repro.analysis.passes.host_sync import HostSyncPass
 from repro.analysis.passes.slab_writes import SlabWritePass
 from repro.analysis.passes.unused import UnusedBindingPass
@@ -111,6 +112,32 @@ def test_channel_charge_fixture_trips_uncharged_only():
         path_fragment="analysis_fixtures/serving/").run(src)
     assert len(findings) == 1
     assert "uncharged_fetch" in findings[0].message
+
+
+def test_frontend_clock_fixture_trips_wall_time_and_free_latency():
+    src = Source.load(FIXTURES / "serving" / "fx_frontend.py")
+    findings = FrontendClockPass(
+        files=("analysis_fixtures/serving/fx_frontend.py",)).run(src)
+    assert len(findings) == 2
+    assert {f.name for f in findings} == {"frontend-clock"}
+    msgs = _msgs(findings)
+    assert "time.perf_counter()" in msgs          # Rule A: wall time
+    assert "free latency" in msgs                 # Rule B: uncharged run()
+    assert "bad_free_latency" in msgs
+    # the charged dispatcher and the pragma'd helper stay quiet
+    assert "good_charged" not in msgs
+    assert "helper_caller_charges" not in msgs
+
+
+def test_frontend_clock_scoped_to_frontend_files_only():
+    # the same wall-time call outside the configured files is ignored
+    src = Source("src/repro/serving/engine.py",
+                 "import time\nt = time.perf_counter()\n")
+    assert FrontendClockPass().run(src) == []
+    # ... and the real frontend modules ARE in scope by default
+    src = Source("src/repro/serving/frontend.py",
+                 "import time\nt = time.perf_counter()\n")
+    assert len(FrontendClockPass().run(src)) == 1
 
 
 def test_silent_except_fixture_trips_pragma_and_narrow_stay_quiet():

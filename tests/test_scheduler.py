@@ -140,6 +140,31 @@ def test_affinity_prefers_resident_overlap_and_never_starves():
     assert s.next_batch(resident) is None
 
 
+def test_affinity_starvation_bound_under_continuous_submission():
+    """The max_defer bound must hold under *continuous* interleaved
+    submission, not just a static queue: fresh perfectly-resident work
+    arrives before every scheduling decision, so the cold batch would
+    starve forever on score alone.  It must be forced after exactly
+    max_defer deferrals, and once served the hot backlog resumes."""
+    s = DedupAffinityScheduler(max_defer=3)
+    resident = {1, 2}
+    s.submit("b", "cold", pages=[50, 51])        # zero resident overlap
+    order = []
+    for i in range(8):
+        s.submit("a", f"hot{i}", pages=[1, 2])   # fresh full-overlap work
+        order.append(s.next_batch(resident).model)
+    assert order[:3] == ["a"] * 3                # deferred while hot wins
+    assert order[3] == "b"                       # forced at max_defer
+    assert order[4:] == ["a"] * 4                # backlog drains after
+    # the bound resets: a second cold batch waits max_defer again
+    s.submit("b", "cold2", pages=[50, 51])
+    order2 = []
+    for i in range(8, 14):
+        s.submit("a", f"hot{i}", pages=[1, 2])
+        order2.append(s.next_batch(resident).model)
+    assert order2.index("b") == 3
+
+
 def test_make_scheduler_factory():
     assert isinstance(make_scheduler("fifo"), FifoScheduler)
     sched = RoundRobinScheduler()

@@ -1,0 +1,414 @@
+"""Request-level serving front end tests (traffic.py + frontend.py):
+seeded open-loop generator (Poisson arrivals, Zipf popularity, stream
+continuation), the --traffic spec grammar, virtual-clock channel
+accounting, SLO-driven batch formation / forced dispatch / shedding vs
+the naive per-arrival control, the frontend->prefetcher λ feed tracking
+a shifted Zipf, and the acceptance bit-equality: frontend-served logits
+== direct engine submission (embedding + LM, 1 and 2 shards).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import DedupConfig, LSHConfig, ModelStore, StoreConfig
+from repro.data.pipeline import SyntheticTextTask
+from repro.launch.serve import build_store
+from repro.serving import (BatchComputeModel, EmbeddingServingEngine,
+                           LMServingEngine, OpenLoopTraffic, Prefetcher,
+                           Request, ServeStats, ServingFrontend,
+                           ShardedWeightServer, StorageModel, TrafficSpec,
+                           VirtualClock, WeightServer, zipf_weights,
+                           zoo_popularity)
+
+
+def _scenario(vocab=512, d=32, num_models=3, block=(32, 32), l=4, seed=0):
+    task = SyntheticTextTask(vocab=vocab, d=d, seed=seed)
+    store, heads = build_store(task, num_models=num_models,
+                               block_shape=block, blocks_per_page=l)
+    return task, store, heads
+
+
+def _doc_payload(task, docs_per_req=3, seed_base=700):
+    def payload(model, rid, rng):
+        v = int(model.rsplit("-v", 1)[1])
+        docs, _ = task.sample(docs_per_req, variant=v,
+                              seed=seed_base + rid)
+        return docs
+    return payload
+
+
+def _requests(model, payloads, arrivals, slo):
+    return [Request(rid=i, model=model, payload=p, arrival_t=t,
+                    deadline=t + slo)
+            for i, (p, t) in enumerate(zip(payloads, arrivals))]
+
+
+# -------------------------------------------------------------- generator --
+def test_generator_deterministic_under_seed():
+    models = ["m0", "m1", "m2"]
+    a = OpenLoopTraffic(models, rate=100.0, seed=4).generate(50)
+    b = OpenLoopTraffic(models, rate=100.0, seed=4).generate(50)
+    assert [(r.rid, r.model, r.arrival_t, r.deadline) for r in a] \
+        == [(r.rid, r.model, r.arrival_t, r.deadline) for r in b]
+    c = OpenLoopTraffic(models, rate=100.0, seed=5).generate(50)
+    assert [r.arrival_t for r in a] != [r.arrival_t for r in c]
+
+
+def test_generator_stream_continues_across_calls():
+    models = ["m0", "m1"]
+    gen = OpenLoopTraffic(models, rate=50.0, seed=2)
+    split = gen.generate(10) + gen.generate(10)
+    whole = OpenLoopTraffic(models, rate=50.0, seed=2).generate(20)
+    assert [(r.rid, r.model, r.arrival_t) for r in split] \
+        == [(r.rid, r.model, r.arrival_t) for r in whole]
+    # arrivals are strictly increasing across the call boundary
+    ts = [r.arrival_t for r in split]
+    assert all(t1 > t0 for t0, t1 in zip(ts, ts[1:]))
+
+
+def test_poisson_mean_interarrival_tracks_rate():
+    gen = OpenLoopTraffic(["m"], rate=200.0, seed=0)
+    reqs = gen.generate(4000)
+    gaps = np.diff([0.0] + [r.arrival_t for r in reqs])
+    assert np.mean(gaps) == pytest.approx(1.0 / 200.0, rel=0.1)
+
+
+def test_zipf_popularity_skews_to_head_rank():
+    models = [f"m{i}" for i in range(5)]
+    reqs = OpenLoopTraffic(models, rate=100.0, zipf_alpha=1.5,
+                           seed=1).generate(3000)
+    counts = {m: 0 for m in models}
+    for r in reqs:
+        counts[r.model] += 1
+    assert counts["m0"] == max(counts.values())
+    assert counts["m0"] > 3 * counts["m4"]
+
+
+def test_zipf_weights_shape_and_degenerate_alpha():
+    w = zipf_weights(4, 1.0)
+    assert w.sum() == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(w, w[1:]))
+    np.testing.assert_allclose(zipf_weights(4, 0.0), np.full(4, 0.25))
+    with pytest.raises(ValueError):
+        zipf_weights(0, 1.0)
+
+
+def test_zoo_popularity_covers_registry_in_rank_order():
+    pop = zoo_popularity(alpha=1.2)
+    from repro.configs import list_archs
+    assert list(pop) == list(list_archs())
+    assert sum(pop.values()) == pytest.approx(1.0)
+    vals = list(pop.values())
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+
+
+def test_generator_rejects_nonpositive_rate():
+    with pytest.raises(ValueError):
+        OpenLoopTraffic(["m"], rate=0.0)
+
+
+# ------------------------------------------------------------ spec grammar --
+def test_traffic_spec_parse_roundtrip_and_defaults():
+    spec = TrafficSpec.parse("rate=500,zipf=1.3,slo_ms=25,seed=7")
+    assert (spec.rate, spec.zipf, spec.slo_ms, spec.seed) \
+        == (500.0, 1.3, 25.0, 7)
+    assert spec.requests == 200 and spec.max_batch == 8   # defaults ride
+    assert TrafficSpec.parse(str(spec)) == spec
+    assert TrafficSpec.parse("") == TrafficSpec()
+    assert TrafficSpec.parse(None) == TrafficSpec()
+    assert str(TrafficSpec()) == "default"
+    assert "requests" not in str(spec)                    # defaults omitted
+    assert TrafficSpec.parse(spec) is spec
+
+
+@pytest.mark.parametrize("bad", ["rate", "volume=3", "rate=0",
+                                 "slo_ms=-1", "rate=two"])
+def test_traffic_spec_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        TrafficSpec.parse(bad)
+
+
+# ------------------------------------------------------------------ clock --
+def test_virtual_clock_channel_accounting():
+    clk = VirtualClock()
+    clk.advance(0.5, "storage")
+    clk.advance(0.25, "compute")
+    clk.tick_to(1.0)                       # 0.25s of idle
+    clk.tick_to(0.5)                       # past: no-op
+    assert clk.now == pytest.approx(1.0)
+    assert clk.spent("storage") == pytest.approx(0.5)
+    assert clk.spent("idle") == pytest.approx(0.25)
+    assert sum(clk.channels.values()) == pytest.approx(clk.now)
+    with pytest.raises(ValueError):
+        clk.advance(-0.1, "storage")
+
+
+# -------------------------------------------------------------- formation --
+def _frontend(task, store, heads, *, policy="slo", max_batch=4,
+              storage="dram", cap=None):
+    server = WeightServer(store, cap or store.num_pages(),
+                          storage=StorageModel(storage))
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo")
+    return ServingFrontend(engine, max_batch=max_batch, policy=policy,
+                           compute_model=BatchComputeModel())
+
+
+def test_formation_closes_batches_at_max_batch():
+    task, store, heads = _scenario()
+    fe = _frontend(task, store, heads, max_batch=4)
+    docs = [task.sample(2, variant=0, seed=s)[0] for s in range(8)]
+    st = fe.run(_requests("word2vec-v0", docs, [0.0] * 8, slo=10.0))
+    assert st.batches == 2                       # 8 requests / max_batch 4
+    assert [len(b) for _, b in fe.dispatched] == [4, 4]
+    assert st.shed_requests == 0 and len(st.request_latencies) == 8
+    assert st.goodput == 1.0
+
+
+def test_forced_dispatch_merges_then_beats_deadline():
+    """A sub-max_batch queue is held open to merge a later arrival, but
+    the slack rule forces dispatch before the oldest deadline dies.
+    Pages are pre-warmed so the service estimate is exact (pure compute
+    model): dispatching at the last forced instant then lands the batch
+    exactly on the deadline, never past it."""
+    task, store, heads = _scenario()
+    fe = _frontend(task, store, heads, max_batch=4)
+    docs = [task.sample(2, variant=0, seed=s)[0] for s in range(2)]
+    server = fe.engine.server
+    rows = np.unique(np.concatenate([d.reshape(-1) for d in docs]))
+    for p in server.embedding_rows_pages("word2vec-v0", "embedding", rows):
+        server.pool.access("word2vec-v0", p)
+    st = fe.run(_requests("word2vec-v0", docs, [0.0, 0.004], slo=0.05))
+    assert st.batches == 1                       # merged into ONE batch
+    assert len(fe.dispatched[0][1]) == 2
+    assert st.slo_misses == 0                    # ... and still on time
+    assert st.queue_latencies[0] > 0.0           # r0 actually waited
+
+
+def test_shedding_drops_dead_on_arrival_requests():
+    task, store, heads = _scenario()
+    fe = _frontend(task, store, heads, storage="hdd",
+                   cap=max(2, store.num_pages() // 2))
+    docs, _ = task.sample(2, variant=0, seed=0)
+    # an hdd group fetch costs ~10ms; a 1µs SLO is unservable
+    st = fe.run(_requests("word2vec-v0", [docs], [0.0], slo=1e-6))
+    assert st.shed_requests == 1
+    assert st.request_latencies == [] and st.batches == 0
+    assert st.offered_requests == 1 and st.goodput == 0.0
+
+
+def test_naive_policy_dispatches_per_arrival():
+    task, store, heads = _scenario()
+    fe = _frontend(task, store, heads, policy="naive", max_batch=4)
+    docs = [task.sample(2, variant=0, seed=s)[0] for s in range(6)]
+    st = fe.run(_requests("word2vec-v0", docs, [0.0] * 6, slo=10.0))
+    assert st.batches == 6                       # no formation, no merge
+    assert all(len(b) == 1 for _, b in fe.dispatched)
+    assert st.shed_requests == 0                 # ... and no shedding
+
+
+def test_frontend_rejects_bad_policy_and_batch():
+    task, store, heads = _scenario()
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"))
+    engine = EmbeddingServingEngine(server, heads)
+    with pytest.raises(ValueError):
+        ServingFrontend(engine, policy="greedy")
+    with pytest.raises(ValueError):
+        ServingFrontend(engine, max_batch=0)
+
+
+# ------------------------------------------------------------ stats guard --
+def test_percentiles_raise_on_empty_latency_lists():
+    st = ServeStats()
+    with pytest.raises(ValueError, match="empty latency list"):
+        st.percentile(50)
+    with pytest.raises(ValueError, match="empty request-latency list"):
+        st.request_percentile(99)
+    assert st.goodput == 0.0                     # guard, not a raise
+
+
+# ----------------------------------------------------------------- λ feed --
+def test_prefetcher_plan_tracks_attached_rates():
+    """The speculative tier follows the *observed* rate feed: when the
+    Zipf head shifts, the plan re-targets immediately instead of
+    waiting for pool access counts to catch up."""
+    _, store, _ = _scenario()
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"))
+    pf = Prefetcher(server, hot_models=1, max_pages_per_step=4,
+                    lookahead=0)
+    rates = {"word2vec-v2": 5.0, "word2vec-v0": 1.0}
+    pf.attach_rates(lambda: dict(rates))
+    plan = pf.plan()
+    assert plan and all(m == "word2vec-v2" for m, _ in plan)
+    rates = {"word2vec-v2": 1.0, "word2vec-v0": 5.0}      # the shift
+    plan = pf.plan()
+    assert plan and all(m == "word2vec-v0" for m, _ in plan)
+    rates = {}                                   # empty feed: pool fallback
+    server.pool.access("word2vec-v1", store.model_pages("word2vec-v1")[0])
+    assert pf.plan()
+
+
+def test_frontend_feeds_observed_rates_to_prefetcher():
+    """End-to-end λ feed: the frontend auto-attaches its arrival-rate
+    EMA, and after the traffic mix shifts Zipf head the feed's hottest
+    model shifts with it."""
+    task, store, heads = _scenario()
+    server = WeightServer(store, max(2, store.num_pages() // 2),
+                          storage=StorageModel("dram"))
+    pf = Prefetcher(server, hot_models=1, lookahead=0)
+    engine = EmbeddingServingEngine(server, heads, scheduler="fifo",
+                                    prefetcher=pf, overlap=True)
+    fe = ServingFrontend(engine, max_batch=4,
+                         compute_model=BatchComputeModel())
+    assert pf._rate_fn is not None               # auto-attached
+    models = [f"word2vec-v{v}" for v in range(3)]
+    payload = _doc_payload(task)
+    fe.run(OpenLoopTraffic(models, rate=300.0, zipf_alpha=3.0, slo_s=1.0,
+                           seed=3, payload_fn=payload).generate(80))
+    r1 = fe.arrival_rates()
+    assert max(r1, key=r1.get) == "word2vec-v0"
+    # shift the Zipf head to v2 and continue on the same clock
+    gen2 = OpenLoopTraffic(list(reversed(models)), rate=300.0,
+                           zipf_alpha=3.0, slo_s=1.0, seed=4,
+                           payload_fn=payload)
+    t0 = fe.clock.now + 1e-3
+    fe.run([dataclasses.replace(r, arrival_t=r.arrival_t + t0,
+                                deadline=r.deadline + t0)
+            for r in gen2.generate(80)])
+    r2 = fe.arrival_rates()
+    assert max(r2, key=r2.get) == "word2vec-v2"
+    assert r2["word2vec-v2"] > r1.get("word2vec-v2", 0.0)
+
+
+# ------------------------------------------------- acceptance bit-equality --
+@pytest.mark.parametrize("shards", [1, 2])
+def test_frontend_logits_match_direct_submission_embedding(shards):
+    """Frontend-served logits are bit-identical to replaying the same
+    batches through direct engine submission — formation and admission
+    reorder work, they never touch the math (1 and 2 shards)."""
+    task, store, heads = _scenario(vocab=512, num_models=4)
+    cap = max(4, store.num_pages() - 2)
+
+    def make():
+        if shards == 1:
+            server = WeightServer(store, cap,
+                                  storage=StorageModel("dram"))
+        else:
+            server = ShardedWeightServer(store, cap,
+                                         storage=StorageModel("dram"),
+                                         shards=2, placement="sharers")
+        return EmbeddingServingEngine(server, heads, scheduler="fifo")
+
+    models = [f"word2vec-v{v}" for v in range(4)]
+    gen = OpenLoopTraffic(models, rate=400.0, zipf_alpha=1.1, slo_s=0.5,
+                          seed=5, payload_fn=_doc_payload(task))
+    fe = ServingFrontend(make(), max_batch=4,
+                         compute_model=BatchComputeModel())
+    st = fe.run(gen.generate(40))
+    assert st.shed_requests == 0 and len(fe.results) == 40
+
+    engine2 = make()
+    for model, kept in fe.dispatched:
+        engine2.submit(model, np.concatenate(
+            [np.asarray(r.payload) for r in kept], axis=0))
+        engine2.run(max_batches=1)
+        out = np.asarray(engine2.last_logits)
+        row = 0
+        for r in kept:
+            n = np.asarray(r.payload).shape[0]
+            np.testing.assert_array_equal(fe.results[r.rid],
+                                          out[row: row + n])
+            row += n
+
+
+class _TinyLMAPI:
+    """Minimal prefill/decode API over {emb, head} params (mirrors
+    tests/test_transfer.py): deterministic, model-switch faults real."""
+
+    def prefill(self, params, batch, max_len):
+        import jax.numpy as jnp
+        tokens = jnp.asarray(batch["tokens"])
+        x = jnp.asarray(params["emb"])[tokens].mean(axis=1)
+        logits = x @ jnp.asarray(params["head"])
+        return logits[:, None, :], {"x": x}
+
+    def decode(self, params, cache, tokens):
+        import jax.numpy as jnp
+        x = cache["x"] * 0.5 + jnp.asarray(params["emb"])[
+            jnp.asarray(tokens)[:, 0]]
+        logits = x @ jnp.asarray(params["head"])
+        return logits[:, None, :], {"x": x}
+
+
+def _lm_setup(seed=0):
+    rng = np.random.default_rng(seed)
+    vocab, d = 96, 32
+    emb = (rng.standard_normal((vocab, d)) * 0.1).astype(np.float32)
+    head = (rng.standard_normal((d, vocab)) * 0.1).astype(np.float32)
+    store = ModelStore(StoreConfig(
+        dedup=DedupConfig(block_shape=(16, 16),
+                          lsh=LSHConfig(num_bands=8, rows_per_band=2,
+                                        r=8.0, collision_threshold=6),
+                          validate=False),
+        blocks_per_page=4))
+    names = []
+    for v in range(3):
+        name = f"lm-v{v}"
+        names.append(name)
+        emb_v = emb.copy()
+        lo = v * vocab // 3                  # private stripe per variant
+        emb_v[lo:lo + vocab // 3] += (
+            rng.standard_normal((vocab // 3, d)) * 0.3).astype(np.float32)
+        store.register(name, {"emb": emb_v, "head": head})
+    api = _TinyLMAPI()
+    return store, names, {n: api for n in names}, \
+        {n: {"rebuild": lambda ts: dict(ts)} for n in names}
+
+
+def test_frontend_tokens_match_direct_submission_lm():
+    store, names, apis, templates = _lm_setup()
+    cap = max(2, store.num_pages() // 2)     # model switches must refault
+
+    def make():
+        server = WeightServer(store, cap, storage=StorageModel("dram"),
+                              backend="device")
+        return LMServingEngine(server, apis, templates, scheduler="fifo",
+                               overlap=True)
+
+    def payload(model, rid, rng):
+        return rng.integers(1, 96, size=(1, 5)).astype(np.int32), 3
+
+    gen = OpenLoopTraffic(names, rate=300.0, zipf_alpha=1.1, slo_s=1.0,
+                          seed=9, payload_fn=payload)
+    fe = ServingFrontend(make(), max_batch=3,
+                         compute_model=BatchComputeModel())
+    st = fe.run(gen.generate(18))
+    assert st.shed_requests == 0 and len(fe.results) == 18
+
+    engine2 = make()
+    for model, kept in fe.dispatched:
+        engine2.submit(model, np.concatenate(
+            [np.asarray(r.payload[0]) for r in kept], axis=0), steps=3)
+        engine2.run(max_batches=1)
+        out = np.asarray(engine2.last_tokens)
+        row = 0
+        for r in kept:
+            n = np.asarray(r.payload[0]).shape[0]
+            np.testing.assert_array_equal(fe.results[r.rid],
+                                          out[row: row + n])
+            row += n
+
+
+def test_lm_merge_rejects_mixed_decode_steps():
+    store, names, apis, templates = _lm_setup()
+    server = WeightServer(store, store.num_pages(),
+                          storage=StorageModel("dram"), backend="device")
+    engine = LMServingEngine(server, apis, templates, scheduler="fifo")
+    fe = ServingFrontend(engine, max_batch=4)
+    prompts = np.ones((1, 4), np.int32)
+    reqs = [Request(0, names[0], (prompts, 3), 0.0, 1.0),
+            Request(1, names[0], (prompts, 4), 0.0, 1.0)]
+    with pytest.raises(ValueError, match="mixed decode steps"):
+        fe._merge(reqs)
