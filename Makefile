@@ -1,5 +1,5 @@
 .PHONY: verify test-fast lint sanitize bench bench-smoke bench-faults \
-	chaos example
+	chaos trace-smoke example
 
 # Tier-1 verification (ROADMAP.md)
 verify:
@@ -40,6 +40,15 @@ bench-smoke:
 # -> BENCH_faults.json (DESIGN.md §8)
 bench-faults:
 	PYTHONPATH=src python -m benchmarks.bench_faults --smoke
+
+# Traffic bench with the clock-bound tracer on (BENCH_traffic.json is
+# byte-identical either way) -> BENCH_traffic_trace.json, then the
+# critical-path report, which exits non-zero if any exact identity
+# (queue+service==latency, span channels == clock ledger) fails
+# (DESIGN.md §10)
+trace-smoke:
+	PYTHONPATH=src python -m benchmarks.bench_traffic --smoke --trace
+	python scripts/trace_report.py BENCH_traffic_trace.json
 
 example:
 	PYTHONPATH=src python examples/multi_model_serving.py

@@ -28,6 +28,7 @@ repo root so CI tracks the goodput/latency trajectory PR over PR.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 from typing import List
@@ -42,6 +43,8 @@ from repro.serving.traffic import OpenLoopTraffic
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_traffic.json")
+TRACE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_traffic_trace.json")
 
 #: offered load rungs as fractions of the measured naive capacity µ:
 #: comfortably under, near saturation, and well past it
@@ -68,16 +71,33 @@ def _engine(store, heads, cap):
 
 
 def _serve(store, heads, cap, task, models, rate, slo_s, n_requests,
-           policy, max_batch, docs_per_req):
+           policy, max_batch, docs_per_req, trace_path=None):
     """One policy pass over a freshly generated (identical: same seed)
-    arrival stream against a fresh server; returns the metrics dict."""
+    arrival stream against a fresh server; returns the metrics dict.
+    ``trace_path``: record this pass with a clock-bound tracer and
+    write the Chrome-trace there (the bench numbers are unchanged —
+    tracing never touches the virtual clock's arithmetic)."""
     gen = OpenLoopTraffic(models, rate=rate, zipf_alpha=ZIPF,
                           slo_s=slo_s, seed=SEED,
                           payload_fn=_payload_fn(task, docs_per_req))
     engine = _engine(store, heads, cap)
     fe = ServingFrontend(engine, max_batch=max_batch, policy=policy,
                          compute_model=COMPUTE, capture=False)
-    st = fe.run(gen.generate(n_requests))
+    tracer = None
+    activate = contextlib.nullcontext()
+    if trace_path:
+        from repro.obs import Tracer, use_tracer
+        tracer = Tracer(clock=fe.clock)
+        activate = use_tracer(tracer)
+    with activate:
+        st = fe.run(gen.generate(n_requests))
+    # rung teardown: the channel ledger must account for every virtual
+    # second this pass booked (frontend.run also asserts; cheap here)
+    fe.clock.assert_conserved()
+    if tracer is not None:
+        from repro.obs import write_trace
+        tracer.assert_matches_clock(fe.clock)
+        write_trace(trace_path, tracer, clock=fe.clock)
     lat = np.asarray(st.request_latencies, dtype=np.float64)
     served = len(lat)
     return {
@@ -97,7 +117,7 @@ def _serve(store, heads, cap, task, models, rate, slo_s, n_requests,
     }
 
 
-def run(smoke: bool = False) -> List[Row]:
+def run(smoke: bool = False, trace: bool = False) -> List[Row]:
     if smoke:
         scenario = dict(num_models=4, vocab=512, d=32,
                         block_shape=(32, 32), blocks_per_page=4)
@@ -130,9 +150,13 @@ def run(smoke: bool = False) -> List[Row]:
         rate = frac * mu
         entry = {"load_frac": frac, "rate_per_s": rate}
         for policy in ("slo", "naive"):
+            # --trace records the peak rung's slo pass (the run the
+            # regression claims are about) without touching the numbers
+            tp = TRACE_PATH if (trace and policy == "slo"
+                                and frac == LOAD_FRACS[-1]) else None
             entry[policy] = _serve(store, heads, cap, task, models, rate,
                                    slo_s, n_requests, policy, max_batch,
-                                   docs_per_req)
+                                   docs_per_req, trace_path=tp)
         configs.append(entry)
         s, n = entry["slo"], entry["naive"]
         rows.append((
@@ -172,8 +196,15 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small fast configuration for CI")
+    ap.add_argument("--trace", action="store_true",
+                    help="record the peak-rung slo pass with a "
+                         "clock-bound tracer and write "
+                         "BENCH_traffic_trace.json (Chrome-trace form; "
+                         "BENCH_traffic.json stays byte-identical)")
     args = ap.parse_args()
-    rows = run(smoke=args.smoke)
+    rows = run(smoke=args.smoke, trace=args.trace)
+    if args.trace:
+        print(f"# wrote {os.path.abspath(TRACE_PATH)}")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     with open(JSON_PATH) as f:

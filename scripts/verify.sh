@@ -26,8 +26,15 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # Open-loop traffic benchmark: SLO-driven frontend vs naive per-arrival
 # dispatch across a 3-rung load sweep on the virtual clock
 # -> BENCH_traffic.json (p99 + goodput claims at the peak rung).
+# --trace additionally records the peak-rung SLO pass with the
+# clock-bound tracer (BENCH_traffic.json is byte-identical either way)
+# -> BENCH_traffic_trace.json, and trace_report.py re-proves the exact
+# identities (queue+service==latency per request, per-channel span
+# seconds == the VirtualClock ledger) from the file alone, exiting
+# non-zero on any failure (DESIGN.md §10; `make trace-smoke` alone).
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m benchmarks.bench_traffic --smoke
+    python -m benchmarks.bench_traffic --smoke --trace
+python scripts/trace_report.py BENCH_traffic_trace.json
 # Bench regression guard: fresh BENCH_serving/BENCH_transfer p50s must
 # stay within tolerance of the baselines committed at HEAD (and the
 # grouped-transfer / device-vs-numpy / faults-recovery /

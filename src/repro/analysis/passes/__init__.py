@@ -5,6 +5,7 @@ from .frontend_clock import FrontendClockPass
 from .host_sync import HostSyncPass
 from .silent_except import SilentExceptPass
 from .slab_writes import SlabWritePass
+from .span_discipline import SpanDisciplinePass
 from .unused import UnusedBindingPass
 from .wallclock import WallClockPass
 
@@ -15,6 +16,7 @@ __all__ = [
     "HostSyncPass",
     "SilentExceptPass",
     "SlabWritePass",
+    "SpanDisciplinePass",
     "UnusedBindingPass",
     "WallClockPass",
     "ALL_PASSES",
@@ -26,6 +28,7 @@ ALL_PASSES = (
     HostSyncPass,
     ChannelChargePass,
     FrontendClockPass,
+    SpanDisciplinePass,
     WallClockPass,
     ApiDriftPass,
     UnusedBindingPass,

@@ -28,6 +28,8 @@ import math
 from collections import OrderedDict, defaultdict
 from typing import Callable, Dict, Hashable, Iterable, List, Optional, Set
 
+from ..obs import get_tracer
+
 PageId = Hashable
 ModelId = Hashable
 
@@ -240,8 +242,12 @@ class BufferPool:
                 f"{self.cfg.capacity_pages}")
         self._pinned = set(pages)
         try:
-            with self.deferred_loads():
-                return [self.access(model, p) for p in pages]
+            with get_tracer().span("pool_group", kind="pool", model=model,
+                                   pages=len(pages)) as sp:
+                with self.deferred_loads():
+                    hits = [self.access(model, p) for p in pages]
+                sp.set(hits=sum(hits))
+                return hits
         finally:
             self._pinned = set()
 

@@ -25,6 +25,7 @@ from .lsh import LSHConfig
 from .pagepack import PackResult, check_coverage, pack
 # storage is a lower layer (numpy-only, never imports core):
 # the manifest version and dtype resolution live there once
+from ..obs import get_tracer
 from ..storage.backend import MANIFEST_VERSION, resolve_dtype
 from ..storage.faults import (CorruptPageError, FatalStorageError,
                               RecoveryStats, RetryPolicy, fault_layer,
@@ -189,6 +190,7 @@ class ModelStore:
         ``fault_stats`` whether the call recovers OR exhausts its budget
         (a failed call's retries/backoff are real recovery work — the
         FatalStorageError carries them as ``.outcome``)."""
+        tr = get_tracer()
         try:
             result, outcome = self.retry_policy.run(fn, describe=describe)
         except FatalStorageError as exc:
@@ -196,9 +198,17 @@ class ModelStore:
             if oc is not None:
                 self.fault_stats.retries += oc.retries
                 self.fault_stats.backoff_seconds += oc.backoff_seconds
+                if tr.enabled:
+                    tr.event("retry", kind="storage", op=describe,
+                             retries=oc.retries, fatal=True,
+                             backoff_s=oc.backoff_seconds)
             raise
         self.fault_stats.retries += outcome.retries
         self.fault_stats.backoff_seconds += outcome.backoff_seconds
+        if tr.enabled and outcome.retries:
+            tr.event("retry", kind="storage", op=describe,
+                     retries=outcome.retries, fatal=False,
+                     backoff_s=outcome.backoff_seconds)
         return result
 
     def _backend_get(self, hashes: List[str]) -> Dict[str, np.ndarray]:
@@ -254,10 +264,14 @@ class ModelStore:
                       if p in self._unfetched)
         if not want:
             return 0
-        got = self._backend_get([self._page_hash[p] for p in want])
-        if self._verification_enabled():
-            self._verify_and_refetch(want, got)
-        self._drain_injected_latency()
+        with get_tracer().span("get_pages", kind="storage",
+                               backend=type(self._backend).__name__,
+                               pages=len(want)) as sp:
+            got = self._backend_get([self._page_hash[p] for p in want])
+            if self._verification_enabled():
+                self._verify_and_refetch(want, got)
+            self._drain_injected_latency()
+            sp.set(verified=self._verification_enabled())
         for pid in want:
             page = np.asarray(got[self._page_hash[pid]])
             if page.dtype.kind == "V":

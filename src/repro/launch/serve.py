@@ -21,6 +21,8 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
+import dataclasses
 
 import numpy as np
 
@@ -59,7 +61,53 @@ def build_store(task: SyntheticTextTask, num_models: int,
     return store, heads
 
 
-def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
+# Audit map: every ServeStats field -> (report tag, key on that line).
+# tests/test_obs.py pins this map against dataclasses.fields(ServeStats),
+# so growing a counter without deciding its report line fails CI, and no
+# field is ever printed from two lines at once.
+REPORT_FIELDS = {
+    "requests": ("serve", "requests="),
+    "batches": ("serve", "batches="),
+    "fetch_seconds": ("serve", "fetch="),
+    "compute_seconds": ("serve", "compute="),
+    "prefetch_seconds": ("serve", "prefetch="),
+    "pages_fetched": ("serve", "pages="),
+    "timeline_seconds": ("serve", "makespan="),
+    "overlapped": ("serve", "overlap="),
+    "latencies": ("serve", "p50=/p99="),
+    "fetch_latencies": ("serve", "fetch_p99="),
+    "device_batches": ("device", "device_batches="),
+    "dense_fallbacks": ("device", "dense_fallbacks="),
+    "transfer_seconds": ("transfer", "moved="),
+    "transfer_pages": ("transfer", "pages="),
+    "transfer_groups": ("transfer", "ops="),
+    "transfer_bytes": ("transfer", "bytes="),
+    "transfer_overlapped_bytes": ("transfer", "overlap="),
+    "group_sizes": ("transfer", "mean_group="),
+    "prefetch_pages": ("prefetch", "pages="),
+    "borrow_pages": ("shards", "borrows="),
+    "borrow_seconds": ("shards", "borrow="),
+    "borrow_mirror_hits": ("shards", "mirror="),
+    "borrow_store_faults": ("shards", "owner_faults="),
+    "borrow_coalesced": ("shards", "coalesced="),
+    "shard_batches": ("shards", "batches_per_shard="),
+    "retries": ("faults", "retries="),
+    "corrupt_detected": ("faults", "corrupt="),
+    "refetch_pages": ("faults", "refetch="),
+    "failovers": ("faults", "failovers="),
+    "degraded_batches": ("faults", "degraded="),
+    "fault_backoff_seconds": ("faults", "backoff="),
+    "offered_requests": ("traffic", "offered="),
+    "shed_requests": ("traffic", "shed="),
+    "slo_misses": ("traffic", "slo_miss="),
+    "queue_latencies": ("traffic", "queue_p50="),
+    "service_latencies": ("traffic", "service_p50="),
+    "request_latencies": ("traffic", "served=/p50=/p99="),
+}
+
+
+def _print_stats(args, stats: ServeStats, server: WeightServer,
+                 engine=None) -> None:
     if args.backend == "device":
         print(f"[device] slab={server.device_pool.capacity} pages "
               f"loads={server.device_pool.loads} "
@@ -70,9 +118,17 @@ def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
         print(f"[transfer] mode={args.transfer} "
               f"pages={stats.transfer_pages} ops={stats.transfer_groups} "
               f"mean_group={stats.mean_group_size:.1f} "
+              f"bytes={stats.transfer_bytes} "
               f"moved={stats.transfer_seconds*1e3:.2f}ms "
               f"overlap={stats.overlap_fraction:.2f} "
               f"hbm_bw={hbm.bw/1e6:.0f}MB/s hbm_seek={hbm.seek*1e6:.0f}us")
+    pf = getattr(engine, "prefetcher", None)
+    if pf is not None:
+        print(f"[prefetch] pages={stats.prefetch_pages} "
+              f"time={pf.stats.seconds*1e3:.2f}ms "
+              f"issued={pf.stats.issued} declined={pf.stats.declined} "
+              f"lookahead_issued={pf.stats.lookahead_issued} "
+              f"lookahead_hits={pf.stats.lookahead_hits}")
     if getattr(args, "shards", 1) > 1:
         s = server.stats                 # borrow/routing live on the server
         print(f"[shards] n={args.shards} placement={args.placement} "
@@ -98,12 +154,19 @@ def _print_stats(args, stats: ServeStats, server: WeightServer) -> None:
     lat = (f"p50={stats.percentile(50)*1e3:.2f}ms "
            f"p99={stats.percentile(99)*1e3:.2f}ms") if stats.latencies \
         else "p50=n/a p99=n/a"
+    fl = stats.fetch_latencies
+    fetch_p99 = (f"fetch_p99="
+                 f"{float(np.percentile(fl, 99))*1e3:.2f}ms") if fl \
+        else "fetch_p99=n/a"
+    # overlap= reports what the engine DID (stats.overlapped), not what
+    # the CLI asked for — the two differ when a flag implies overlap
     print(f"[serve] batches={stats.batches} requests={stats.requests} "
-          f"scheduler={args.scheduler} overlap={args.overlap} "
+          f"scheduler={args.scheduler} overlap={stats.overlapped} "
           f"backend={args.backend} "
           f"hit_ratio={server.pool.hit_ratio:.3f} "
-          f"fetch={stats.fetch_seconds*1e3:.1f}ms "
-          f"prefetch={stats.prefetch_seconds*1e3:.1f}ms "
+          f"pages={stats.pages_fetched} "
+          f"fetch={stats.fetch_seconds*1e3:.1f}ms " + fetch_p99 +
+          f" prefetch={stats.prefetch_seconds*1e3:.1f}ms "
           f"compute={stats.compute_seconds*1e3:.1f}ms "
           f"makespan={stats.makespan_seconds*1e3:.1f}ms " + lat)
 
@@ -116,13 +179,75 @@ def _print_traffic(spec: TrafficSpec, fe: ServingFrontend,
     lat = (f"p50={stats.request_percentile(50)*1e3:.2f}ms "
            f"p99={stats.request_percentile(99)*1e3:.2f}ms") if served \
         else "p50=n/a p99=n/a"
+    if served:
+        q50 = float(np.percentile(stats.queue_latencies, 50)) * 1e3
+        s50 = float(np.percentile(stats.service_latencies, 50)) * 1e3
+        qs = f"queue_p50={q50:.2f}ms service_p50={s50:.2f}ms "
+    else:
+        qs = "queue_p50=n/a service_p50=n/a "
     print(f"[traffic] policy={fe.policy} rate={spec.rate:g}/s "
           f"zipf={spec.zipf:g} slo={spec.slo_ms:g}ms seed={spec.seed} "
           f"offered={stats.offered_requests} served={served} "
           f"shed={stats.shed_requests} slo_miss={stats.slo_misses} "
-          f"goodput={stats.goodput:.3f} " + lat +
+          f"goodput={stats.goodput:.3f} " + qs + lat +
           f" clock={fe.clock.now*1e3:.1f}ms "
           f"idle={fe.clock.spent('idle')*1e3:.1f}ms")
+
+
+def _make_tracer(args, clock=None):
+    """(tracer, activation-CM) for --trace; (None, no-op CM) otherwise.
+    Binding the frontend's virtual clock lets the exporter carry the
+    per-channel conservation proof in ``otherData``."""
+    if not getattr(args, "trace", None):
+        return None, contextlib.nullcontext()
+    from ..obs import Tracer, use_tracer
+    tr = Tracer(clock=clock)
+    return tr, use_tracer(tr)
+
+
+def _build_registry(stats: ServeStats, server, engine, clock):
+    """One MetricsRegistry over every live stats surface of this run:
+    engine counters (``serve.``), the server's access-path counters
+    (``server.`` — a distinct ServeStats when the engine wraps a
+    WeightServer), recovery, prefetch, and the virtual clock."""
+    from ..obs import MetricsRegistry
+    reg = MetricsRegistry()
+    stats.register_into(reg, namespace="serve")
+    srv_stats = getattr(server, "stats", None)
+    if srv_stats is not None and srv_stats is not stats:
+        srv_stats.register_into(reg, namespace="server")
+    fault_stats = getattr(getattr(server, "store", None),
+                          "fault_stats", None)
+    if fault_stats is not None:
+        fault_stats.register_into(reg, namespace="recovery")
+    pf = getattr(engine, "prefetcher", None)
+    if pf is not None:
+        reg.register_object(
+            "prefetch", pf.stats,
+            [f.name for f in dataclasses.fields(pf.stats)])
+    if clock is not None:
+        reg.gauge("clock.now", lambda c=clock: c.now)
+        reg.gauge("clock.channels", lambda c=clock: dict(c.channels))
+    return reg
+
+
+def _export_obs(args, tracer, stats: ServeStats, server, engine,
+                clock=None) -> None:
+    """--trace / --report-json outputs, after the run completed."""
+    if tracer is not None:
+        from ..obs import write_trace
+        if clock is not None:
+            tracer.assert_matches_clock(clock)   # conservation proof
+        write_trace(args.trace, tracer, clock=clock)
+        print(f"[trace] spans={len(tracer.spans())} "
+              f"dropped={tracer.dropped} -> {args.trace}")
+    if getattr(args, "report_json", None):
+        import json
+        reg = _build_registry(stats, server, engine, clock)
+        snap = reg.snapshot()
+        with open(args.report_json, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[report-json] metrics={len(snap)} -> {args.report_json}")
 
 
 def _open_db(args, store: ModelStore):
@@ -210,7 +335,10 @@ def serve_embedding(args) -> tuple:
                               slo_s=spec.slo_ms * 1e-3, seed=spec.seed,
                               payload_fn=_payload)
         fe = ServingFrontend(engine, max_batch=spec.max_batch)
-        stats: ServeStats = fe.run(gen.generate(spec.requests))
+        clock = fe.clock
+        tracer, activate = _make_tracer(args, clock)
+        with activate:
+            stats: ServeStats = fe.run(gen.generate(spec.requests))
         _print_traffic(spec, fe, stats)
     else:
         rng = np.random.default_rng(args.seed + 9)
@@ -220,8 +348,12 @@ def serve_embedding(args) -> tuple:
             docs, labels = task.sample(args.batch_size, variant=v,
                                        seed=args.seed + 100 + b)
             engine.submit(name, docs)
-        stats = engine.run()
-    _print_stats(args, stats, server)
+        clock = None
+        tracer, activate = _make_tracer(args)
+        with activate:
+            stats = engine.run()
+    _print_stats(args, stats, server, engine)
+    _export_obs(args, tracer, stats, server, engine, clock)
     return stats, server
 
 
@@ -301,15 +433,22 @@ def serve_lm(args) -> tuple:
                               slo_s=spec.slo_ms * 1e-3, seed=spec.seed,
                               payload_fn=_payload)
         fe = ServingFrontend(engine, max_batch=spec.max_batch)
-        stats: ServeStats = fe.run(gen.generate(spec.requests))
+        clock = fe.clock
+        tracer, activate = _make_tracer(args, clock)
+        with activate:
+            stats: ServeStats = fe.run(gen.generate(spec.requests))
         _print_traffic(spec, fe, stats)
     else:
         for b in range(args.batches):
             name = names[int(rng.integers(0, num_models))]
             prompts = rng.integers(1, 64, size=(2, 8)).astype(np.int32)
             engine.submit(name, prompts, steps=args.lm_steps)
-        stats = engine.run()
-    _print_stats(args, stats, server)
+        clock = None
+        tracer, activate = _make_tracer(args)
+        with activate:
+            stats = engine.run()
+    _print_stats(args, stats, server, engine)
+    _export_obs(args, tracer, stats, server, engine, clock)
     return stats, server
 
 
@@ -374,6 +513,19 @@ def main(argv=None):
     ap.add_argument("--prefetch", action="store_true",
                     help="lambda-driven page prefetching (implies --overlap:"
                          " speculation only pays off hidden under compute)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a request-path trace and write it here: "
+                         "'.json' = Chrome-trace/Perfetto (load in "
+                         "chrome://tracing or ui.perfetto.dev), '.jsonl' "
+                         "= one flat span dict per line (feed to "
+                         "scripts/trace_report.py).  Timestamps are "
+                         "virtual-clock microseconds; with --traffic the "
+                         "per-channel span time is asserted equal to the "
+                         "clock's channel ledger before writing")
+    ap.add_argument("--report-json", default=None, metavar="PATH",
+                    help="dump a MetricsRegistry snapshot of every stats "
+                         "surface (serve/server/recovery/prefetch/clock "
+                         "namespaces) as JSON")
     ap.add_argument("--lm-steps", type=int, default=4,
                     help="decode steps per LM batch (--engine lm)")
     ap.add_argument("--vocab", type=int, default=2048)

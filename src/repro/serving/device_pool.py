@@ -49,6 +49,7 @@ import numpy as np
 from ..core.blocks import BlockGrid
 from ..core.store import ModelStore, VirtualTensor
 from ..kernels import ops
+from ..obs import get_tracer
 from .transfer import TransferEngine
 
 __all__ = ["DevicePagePool"]
@@ -171,23 +172,27 @@ class DevicePagePool:
         pages in one backend round trip first."""
         if pid in self.slot_of:
             return
-        # fetch BEFORE taking a slot: a storage fault mid-fetch must not
-        # leak a free slot (exception safety under fault injection)
-        page = self.store.page_array(pid, dtype=np.float32)
-        slot = self._free.pop()
-        # time only the host->HBM leg: page_array may have faulted the
-        # storage backend, which must never leak into the fitted channel
-        t0 = time.perf_counter()
-        if self.mode() != "host":
-            self.slab = jax.lax.dynamic_update_slice(
-                self.slab, self._put(jnp.asarray(page[None], self.dtype)),
-                (slot, 0, 0, 0))
-        self.host_slab[slot] = page
-        self.slot_of[pid] = slot
-        self._page_to_slot[pid] = slot
-        self.generation += 1
-        self.loads += 1
-        self.transfer.record_single(time.perf_counter() - t0)
+        with get_tracer().span("page_load", kind="transfer",
+                               pid=int(pid), pages=1):
+            # fetch BEFORE taking a slot: a storage fault mid-fetch must
+            # not leak a free slot (exception safety under fault injection)
+            page = self.store.page_array(pid, dtype=np.float32)
+            slot = self._free.pop()
+            # time only the host->HBM leg: page_array may have faulted the
+            # storage backend, which must never leak into the fitted
+            # channel
+            t0 = time.perf_counter()
+            if self.mode() != "host":
+                self.slab = jax.lax.dynamic_update_slice(
+                    self.slab,
+                    self._put(jnp.asarray(page[None], self.dtype)),
+                    (slot, 0, 0, 0))
+            self.host_slab[slot] = page
+            self.slot_of[pid] = slot
+            self._page_to_slot[pid] = slot
+            self.generation += 1
+            self.loads += 1
+            self.transfer.record_single(time.perf_counter() - t0)
 
     def load_group(self, pids) -> None:
         """BufferPool ``on_load_group``: transfer a whole group of pages
@@ -317,25 +322,29 @@ class DevicePagePool:
         mode = self.mode()
         l = self.blocks_per_page
         if mode == "host":
-            slab = self.host_slab
-            flat_rows = slab.reshape(slab.shape[0] * l * bh, bw)
-            rb, off = rows // bh, rows % bh
-            out = flat_rows[bmap2d[rb] * bh + off[:, None]]      # [n, gw, bw]
-            return out.reshape(n, gw * bw)[:, :width]
+            with get_tracer().span("kernel", kind="kernel",
+                                   op="gather_rows", mode=mode, rows=n):
+                slab = self.host_slab
+                flat_rows = slab.reshape(slab.shape[0] * l * bh, bw)
+                rb, off = rows // bh, rows % bh
+                out = flat_rows[bmap2d[rb] * bh + off[:, None]]  # [n,gw,bw]
+                return out.reshape(n, gw * bw)[:, :width]
         # Pad with a *requested* row, not row 0: under partial residency
         # row 0's block may be absent and must never be touched.
         ids = np.full(_pad_pow2(max(n, 1)), rows[0] if n else 0, np.int32)
         ids[:n] = rows
-        if mode == "pallas":
-            pool = self.slab.reshape(self.slab.shape[0] * l, bh, bw)
-            out = ops.dedup_embedding_striped(
-                self._put(jnp.asarray(ids)), pool,
-                self._put(jnp.asarray(bmap2d)), width=width)
-        else:
-            out = _gather_rows_xla(self.slab,
-                                   self._put(jnp.asarray(bmap2d)),
-                                   self._put(jnp.asarray(ids)),
-                                   bh=bh, width=width)
+        with get_tracer().span("kernel", kind="kernel", op="gather_rows",
+                               mode=mode, rows=n):
+            if mode == "pallas":
+                pool = self.slab.reshape(self.slab.shape[0] * l, bh, bw)
+                out = ops.dedup_embedding_striped(
+                    self._put(jnp.asarray(ids)), pool,
+                    self._put(jnp.asarray(bmap2d)), width=width)
+            else:
+                out = _gather_rows_xla(self.slab,
+                                       self._put(jnp.asarray(bmap2d)),
+                                       self._put(jnp.asarray(ids)),
+                                       bh=bh, width=width)
         return out if pad else out[:n]
 
     def virtual_matmul(self, dev_map: np.ndarray, grid: BlockGrid, x):
@@ -366,21 +375,23 @@ class DevicePagePool:
                     acc += xp[..., k * bh:(k + 1) * bh] \
                         @ blocks[bmap2d[k, j]]
             return y[..., :N]
-        if mode == "pallas":
-            pad = gh * bh - x.shape[-1]
-            if pad:
-                widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
-                x = jnp.pad(x, widths)
-            bm = 128 if jax.default_backend() == "tpu" else 8
-            pool = self.slab.reshape(self.slab.shape[0] * l, bh, bw)
-            y = ops.dedup_matmul(self._put(x), pool,
-                                 self._put(jnp.asarray(bmap2d)), bm=bm)
-            return y[..., :N]
-        if x.shape[-1] != gh * bh:      # _matmul_xla slices x to K itself
-            assert x.shape[-1] == K, (x.shape, K)
-        return _matmul_xla(self.slab,
-                           self._put(jnp.asarray(bmap2d)), self._put(x),
-                           grid=grid)
+        with get_tracer().span("kernel", kind="kernel",
+                               op="virtual_matmul", mode=mode):
+            if mode == "pallas":
+                pad = gh * bh - x.shape[-1]
+                if pad:
+                    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+                    x = jnp.pad(x, widths)
+                bm = 128 if jax.default_backend() == "tpu" else 8
+                pool = self.slab.reshape(self.slab.shape[0] * l, bh, bw)
+                y = ops.dedup_matmul(self._put(x), pool,
+                                     self._put(jnp.asarray(bmap2d)), bm=bm)
+                return y[..., :N]
+            if x.shape[-1] != gh * bh:  # _matmul_xla slices x to K itself
+                assert x.shape[-1] == K, (x.shape, K)
+            return _matmul_xla(self.slab,
+                               self._put(jnp.asarray(bmap2d)),
+                               self._put(x), grid=grid)
 
     def unblock(self, dev_map: np.ndarray, grid: BlockGrid):
         """Full tensor reassembled from resident slab blocks (the LM
@@ -388,10 +399,13 @@ class DevicePagePool:
         otherwise)."""
         l = self.blocks_per_page
         bh, bw = self.block_shape
-        if self.mode() == "host":
-            from ..core.blocks import unblock_tensor
-            slab = self.host_slab
-            blocks = slab.reshape(slab.shape[0] * l, bh, bw)[dev_map]
-            return unblock_tensor(blocks, grid)
-        return _unblock_xla(self.slab,
-                            self._put(jnp.asarray(dev_map)), grid=grid)
+        mode = self.mode()
+        with get_tracer().span("kernel", kind="kernel", op="unblock",
+                               mode=mode):
+            if mode == "host":
+                from ..core.blocks import unblock_tensor
+                slab = self.host_slab
+                blocks = slab.reshape(slab.shape[0] * l, bh, bw)[dev_map]
+                return unblock_tensor(blocks, grid)
+            return _unblock_xla(self.slab,
+                                self._put(jnp.asarray(dev_map)), grid=grid)

@@ -41,6 +41,7 @@ import numpy as np
 
 from ..core.bufferpool import BufferPool
 from ..core.store import ModelStore
+from ..obs import get_tracer
 from ..storage.faults import StorageFaultError
 from .scheduler import BatchScheduler, ScheduledBatch, make_scheduler
 
@@ -273,6 +274,15 @@ class ServeStats:
                 "stats.request_latencies for a default")
         return float(np.percentile(self.request_latencies, p))
 
+    def register_into(self, registry, namespace: str = "serve") -> None:
+        """Register every field as a live view in a
+        :class:`~repro.obs.metrics.MetricsRegistry` (numbers become
+        counters, lists histograms, dicts gauges).  Views read the
+        dataclass attributes directly, so the existing attribute API
+        stays the single source of truth."""
+        registry.register_object(
+            namespace, self, [f.name for f in dataclasses.fields(self)])
+
 
 # ------------------------------------------------------------- weight serve --
 class WeightServer:
@@ -445,11 +455,16 @@ class WeightServer:
         own backend round trip."""
         self._sync_store()
         page_ids = list(page_ids)
-        self.store.fault_pages(page_ids)
-        misses = sum(not hit for hit in self._access(model, page_ids))
-        t = self.storage.fetch_group_seconds(self.page_bytes, misses)
-        t += self._charge_hbm(misses)
-        t += self._charge_faults()
+        with get_tracer().span("fault_group", kind="storage", model=model,
+                               channel_name=self.storage.channel,
+                               pages=len(page_ids)) as sp:
+            self.store.fault_pages(page_ids)
+            misses = sum(not hit for hit in self._access(model, page_ids))
+            t = self.storage.fetch_group_seconds(self.page_bytes, misses)
+            t += self._charge_hbm(misses)
+            t += self._charge_faults()
+            sp.set(misses=misses, bytes=misses * self.page_bytes,
+                   seconds=t)
         self.stats.pages_fetched += misses
         self.stats.fetch_seconds += t
         return t
@@ -492,8 +507,10 @@ class WeightServer:
 
     def fetch_tensor(self, model: str, tensor: str) -> np.ndarray:
         """Access all pages of a tensor, then materialize it."""
-        self.access_pages(model, self.tensor_pages(model, tensor))
-        return self.store.materialize(model, tensor)
+        with get_tracer().span("fetch_tensor", kind="storage",
+                               model=model, tensor=tensor):
+            self.access_pages(model, self.tensor_pages(model, tensor))
+            return self.store.materialize(model, tensor)
 
     def embedding_rows_pages(self, model: str, tensor: str,
                              rows: np.ndarray) -> List[int]:
@@ -715,18 +732,22 @@ class EmbeddingServingEngine(_PrefetchingEngine):
                 model, self.embed_tensor, np.unique(docs))
         snap = self._transfer_snap()
         degraded = False
-        try:
-            if self.overlap:
-                fetch_t = self.server.access_pages_grouped(model, pages)
-            else:
-                fetch_t = self.server.access_pages(model, pages)
-        except StorageFaultError:
-            # device-path access failed past its retry budget: degrade
-            # this batch to the host backend (the materialize path below
-            # retries with a fresh budget) instead of aborting the run
-            degraded = True
-            self.stats.degraded_batches += 1
-            fetch_t = self.server._charge_faults()
+        tr = get_tracer()
+        with tr.span("fetch", kind="engine", model=model,
+                     pages=len(pages)) as fsp:
+            try:
+                if self.overlap:
+                    fetch_t = self.server.access_pages_grouped(model, pages)
+                else:
+                    fetch_t = self.server.access_pages(model, pages)
+            except StorageFaultError:
+                # device-path access failed past its retry budget: degrade
+                # this batch to the host backend (the materialize path below
+                # retries with a fresh budget) instead of aborting the run
+                degraded = True
+                self.stats.degraded_batches += 1
+                fetch_t = self.server._charge_faults()
+            fsp.set(seconds=fetch_t, degraded=degraded)
         if self.prefetcher is not None:
             self.prefetcher.note_demand(pages)     # lookahead hit accounting
         # double buffer: next batch's host->HBM copy issues now, rides
@@ -734,35 +755,40 @@ class EmbeddingServingEngine(_PrefetchingEngine):
         self._prestage_next()
         t0 = time.perf_counter()
         logits = None
-        if self.server.backend == "device" and not degraded:
-            # Hot path: the batch's token rows come straight off the
-            # resident slab through the dedup kernel path — no unique/
-            # scatter bookkeeping, no host materialization of any weight.
-            flat = docs.reshape(-1)
-            try:
-                emb = self.server.device_gather_rows(
-                    model, self.embed_tensor, flat, pad=True, pages=pages)
-            except StorageFaultError:
-                emb = None
-                self.stats.degraded_batches += 1
-            if emb is None:
-                self.stats.dense_fallbacks += 1
-            else:
-                emb = emb[:flat.size].reshape(docs.shape + (emb.shape[-1],))
-                if isinstance(emb, np.ndarray):
-                    logits = emb.mean(axis=1) @ self.heads[model]
+        with tr.span("compute", kind="engine", model=model,
+                     rows=int(docs.size)) as csp:
+            if self.server.backend == "device" and not degraded:
+                # Hot path: the batch's token rows come straight off the
+                # resident slab through the dedup kernel path — no unique/
+                # scatter bookkeeping, no host materialization of any weight.
+                flat = docs.reshape(-1)
+                try:
+                    emb = self.server.device_gather_rows(
+                        model, self.embed_tensor, flat, pad=True,
+                        pages=pages)
+                except StorageFaultError:
+                    emb = None
+                    self.stats.degraded_batches += 1
+                if emb is None:
+                    self.stats.dense_fallbacks += 1
                 else:
-                    # repro: allow-host (batch boundary: logits leave)
-                    logits = np.asarray(_tok_logits(emb,
-                                                    self._head_dev(model)))
-                self.stats.device_batches += 1
-        if logits is None:
-            rows = np.unique(docs)
-            emb_rows = self.server.store.materialize_rows(
-                model, self.embed_tensor, rows)
-            idx = np.searchsorted(rows, docs)
-            feats = emb_rows[idx].mean(axis=1)
-            logits = feats @ self.heads[model]
+                    emb = emb[:flat.size].reshape(docs.shape
+                                                  + (emb.shape[-1],))
+                    if isinstance(emb, np.ndarray):
+                        logits = emb.mean(axis=1) @ self.heads[model]
+                    else:
+                        # repro: allow-host (batch boundary: logits leave)
+                        logits = np.asarray(_tok_logits(
+                            emb, self._head_dev(model)))
+                    self.stats.device_batches += 1
+            csp.set(device=logits is not None)
+            if logits is None:
+                rows = np.unique(docs)
+                emb_rows = self.server.store.materialize_rows(
+                    model, self.embed_tensor, rows)
+                idx = np.searchsorted(rows, docs)
+                feats = emb_rows[idx].mean(axis=1)
+                logits = feats @ self.heads[model]
         compute_t = time.perf_counter() - t0
         # recovery work triggered by compute-side materialization (host
         # fallback re-faulting pages) is charged here, not lost
@@ -788,12 +814,16 @@ class EmbeddingServingEngine(_PrefetchingEngine):
     def run(self, max_batches: Optional[int] = None) -> ServeStats:
         """Drain the scheduler (each queue's drain rate is the lambda_i
         feeding Eq. 2 inside the buffer pool)."""
+        tr = get_tracer()
         n = 0
         while self.scheduler.pending():
             batch = self.scheduler.next_batch(
                 self.server.pool.resident_pages())
             if batch is None:
                 break
+            if tr.enabled:
+                tr.event("schedule", kind="policy",
+                         policy=self.scheduler.name, model=batch.model)
             self._infer(batch)
             self._maybe_prefetch()
             n += 1
@@ -844,45 +874,50 @@ class LMServingEngine(_PrefetchingEngine):
                 self.server.store.packing_current(self._params_gen):
             return 0.0
         names = list(self.server.store.dedup.models[model].tensors)
-        if self.server.backend == "device":
-            pages = self.server.store.model_pages(model)
-            try:
-                if grouped:
-                    fetch_t = self.server.access_pages_grouped(model, pages)
+        with get_tracer().span("model_switch", kind="engine",
+                               model=model, grouped=grouped) as sp:
+            if self.server.backend == "device":
+                pages = self.server.store.model_pages(model)
+                try:
+                    if grouped:
+                        fetch_t = self.server.access_pages_grouped(model,
+                                                                   pages)
+                    else:
+                        fetch_t = self.server.access_pages(model, pages)
+                    tensors = {}
+                    for name in names:
+                        dt = self.server.device_tensor(model, name)
+                        if dt is None:
+                            tensors = None
+                            break
+                        tensors[name] = dt
+                except StorageFaultError:
+                    # device-path switch failed past its retry budget:
+                    # degrade this model switch to host materialization
+                    # (fresh retry budget) instead of aborting the run
+                    self.stats.degraded_batches += 1
+                    fetch_t = self.server._charge_faults()
+                    tensors = None
+                if tensors is None:
+                    self.stats.dense_fallbacks += 1
+                    tensors = {name: self.server.store.materialize(model,
+                                                                   name)
+                               for name in names}
+                    fetch_t += self.server._charge_faults()
                 else:
-                    fetch_t = self.server.access_pages(model, pages)
-                tensors = {}
-                for name in names:
-                    dt = self.server.device_tensor(model, name)
-                    if dt is None:
-                        tensors = None
-                        break
-                    tensors[name] = dt
-            except StorageFaultError:
-                # device-path switch failed past its retry budget:
-                # degrade this model switch to host materialization
-                # (fresh retry budget) instead of aborting the run
-                self.stats.degraded_batches += 1
-                fetch_t = self.server._charge_faults()
-                tensors = None
-            if tensors is None:
-                self.stats.dense_fallbacks += 1
+                    self.stats.device_batches += 1
+            elif grouped:
+                fetch_t = self.server.access_pages_grouped(
+                    model, self.server.store.model_pages(model))
                 tensors = {name: self.server.store.materialize(model, name)
                            for name in names}
-                fetch_t += self.server._charge_faults()
             else:
-                self.stats.device_batches += 1
-        elif grouped:
-            fetch_t = self.server.access_pages_grouped(
-                model, self.server.store.model_pages(model))
-            tensors = {name: self.server.store.materialize(model, name)
-                       for name in names}
-        else:
-            t0 = self.server.stats.fetch_seconds
-            tensors = {}
-            for name in names:
-                tensors[name] = self.server.fetch_tensor(model, name)
-            fetch_t = self.server.stats.fetch_seconds - t0
+                t0 = self.server.stats.fetch_seconds
+                tensors = {}
+                for name in names:
+                    tensors[name] = self.server.fetch_tensor(model, name)
+                fetch_t = self.server.stats.fetch_seconds - t0
+            sp.set(seconds=fetch_t, tensors=len(names))
         self._params = self.templates[model], tensors
         self._resident_model = model
         self._params_gen = self.server.store.pack_generation
@@ -937,6 +972,7 @@ class LMServingEngine(_PrefetchingEngine):
                               shard=shard)
 
     def run(self, max_batches: Optional[int] = None) -> ServeStats:
+        tr = get_tracer()
         n = 0
         results = []
         while self.scheduler.pending():
@@ -944,6 +980,9 @@ class LMServingEngine(_PrefetchingEngine):
                 self.server.pool.resident_pages())
             if batch is None:
                 break
+            if tr.enabled:
+                tr.event("schedule", kind="policy",
+                         policy=self.scheduler.name, model=batch.model)
             prompts, steps = batch.payload
             snap = self._transfer_snap()
             fetch_t = self._load_model(batch.model, grouped=self.overlap)

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import get_tracer
 from .engine import LMServingEngine, ServeStats
 from .traffic import Request, VirtualClock
 
@@ -53,6 +54,21 @@ __all__ = ["BatchComputeModel", "ServingFrontend"]
 #: (mirrors BufferPool's rate_ema so the λ feeds compare like for like)
 _RATE_EMA = 0.2
 _EPS = 1e-12
+
+
+def _residual_split(total: float, part: float) -> Tuple[float, float]:
+    """Split ``total`` into ``(a, b)`` with ``a + b == total`` *exactly*
+    in floats and ``a`` as close to ``part`` as that allows.  Trace
+    stage breakdowns use this so per-request stage sums reproduce the
+    reported latency bit-for-bit (naive ``a + (total - a)`` can miss
+    ``total`` by an ulp)."""
+    a = part
+    for _ in range(4):
+        b = total - a
+        if a + b == total:
+            return a, b
+        a = total - b
+    return 0.0, total
 
 
 @dataclasses.dataclass
@@ -274,6 +290,7 @@ class ServingFrontend:
     def _dispatch(self, model: str, batch: List[Request]) -> None:
         """Shed the dead, serve the rest, charge the clock, record
         per-request latencies."""
+        tr = get_tracer()
         st: ServeStats = self.engine.stats
         kept = batch
         if self.policy == "slo":
@@ -281,24 +298,45 @@ class ServingFrontend:
             kept = [r for r in batch
                     if r.deadline >= self.clock.now + est - _EPS]
             st.shed_requests += len(batch) - len(kept)
+            if tr.enabled and len(kept) < len(batch):
+                now = self.clock.now
+                for r in batch:
+                    if r.deadline >= now + est - _EPS:
+                        continue
+                    # a shed request's tree is queue-only: no service
+                    tr.emit("request", r.arrival_t, now, kind="request",
+                            rid=r.rid, model=model, shed=True,
+                            slo_miss=False, queue_s=now - r.arrival_t,
+                            service_s=0.0, fetch_s=0.0, compute_s=0.0,
+                            latency_s=now - r.arrival_t)
             if not kept:
                 return
         start = self.clock.now
         f0, c0 = st.fetch_seconds, st.compute_seconds
-        if self._lm:
-            prompts, steps = self._merge(kept)
-            self.engine.submit(model, prompts, steps=steps)
-        else:
-            self.engine.submit(model, self._merge(kept))
-        self.engine.run(max_batches=1)
-        d_fetch = st.fetch_seconds - f0
-        rows = sum(self._rows(r) for r in kept)
-        if self.compute_model is not None:
-            d_compute = self.compute_model.batch_seconds(rows)
-        else:
-            d_compute = st.compute_seconds - c0
-        self.clock.advance(d_fetch, self.engine.server.storage.channel)
-        self.clock.advance(d_compute, "compute")
+        with tr.span("dispatch", kind="frontend", model=model,
+                     requests=len(kept)) as dsp:
+            if self._lm:
+                prompts, steps = self._merge(kept)
+                self.engine.submit(model, prompts, steps=steps)
+            else:
+                self.engine.submit(model, self._merge(kept))
+            self.engine.run(max_batches=1)
+            d_fetch = st.fetch_seconds - f0
+            rows = sum(self._rows(r) for r in kept)
+            if self.compute_model is not None:
+                d_compute = self.compute_model.batch_seconds(rows)
+            else:
+                d_compute = st.compute_seconds - c0
+            channel = self.engine.server.storage.channel
+            # charged spans: the exact floats handed to clock.advance,
+            # so span channel totals replay the clock ledger bit-for-bit
+            with tr.span("fetch", kind="frontend", channel=channel,
+                         charge=d_fetch):
+                self.clock.advance(d_fetch, channel)
+            with tr.span("compute", kind="frontend", channel="compute",
+                         charge=d_compute):
+                self.clock.advance(d_compute, "compute")
+            dsp.set(fetch_s=d_fetch, compute_s=d_compute)
         done = self.clock.now
         service = done - start
         inst = d_compute / max(1, rows)
@@ -308,8 +346,21 @@ class ServingFrontend:
             st.queue_latencies.append(start - r.arrival_t)
             st.service_latencies.append(service)
             st.request_latencies.append(done - r.arrival_t)
-            if done > r.deadline + _EPS:
+            missed = done > r.deadline + _EPS
+            if missed:
                 st.slo_misses += 1
+            if tr.enabled:
+                # residual stage splits: queue + service == latency and
+                # fetch + compute == service hold *exactly* in floats
+                latency = done - r.arrival_t
+                queue_s, service_s = _residual_split(
+                    latency, start - r.arrival_t)
+                fetch_s, compute_s = _residual_split(service_s, d_fetch)
+                tr.emit("request", r.arrival_t, done, kind="request",
+                        rid=r.rid, model=model, shed=False,
+                        slo_miss=missed, queue_s=queue_s,
+                        service_s=service_s, fetch_s=fetch_s,
+                        compute_s=compute_s, latency_s=latency)
         self.dispatched.append((model, kept))
         if self.capture:
             self._capture_results(kept)
@@ -319,6 +370,7 @@ class ServingFrontend:
         """Serve an arrival stream to completion (discrete-event loop
         on the virtual clock); returns the engine's stats with the
         request-level counters filled in."""
+        tr = get_tracer()
         reqs = sorted(requests, key=lambda r: (r.arrival_t, r.rid))
         st: ServeStats = self.engine.stats
         st.offered_requests += len(reqs)
@@ -326,6 +378,9 @@ class ServingFrontend:
         while i < len(reqs) or self._pending():
             while i < len(reqs) and reqs[i].arrival_t <= self.clock.now \
                     + _EPS:
+                if tr.enabled:
+                    tr.event("admit", kind="frontend", rid=reqs[i].rid,
+                             model=reqs[i].model)
                 self._admit(reqs[i])
                 i += 1
             batch = self._form()
@@ -333,7 +388,9 @@ class ServingFrontend:
                 self._dispatch(*batch)
                 continue
             # nothing closeable: idle to the next decision point (next
-            # arrival, or the instant a queue's slack runs out)
+            # arrival, or the instant a queue's slack runs out).  The
+            # charged idle span is arithmetically tick_to(): same dt,
+            # same single advance.
             candidates = []
             if i < len(reqs):
                 candidates.append(reqs[i].arrival_t)
@@ -342,6 +399,16 @@ class ServingFrontend:
                 candidates.append(forced)
             if not candidates:
                 break
-            self.clock.tick_to(max(min(candidates), self.clock.now),
-                               channel="idle")
+            t = max(min(candidates), self.clock.now)
+            if t > self.clock.now:
+                dt = t - self.clock.now
+                with tr.span("idle", kind="frontend", channel="idle",
+                             charge=dt):
+                    self.clock.advance(dt, "idle")
+        # a run must leave the books balanced: every simulated second
+        # in a named channel, and (when tracing this clock) every
+        # charged second witnessed by a span
+        self.clock.assert_conserved()
+        if getattr(tr, "clock", None) is self.clock:
+            tr.assert_matches_clock(self.clock)
         return st

@@ -182,29 +182,36 @@ class Prefetcher:
         backend read + ONE host->HBM transfer (``on_load_group``) —
         never a per-page ``store.page_array`` -> ``get_pages`` round
         trip per admitted page."""
+        from ..obs import get_tracer
         storage = self.server.storage
         base_transfer = self.server.page_bytes / storage.bw
         issued = 0
         t = 0.0
         deferred = getattr(self.server.pool, "deferred_loads",
                            contextlib.nullcontext)
-        with deferred():
-            for model, page in self.plan():
-                cost_floor = (storage.seek if issued == 0 else 0.0) \
-                    + base_transfer
-                if budget_s is not None and t + cost_floor > budget_s:
-                    break
-                if self.server.pool.prefetch(model, page):
-                    if issued == 0:
-                        t += storage.fetch_seconds(self.server.page_bytes)
+        with get_tracer().span("prefetch_step", kind="policy",
+                               budget_s=budget_s) as sp:
+            with deferred():
+                for model, page in self.plan():
+                    cost_floor = (storage.seek if issued == 0 else 0.0) \
+                        + base_transfer
+                    if budget_s is not None and t + cost_floor > budget_s:
+                        break
+                    if self.server.pool.prefetch(model, page):
+                        if issued == 0:
+                            t += storage.fetch_seconds(
+                                self.server.page_bytes)
+                        else:
+                            t += storage.transfer_seconds(
+                                self.server.page_bytes)
+                        issued += 1
+                        if page in self._plan_lookahead:
+                            self.stats.lookahead_issued += 1
+                            self._outstanding.add(int(page))
                     else:
-                        t += storage.transfer_seconds(self.server.page_bytes)
-                    issued += 1
-                    if page in self._plan_lookahead:
-                        self.stats.lookahead_issued += 1
-                        self._outstanding.add(int(page))
-                else:
-                    self.stats.declined += 1
+                        self.stats.declined += 1
+            sp.set(issued=issued, seconds=t,
+                   lookahead_hits=self.stats.lookahead_hits)
         self.stats.issued += issued
         self.stats.seconds += t
         return t

@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
+from ..obs import get_tracer
+
 __all__ = ["RouteDecision", "ShardRouter"]
 
 
@@ -123,5 +125,11 @@ class ShardRouter:
             self.batches_per_shard[shard] = \
                 self.batches_per_shard.get(shard, 0) + 1
             self.borrowed_pages += len(borrowed)
+            tr = get_tracer()
+            if tr.enabled:
+                # advisory probes (record=False) never reach the trace:
+                # one route event per executed batch, same as the stats
+                tr.event("route", kind="policy", shard=shard,
+                         owned=len(owned), borrowed=len(borrowed))
         return RouteDecision(shard, tuple(owned), tuple(borrowed),
                              pl.pack_generation)

@@ -57,6 +57,7 @@ import numpy as np
 
 from ..core.bufferpool import BufferPool
 from ..core.store import ModelStore, VirtualTensor
+from ..obs import get_tracer
 from .device_pool import DevicePagePool
 from .engine import ServeStats, StorageModel, WeightServer
 from .router import RouteDecision, ShardRouter
@@ -823,20 +824,24 @@ class ShardedWeightServer(WeightServer):
         shard slab), borrows ride one grouped mirror fetch."""
         self._sync_store()
         pages = list(page_ids)
-        self.store.fault_pages(pages)
-        route = self.router.route(pages)
-        self._record_route(route)
-        bp = self.sharded.buffer_pools[route.shard]
-        try:
-            flags = bp.access_group(model, list(route.owned))
-        except ValueError:
-            flags = [bp.access(model, p) for p in route.owned]
-        misses = sum(not h for h in flags)
-        t = self.storage.fetch_group_seconds(self.page_bytes, misses)
-        t += self._charge_hbm(misses)
-        self.stats.pages_fetched += misses
-        t += self._borrow(route, model, grouped=True)
-        t += self._charge_faults()
+        with get_tracer().span("fault_group", kind="storage", model=model,
+                               pages=len(pages)) as sp:
+            self.store.fault_pages(pages)
+            route = self.router.route(pages)
+            self._record_route(route)
+            bp = self.sharded.buffer_pools[route.shard]
+            try:
+                flags = bp.access_group(model, list(route.owned))
+            except ValueError:
+                flags = [bp.access(model, p) for p in route.owned]
+            misses = sum(not h for h in flags)
+            t = self.storage.fetch_group_seconds(self.page_bytes, misses)
+            t += self._charge_hbm(misses)
+            self.stats.pages_fetched += misses
+            t += self._borrow(route, model, grouped=True)
+            t += self._charge_faults()
+            sp.set(shard=route.shard, misses=misses,
+                   borrowed=len(route.borrowed), seconds=t)
         self.stats.fetch_seconds += t
         return t
 
@@ -846,7 +851,16 @@ class ShardedWeightServer(WeightServer):
         returns the virtual seconds charged to the fetch channel
         (owner-side storage faults + mirror->stage interconnect copies).
         """
-        res = self.sharded.stage_borrows(route.shard, route.borrowed, model)
+        tr = get_tracer()
+        with tr.span("borrow_stage", kind="borrow", shard=route.shard,
+                     pages=len(route.borrowed)) as sp:
+            res = self.sharded.stage_borrows(route.shard, route.borrowed,
+                                             model)
+            if res is not None:
+                _, mh, of, ru = res
+                sp.set(mirror_hits=mh, owner_faults=of, reused=ru)
+            else:
+                sp.set(refused=True)
         if res is None:
             # Oversized borrow set: staging refused, compute will fall
             # back to the host — which still has to READ those pages, so

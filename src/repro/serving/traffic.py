@@ -124,6 +124,7 @@ class VirtualClock:
 
     def __init__(self, start: float = 0.0):
         self.now = float(start)
+        self._start = float(start)
         self.channels: Dict[str, float] = {}
 
     def advance(self, seconds: float, channel: str) -> float:
@@ -144,6 +145,19 @@ class VirtualClock:
     def spent(self, channel: str) -> float:
         """Seconds charged to ``channel`` so far."""
         return self.channels.get(channel, 0.0)
+
+    def assert_conserved(self, tol: float = 1e-9) -> None:
+        """Fail loudly if any simulated second escaped the channel
+        ledger: ``sum(channels) == now - start`` within ``tol``.  A
+        future un-charged mutation of ``now`` shows up here instead of
+        silently skewing idle-time attribution."""
+        booked = sum(self.channels.values())
+        elapsed = self.now - self._start
+        if abs(booked - elapsed) > tol:
+            raise AssertionError(
+                f"virtual clock leaked time: channels sum to "
+                f"{booked!r}s but now-start is {elapsed!r}s "
+                f"(channels={self.channels!r})")
 
 
 # ------------------------------------------------------- popularity ------

@@ -39,6 +39,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import get_tracer
+
 __all__ = ["TransferStats", "PendingGroup", "TransferEngine",
            "fit_channel"]
 
@@ -205,8 +207,12 @@ class TransferEngine:
         for staged in self._pending.values():    # already covered by one?
             if key <= staged.index.keys():
                 return staged
-        stack = self._stack(missing)
-        dev = None if self.pool.mode() == "host" else self._to_device(stack)
+        with get_tracer().span("stage", kind="transfer",
+                               pages=len(missing),
+                               bytes=len(missing) * self.page_nbytes):
+            stack = self._stack(missing)
+            dev = None if self.pool.mode() == "host" \
+                else self._to_device(stack)
         pg = PendingGroup({p: i for i, p in enumerate(missing)}, stack, dev,
                           self.pool.store.pack_generation)
         self._pending[key] = pg
@@ -241,61 +247,69 @@ class TransferEngine:
             raise RuntimeError(
                 f"group of {len(missing)} pages exceeds the slab's "
                 f"{len(self.pool._free)} free slots")
-        pg = self._full_cover(missing)
-        overlapped = 0
-        if pg is not None:
-            rows = np.asarray([pg.index[p] for p in missing],  # repro: allow-host
-                              dtype=np.int64)
-            host_stack = pg.host[rows]
-            # staged ahead of demand: in device modes the bytes are
-            # already in flight to HBM; in host mode the staging stack
-            # (the grouped store gather) was assembled under compute
-            overlapped = len(missing) * self.page_nbytes
-            for key in [k for k, v in self._pending.items() if v is pg]:
-                del self._pending[key]           # consumed
-        else:
-            rows = None
-            host_stack = self._stack(missing)
-        # Time only the host->HBM leg (mirror write + device_put +
-        # scatter): _stack() above may fault the STORAGE backend, and a
-        # channel fitted over storage seconds would double-charge
-        # misses under charge_transfer.
-        t0 = time.perf_counter()
-        slots = np.asarray([self.pool._free.pop() for _ in missing],  # repro: allow-host
-                           dtype=np.int64)
-        # Exception safety: slots are popped, but residency maps are not
-        # yet touched.  If the device leg fails, every popped slot goes
-        # back to the free list and the generation is NOT bumped — the
-        # pool looks exactly as before the call (no half-mapped slots;
-        # slab bytes in an unmapped slot are unreachable by any remap).
-        try:
-            self.pool.host_slab[slots] = host_stack
-            if self.pool.mode() != "host":
-                if pg is not None and pg.dev is not None:
-                    # reuse the staged device bytes: bucket-pad the gather
-                    # and the scatter to the SAME pow2 shape (repeat index 0;
-                    # duplicate writes of identical rows are harmless), so
-                    # varying group sizes hit a few compiled shapes
-                    rows_p, slots_p = _bucket_pad(rows, slots)
-                    import jax.numpy as jnp
-                    staged = pg.dev[jnp.asarray(rows_p, jnp.int32)]
-                    self.pool.slab = self._scatter(self.pool.slab, slots_p,
-                                                   staged)
-                else:
-                    self.pool.slab = self._scatter(
-                        self.pool.slab, slots, self._to_device(host_stack))
-        except BaseException:
-            self.pool._free.extend(int(s) for s in slots)
-            raise
+        with get_tracer().span("load_group", kind="transfer",
+                               pages=len(missing),
+                               bytes=len(missing) * self.page_nbytes) as sp:
+            pg = self._full_cover(missing)
+            overlapped = 0
+            if pg is not None:
+                rows = np.asarray([pg.index[p] for p in missing],  # repro: allow-host
+                                  dtype=np.int64)
+                host_stack = pg.host[rows]
+                # staged ahead of demand: in device modes the bytes are
+                # already in flight to HBM; in host mode the staging stack
+                # (the grouped store gather) was assembled under compute
+                overlapped = len(missing) * self.page_nbytes
+                for key in [k for k, v in self._pending.items() if v is pg]:
+                    del self._pending[key]       # consumed
+            else:
+                rows = None
+                host_stack = self._stack(missing)
+            # Time only the host->HBM leg (mirror write + device_put +
+            # scatter): _stack() above may fault the STORAGE backend, and
+            # a channel fitted over storage seconds would double-charge
+            # misses under charge_transfer.
+            t0 = time.perf_counter()
+            slots = np.asarray([self.pool._free.pop() for _ in missing],  # repro: allow-host
+                               dtype=np.int64)
+            # Exception safety: slots are popped, but residency maps are
+            # not yet touched.  If the device leg fails, every popped slot
+            # goes back to the free list and the generation is NOT bumped
+            # — the pool looks exactly as before the call (no half-mapped
+            # slots; slab bytes in an unmapped slot are unreachable by any
+            # remap).
+            try:
+                self.pool.host_slab[slots] = host_stack
+                if self.pool.mode() != "host":
+                    if pg is not None and pg.dev is not None:
+                        # reuse the staged device bytes: bucket-pad the
+                        # gather and the scatter to the SAME pow2 shape
+                        # (repeat index 0; duplicate writes of identical
+                        # rows are harmless), so varying group sizes hit a
+                        # few compiled shapes
+                        rows_p, slots_p = _bucket_pad(rows, slots)
+                        import jax.numpy as jnp
+                        staged = pg.dev[jnp.asarray(rows_p, jnp.int32)]
+                        self.pool.slab = self._scatter(self.pool.slab,
+                                                       slots_p, staged)
+                    else:
+                        self.pool.slab = self._scatter(
+                            self.pool.slab, slots,
+                            self._to_device(host_stack))
+            except BaseException:
+                self.pool._free.extend(int(s) for s in slots)
+                raise
 
-        for pid, slot in zip(missing, slots):
-            self.pool.slot_of[pid] = int(slot)
-            self.pool._page_to_slot[pid] = int(slot)
-        self.pool.generation += 1                # ONCE per group
-        self.pool.loads += len(missing)
-        self.stats.record(len(missing), len(missing) * self.page_nbytes,
-                          time.perf_counter() - t0,
-                          overlapped_bytes=overlapped)
+            for pid, slot in zip(missing, slots):
+                self.pool.slot_of[pid] = int(slot)
+                self.pool._page_to_slot[pid] = int(slot)
+            self.pool.generation += 1            # ONCE per group
+            self.pool.loads += len(missing)
+            self.stats.record(len(missing),
+                              len(missing) * self.page_nbytes,
+                              time.perf_counter() - t0,
+                              overlapped_bytes=overlapped)
+            sp.set(overlapped_bytes=overlapped)
         return len(missing)
 
     def record_single(self, seconds: float) -> None:

@@ -373,6 +373,13 @@ class RecoveryStats:
             backoff_seconds=self.backoff_seconds - prev.backoff_seconds,
             latency_seconds=self.latency_seconds - prev.latency_seconds)
 
+    def register_into(self, registry, namespace: str = "recovery") -> None:
+        """Expose every field as a live metric view in a
+        :class:`~repro.obs.metrics.MetricsRegistry` (duck-typed so this
+        numpy-only layer never imports the obs package)."""
+        registry.register_object(
+            namespace, self, [f.name for f in dataclasses.fields(self)])
+
 
 @dataclasses.dataclass
 class RetryPolicy:

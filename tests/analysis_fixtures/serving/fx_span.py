@@ -1,0 +1,31 @@
+"""Seeded span-discipline violations: raw span plumbing + an
+unspanned charged fetch.
+
+Parsed by tests with SpanDisciplinePass(path_fragment=
+"analysis_fixtures/"); never imported.
+"""
+
+
+class SpanPool:
+    """Stand-in for a traced fetch path."""
+
+    def raw_plumbing(self, tr):
+        sp = tr.span_begin("fetch")                    # Rule A: raw begin
+        tr.span_end(sp)                                # Rule A: raw end
+
+    def unspanned_charge(self, store, storage, pids):
+        stack = store.page_stack(pids)                 # fetch ...
+        storage.fetch_group_seconds(len(pids), 0)      # ... charged, no span
+        return stack
+
+    def good_spanned(self, tr, store, storage, pids):
+        with tr.span("fault_group", kind="storage", pages=len(pids)):
+            stack = store.page_stack(pids)
+            storage.fetch_group_seconds(len(pids), 0)
+        return stack
+
+    # repro: allow-unspanned (the caller opens the span)
+    def helper_caller_spans(self, store, storage, pids):
+        stack = store.page_stack(pids)
+        storage.fetch_group_seconds(len(pids), 0)
+        return stack

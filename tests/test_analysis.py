@@ -140,6 +140,28 @@ def test_frontend_clock_scoped_to_frontend_files_only():
     assert len(FrontendClockPass().run(src)) == 1
 
 
+def test_span_discipline_fixture_trips_raw_and_unspanned():
+    from repro.analysis.passes.span_discipline import SpanDisciplinePass
+    src = Source.load(FIXTURES / "serving" / "fx_span.py")
+    findings = SpanDisciplinePass(
+        path_fragment="analysis_fixtures/").run(src)
+    assert {f.name for f in findings} == {"span-discipline"}
+    msgs = _msgs(findings)
+    assert "raw span_begin() call" in msgs          # Rule A: begin
+    assert "raw span_end() call" in msgs            # Rule A: end
+    assert "unspanned_charge" in msgs               # Rule B trips
+    assert "good_spanned" not in msgs               # with-span stays quiet
+    assert "helper_caller_spans" not in msgs        # pragma'd stays quiet
+    assert len(findings) == 3
+
+
+def test_span_discipline_raw_calls_allowed_in_tracer_module():
+    from repro.analysis.passes.span_discipline import SpanDisciplinePass
+    text = Path(ROOT / "src/repro/obs/trace.py").read_text()
+    src = Source("src/repro/obs/trace.py", text)
+    assert SpanDisciplinePass().run(src) == []
+
+
 def test_silent_except_fixture_trips_pragma_and_narrow_stay_quiet():
     from repro.analysis.passes.silent_except import SilentExceptPass
     findings = SilentExceptPass().run(
