@@ -1,5 +1,5 @@
 .PHONY: verify test-fast lint sanitize bench bench-smoke bench-faults \
-	chaos trace-smoke example
+	chaos trace-smoke crash-sweep example
 
 # Tier-1 verification (ROADMAP.md)
 verify:
@@ -35,6 +35,7 @@ bench-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_serving_backends --smoke
 	PYTHONPATH=src python -m benchmarks.bench_faults --smoke
 	PYTHONPATH=src python -m benchmarks.bench_traffic --smoke
+	PYTHONPATH=src python -m benchmarks.bench_recovery --smoke
 
 # Chaos benchmark alone: fault-rate ladder + naive-path-dies proof
 # -> BENCH_faults.json (DESIGN.md §8)
@@ -49,6 +50,14 @@ bench-faults:
 trace-smoke:
 	PYTHONPATH=src python -m benchmarks.bench_traffic --smoke --trace
 	python scripts/trace_report.py BENCH_traffic_trace.json
+
+# Exhaustive kill-at-every-seam durability sweep: one subprocess per
+# (crash point, backend kind), SIGKILLed mid-mutation, then recovered
+# and invariant-checked (manifest readable, zero orphans, zero temps,
+# empty journal, bit-exact logits).  A registered seam no scenario
+# reaches fails the sweep (DESIGN.md §11)
+crash-sweep:
+	PYTHONPATH=src python -m repro.storage.crashpoints --sweep
 
 example:
 	PYTHONPATH=src python examples/multi_model_serving.py

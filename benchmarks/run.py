@@ -19,6 +19,7 @@ MODULES = [
     "bench_serving_backends",
     "bench_faults",
     "bench_traffic",
+    "bench_recovery",
     "roofline_table",
 ]
 

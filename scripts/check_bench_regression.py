@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Bench regression guard: compare freshly generated BENCH_serving.json /
-BENCH_transfer.json / BENCH_faults.json / BENCH_traffic.json p50s
-against the baselines committed at HEAD.
+BENCH_transfer.json / BENCH_faults.json / BENCH_traffic.json /
+BENCH_recovery.json p50s against the baselines committed at HEAD.
 
 Run by scripts/verify.sh AFTER the smoke benchmark rewrites the JSON
 files in the working tree; the committed baseline is recovered with
@@ -226,6 +226,47 @@ def main() -> int:
                 continue
             _check_p50("BENCH_traffic", f"slo@load={c['load_frac']}",
                        c["slo"]["p50_ms"], b["slo"]["p50_ms"], failures)
+
+    recovery = _fresh("BENCH_recovery.json")
+    if recovery is None:
+        return 1
+    # Recovery claims are zero-tolerance: ledger balance, bit-exact
+    # restart logits and exact wreckage counts are determinism
+    # properties (virtual clock + content addressing), not wall-clock
+    # measurements.
+    for claim, msg in (
+            ("recovery_counts_exact",
+             "journal replay deleted the wrong number of orphans/temps"),
+            ("restart_ledger_conserved",
+             "the at-most-once request ledger did not balance after "
+             "the warm restart"),
+            ("restart_no_duplicates",
+             "a request was served both before and after the restart"),
+            ("restart_logits_exact",
+             "pre+post-restart logits were not bit-exact against the "
+             "uninterrupted run"),
+            ("restart_did_work",
+             "the restart scenario re-admitted nothing — the kill "
+             "landed after the stream drained and proves nothing"),
+            ("store_recovery_clean",
+             "the serving store was dirty (journal/temps) at reopen"),
+            ("restart_p99_bounded",
+             "restarted-run p99 exceeded "
+             f"{recovery.get('restart_p99_factor_limit')}x the "
+             "uninterrupted p99")):
+        if not recovery.get(claim, False):
+            failures.append(f"BENCH_recovery: {msg}")
+    base = _baseline("BENCH_recovery.json")
+    if _comparable(recovery, base, "BENCH_recovery.json"):
+        by_len = {c.get("journal_len"): c for c in base["configs"]}
+        for c in recovery["configs"]:
+            b = by_len.get(c.get("journal_len"))
+            if b is None or "recover_ms" not in b:
+                continue
+            # recover_ms is wall time on a shared runner: same loose
+            # tolerance as every other wall-clock comparison here
+            _check_p50("BENCH_recovery", f"journal={c['journal_len']}",
+                       c["recover_ms"], b["recover_ms"], failures)
 
     if failures:
         print("[bench-guard] FAILURES:")

@@ -35,6 +35,13 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_traffic --smoke --trace
 python scripts/trace_report.py BENCH_traffic_trace.json
+# Crash-recovery benchmark: journal replay cost vs wreckage size, plus
+# the kill-and-warm-restart run (at-most-once ledger, bit-exact union
+# of pre-/post-restart logits, bounded restart p99) ->
+# BENCH_recovery.json (DESIGN.md §11; `make crash-sweep` runs the full
+# kill-at-every-seam subprocess sweep separately).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_recovery --smoke
 # Bench regression guard: fresh BENCH_serving/BENCH_transfer p50s must
 # stay within tolerance of the baselines committed at HEAD (and the
 # grouped-transfer / device-vs-numpy / faults-recovery /

@@ -1,6 +1,7 @@
 """Registry of the repo's contract lint passes."""
 from .api_drift import ApiDriftPass
 from .channel_charge import ChannelChargePass
+from .durability import DurabilityPass
 from .frontend_clock import FrontendClockPass
 from .host_sync import HostSyncPass
 from .silent_except import SilentExceptPass
@@ -12,6 +13,7 @@ from .wallclock import WallClockPass
 __all__ = [
     "ApiDriftPass",
     "ChannelChargePass",
+    "DurabilityPass",
     "FrontendClockPass",
     "HostSyncPass",
     "SilentExceptPass",
@@ -29,6 +31,7 @@ ALL_PASSES = (
     ChannelChargePass,
     FrontendClockPass,
     SpanDisciplinePass,
+    DurabilityPass,
     WallClockPass,
     ApiDriftPass,
     UnusedBindingPass,

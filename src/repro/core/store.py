@@ -27,11 +27,24 @@ from .pagepack import PackResult, check_coverage, pack
 # the manifest version and dtype resolution live there once
 from ..obs import get_tracer
 from ..storage.backend import MANIFEST_VERSION, resolve_dtype
+from ..storage.crashpoints import crash_point, register_crash_points
 from ..storage.faults import (CorruptPageError, FatalStorageError,
                               RecoveryStats, RetryPolicy, fault_layer,
                               maybe_wrap)
+from ..storage.journal import Journal, recover_backend
 
 TensorRef = Tuple[str, str]
+
+register_crash_points({
+    "store.save.journaled":
+        "save intent durably journaled, no page written yet",
+    "store.save.pages_put":
+        "fresh pages stored, manifest not yet committed",
+    "store.save.manifest_committed":
+        "manifest committed, orphan prune not yet run (the leak window)",
+    "store.save.pruned":
+        "orphans pruned, save intent not yet marked done",
+})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -575,8 +588,10 @@ class ModelStore:
         round-trip bit-exact without a float32 detour.  The manifest
         commit is atomic/transactional, and pages orphaned by an earlier
         packing generation are pruned afterwards (``delete_pages`` on
-        the diff) — a crash between commit and prune only ever leaves
-        unreferenced extra pages, never a dangling manifest.
+        the diff).  The whole sequence is bracketed by a write-ahead
+        intent journal: a crash at any seam leaves at worst
+        unreferenced extra pages and staging files, which the journal
+        replay on the next :meth:`open` garbage-collects (DESIGN.md §11).
         """
         from ..storage import PageBackend, open_backend
         if dest is None:
@@ -603,10 +618,17 @@ class ModelStore:
             payload.setdefault(h, pool[pid])     # dedup in the backend too
         existing = set(backend.list_pages())
         fresh = {h: arr for h, arr in payload.items() if h not in existing}
+        # Write-ahead intent (DESIGN.md §11): the keep-set names exactly
+        # the pages the new manifest will reference, so recovery after a
+        # crash at ANY point below reduces to one manifest-vs-stored GC.
+        journal = Journal(backend)
+        intent = journal.begin("save", keep=sorted(set(page_hashes)))
+        crash_point("store.save.journaled")
         # content-addressed puts are idempotent, so transient write
         # failures (including torn acks) are safely retried
         self._charged_run(lambda: backend.put_pages(fresh),
                           describe="put_pages")
+        crash_point("store.save.pages_put")
         manifest = {
             "version": MANIFEST_VERSION,
             "blocks_per_page": self.cfg.blocks_per_page,
@@ -630,9 +652,12 @@ class ModelStore:
         # a hard conflict and propagates untouched
         self._charged_run(lambda: backend.commit_manifest(manifest),
                           describe="commit_manifest")
+        crash_point("store.save.manifest_committed")
         orphans = existing - set(page_hashes)
         if orphans:                              # pages of older packings
             backend.delete_pages(sorted(orphans))
+        crash_point("store.save.pruned")
+        journal.commit(intent)
         if self._backend is None:
             self._backend = backend              # adopt for future save()
         return manifest
@@ -654,6 +679,11 @@ class ModelStore:
             backend = source
         else:
             backend = maybe_wrap(open_backend(source))
+        # Journal replay (DESIGN.md §11): a crash mid-save leaves a
+        # pending intent; recovery GCs orphan pages + temp debris before
+        # anything reads the store.  Clean journals cost one read — no
+        # page listing — so lazy-open call-count contracts are unchanged.
+        recover_backend(backend)
         manifest, _ = RetryPolicy().run(backend.load_manifest,
                                         describe="load_manifest")
         version = manifest.get("version", 1)    # v1: pre-PageBackend saves

@@ -103,6 +103,7 @@ REPORT_FIELDS = {
     "queue_latencies": ("traffic", "queue_p50="),
     "service_latencies": ("traffic", "service_p50="),
     "request_latencies": ("traffic", "served=/p50=/p99="),
+    "readmitted_requests": ("traffic", "readmitted="),
 }
 
 
@@ -189,6 +190,7 @@ def _print_traffic(spec: TrafficSpec, fe: ServingFrontend,
           f"zipf={spec.zipf:g} slo={spec.slo_ms:g}ms seed={spec.seed} "
           f"offered={stats.offered_requests} served={served} "
           f"shed={stats.shed_requests} slo_miss={stats.slo_misses} "
+          f"readmitted={stats.readmitted_requests} "
           f"goodput={stats.goodput:.3f} " + qs + lat +
           f" clock={fe.clock.now*1e3:.1f}ms "
           f"idle={fe.clock.spent('idle')*1e3:.1f}ms")
@@ -203,6 +205,54 @@ def _make_tracer(args, clock=None):
     from ..obs import Tracer, use_tracer
     tr = Tracer(clock=clock)
     return tr, use_tracer(tr)
+
+
+def _run_traffic(args, engine, gen: OpenLoopTraffic, spec: TrafficSpec):
+    """One open-loop traffic run through the ServingFrontend, honouring
+    the warm-restart flags (DESIGN.md §11).
+
+    With ``--snapshot PATH`` the frontend persists its clock / ledger /
+    queues around every dispatch; if PATH already exists the run RESUMES
+    from it — the seeded generator reproduces the same request stream,
+    the ledger keeps served ids served (at-most-once), and queued plus
+    in-flight ids are re-admitted for deterministic recompute.
+    ``--kill-after N`` stops after N dispatched batches so a follow-up
+    invocation of the same command exercises the resume path.
+
+    Returns ``(fe, stats, tracer, clock)``; ``clock`` is ``None`` on a
+    resumed run because the restored ledger carries pre-crash channel
+    time no span of this process witnessed, so the tracer's exact
+    clock-conservation cross-check cannot apply.
+    """
+    import json
+    import os
+    snap_path = getattr(args, "snapshot", None)
+    reqs = gen.generate(spec.requests)
+    resumed = False
+    if snap_path and os.path.exists(snap_path):
+        with open(snap_path) as f:
+            snap = json.load(f)
+        fe = ServingFrontend.restore(engine, snap, reqs,
+                                     snapshot_path=snap_path)
+        resumed = True
+        print(f"[restart] resumed from {snap_path}: "
+              f"readmitted={fe.ledger.readmitted} "
+              f"served_before={len(fe.ledger.served)} "
+              f"clock={fe.clock.now*1e3:.1f}ms")
+    else:
+        fe = ServingFrontend(engine, max_batch=spec.max_batch,
+                             snapshot_path=snap_path)
+    clock = None if resumed else fe.clock
+    tracer, activate = _make_tracer(args, clock)
+    with activate:
+        stats: ServeStats = fe.run(reqs,
+                                   max_dispatches=args.kill_after)
+    if args.kill_after is not None and fe.pending_requests():
+        print(f"[restart] stopped after {args.kill_after} dispatches: "
+              f"pending={fe.pending_requests()} snapshot -> {snap_path}; "
+              f"rerun the same command to resume")
+    _print_traffic(spec, fe, stats)
+    return fe, stats, tracer, clock
 
 
 def _build_registry(stats: ServeStats, server, engine, clock):
@@ -334,12 +384,7 @@ def serve_embedding(args) -> tuple:
         gen = OpenLoopTraffic(names, rate=spec.rate, zipf_alpha=spec.zipf,
                               slo_s=spec.slo_ms * 1e-3, seed=spec.seed,
                               payload_fn=_payload)
-        fe = ServingFrontend(engine, max_batch=spec.max_batch)
-        clock = fe.clock
-        tracer, activate = _make_tracer(args, clock)
-        with activate:
-            stats: ServeStats = fe.run(gen.generate(spec.requests))
-        _print_traffic(spec, fe, stats)
+        fe, stats, tracer, clock = _run_traffic(args, engine, gen, spec)
     else:
         rng = np.random.default_rng(args.seed + 9)
         for b in range(args.batches):
@@ -432,12 +477,7 @@ def serve_lm(args) -> tuple:
         gen = OpenLoopTraffic(names, rate=spec.rate, zipf_alpha=spec.zipf,
                               slo_s=spec.slo_ms * 1e-3, seed=spec.seed,
                               payload_fn=_payload)
-        fe = ServingFrontend(engine, max_batch=spec.max_batch)
-        clock = fe.clock
-        tracer, activate = _make_tracer(args, clock)
-        with activate:
-            stats: ServeStats = fe.run(gen.generate(spec.requests))
-        _print_traffic(spec, fe, stats)
+        fe, stats, tracer, clock = _run_traffic(args, engine, gen, spec)
     else:
         for b in range(args.batches):
             name = names[int(rng.integers(0, num_models))]
@@ -485,6 +525,18 @@ def main(argv=None):
                          "batching + cost-based admission through the "
                          "ServingFrontend; prints a [traffic] report "
                          "line (p50/p99/goodput on the virtual clock)")
+    ap.add_argument("--snapshot", default=None, metavar="PATH",
+                    help="warm-restart snapshot (requires --traffic): "
+                         "persist the frontend's clock/ledger/queues "
+                         "around every dispatch; if PATH exists the run "
+                         "RESUMES from it — served requests stay served "
+                         "(at-most-once), queued and in-flight ones are "
+                         "re-admitted for deterministic recompute "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--kill-after", type=int, default=None, metavar="N",
+                    help="stop after N dispatched batches (requires "
+                         "--snapshot): pending work stays in the "
+                         "snapshot; rerun the same command to resume")
     ap.add_argument("--scheduler", default="round_robin",
                     choices=sorted(SCHEDULERS))
     ap.add_argument("--backend", default="numpy",
@@ -537,6 +589,12 @@ def main(argv=None):
         raise SystemExit("--faults requires --store-url (faults inject "
                          "at the storage backend; the in-process store "
                          "has no backend to wrap)")
+    if args.snapshot and not args.traffic:
+        raise SystemExit("--snapshot requires --traffic (only the "
+                         "request-level frontend has restartable state)")
+    if args.kill_after is not None and not args.snapshot:
+        raise SystemExit("--kill-after requires --snapshot (stopping "
+                         "mid-run without a snapshot just loses work)")
 
     if args.engine == "lm":
         return serve_lm(args)

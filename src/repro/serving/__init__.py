@@ -1,7 +1,7 @@
 from .device_pool import DevicePagePool
 from .engine import (EmbeddingServingEngine, FetchComputeTimeline,
                      LMServingEngine, ServeStats, StorageModel, WeightServer)
-from .frontend import BatchComputeModel, ServingFrontend
+from .frontend import BatchComputeModel, RequestLedger, ServingFrontend
 from .kvcache import PagedKVCache
 from .prefetch import Prefetcher, PrefetchStats
 from .router import RouteDecision, ShardRouter
@@ -17,7 +17,7 @@ from .traffic import (OpenLoopTraffic, Request, TrafficSpec, VirtualClock,
 __all__ = ["DevicePagePool", "EmbeddingServingEngine",
            "FetchComputeTimeline", "LMServingEngine", "ServeStats",
            "StorageModel", "WeightServer", "BatchComputeModel",
-           "ServingFrontend", "PagedKVCache", "Prefetcher",
+           "RequestLedger", "ServingFrontend", "PagedKVCache", "Prefetcher",
            "PrefetchStats", "SCHEDULERS", "BatchScheduler",
            "DedupAffinityScheduler", "FifoScheduler", "RoundRobinScheduler",
            "ScheduledBatch", "make_scheduler",

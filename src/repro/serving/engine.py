@@ -209,6 +209,9 @@ class ServeStats:
     # ^ per served request: dispatch -> done (its batch's service time)
     request_latencies: List[float] = dataclasses.field(default_factory=list)
     # ^ per served request: arrival -> done (queue + service)
+    readmitted_requests: int = 0     # re-queued by a warm restart
+    # ^ queued + in-flight ids a ServingFrontend.restore put back
+    #   (DESIGN.md §11): at-most-once delivery, deterministic recompute
 
     @property
     def total_seconds(self) -> float:

@@ -40,7 +40,9 @@ without a front end does.  ``BENCH_traffic.json`` measures both.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import json
+import os
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -48,7 +50,7 @@ from ..obs import get_tracer
 from .engine import LMServingEngine, ServeStats
 from .traffic import Request, VirtualClock
 
-__all__ = ["BatchComputeModel", "ServingFrontend"]
+__all__ = ["BatchComputeModel", "RequestLedger", "ServingFrontend"]
 
 #: EMA smoothing for observed per-model arrival rates and compute cost
 #: (mirrors BufferPool's rate_ema so the λ feeds compare like for like)
@@ -86,6 +88,53 @@ class BatchComputeModel:
         return self.base + self.per_request * max(0, int(n))
 
 
+@dataclasses.dataclass
+class RequestLedger:
+    """At-most-once request accounting that survives restarts
+    (DESIGN.md §11).
+
+    A request id moves ``offered`` → queued (offered minus every other
+    set) → ``in_flight`` → ``served`` | ``shed``.  ``in_flight`` is the
+    crash window: the dispatch intent is persisted *before* the engine
+    computes, and the id only becomes ``served`` after results are
+    captured.  A restart therefore re-admits queued and in-flight ids
+    (their results died with the process; recompute is deterministic)
+    and never re-serves a served one — delivery is at-most-once, and
+    nothing is dropped beyond explicit sheds.
+    """
+    offered: Set[int] = dataclasses.field(default_factory=set)
+    served: Set[int] = dataclasses.field(default_factory=set)
+    shed: Set[int] = dataclasses.field(default_factory=set)
+    in_flight: Set[int] = dataclasses.field(default_factory=set)
+    readmitted: int = 0                  # cumulative across restarts
+
+    def admit(self, rid: int) -> None:
+        self.offered.add(int(rid))
+
+    def record_served(self, rid: int) -> None:
+        self.in_flight.discard(int(rid))
+        self.served.add(int(rid))
+
+    def record_shed(self, rid: int) -> None:
+        self.in_flight.discard(int(rid))
+        self.shed.add(int(rid))
+
+    def to_dict(self) -> Dict:
+        return {"offered": sorted(self.offered),
+                "served": sorted(self.served),
+                "shed": sorted(self.shed),
+                "in_flight": sorted(self.in_flight),
+                "readmitted": int(self.readmitted)}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "RequestLedger":
+        return cls(offered={int(r) for r in d["offered"]},
+                   served={int(r) for r in d["served"]},
+                   shed={int(r) for r in d["shed"]},
+                   in_flight={int(r) for r in d["in_flight"]},
+                   readmitted=int(d.get("readmitted", 0)))
+
+
 class ServingFrontend:
     """Continuous-batching front end over one serving engine.
 
@@ -109,7 +158,8 @@ class ServingFrontend:
 
     def __init__(self, engine, max_batch: int = 8, policy: str = "slo",
                  compute_model: Optional[BatchComputeModel] = None,
-                 capture: bool = True):
+                 capture: bool = True,
+                 snapshot_path: Optional[str] = None):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"have {self.POLICIES}")
@@ -120,6 +170,12 @@ class ServingFrontend:
         self.policy = policy
         self.compute_model = compute_model
         self.capture = capture
+        # warm restart (DESIGN.md §11): when set, the frontend persists
+        # its snapshot around every dispatch (atomic rename), so a
+        # killed process resumes via ServingFrontend.restore
+        self.snapshot_path = snapshot_path
+        self.ledger = RequestLedger()
+        self._resumed = False
         self.clock = VirtualClock()
         self.results: Dict[int, np.ndarray] = {}
         self.dispatched: List[Tuple[str, List[Request]]] = []
@@ -210,6 +266,10 @@ class ServingFrontend:
 
     def _admit(self, req: Request) -> None:
         """Enqueue one arrival and fold it into the λ estimate."""
+        # offered counts at admission (not run() entry) so a killed run
+        # books only what it actually saw and a resume never re-counts
+        self.engine.stats.offered_requests += 1
+        self.ledger.admit(req.rid)
         last = self._last_arrival.get(req.model)
         self._last_arrival[req.model] = req.arrival_t
         if last is not None and req.arrival_t > last:
@@ -298,6 +358,10 @@ class ServingFrontend:
             kept = [r for r in batch
                     if r.deadline >= self.clock.now + est - _EPS]
             st.shed_requests += len(batch) - len(kept)
+            kept_rids = {r.rid for r in kept}
+            for r in batch:
+                if r.rid not in kept_rids:
+                    self.ledger.record_shed(r.rid)
             if tr.enabled and len(kept) < len(batch):
                 now = self.clock.now
                 for r in batch:
@@ -310,7 +374,14 @@ class ServingFrontend:
                             service_s=0.0, fetch_s=0.0, compute_s=0.0,
                             latency_s=now - r.arrival_t)
             if not kept:
+                self._persist()
                 return
+        # dispatch intent: in-flight ids hit the durable snapshot BEFORE
+        # the engine computes, so a crash from here to the served mark
+        # re-admits exactly these requests on restart (at-most-once)
+        for r in kept:
+            self.ledger.in_flight.add(r.rid)
+        self._persist()
         start = self.clock.now
         f0, c0 = st.fetch_seconds, st.compute_seconds
         with tr.span("dispatch", kind="frontend", model=model,
@@ -364,18 +435,40 @@ class ServingFrontend:
         self.dispatched.append((model, kept))
         if self.capture:
             self._capture_results(kept)
+        for r in kept:
+            self.ledger.record_served(r.rid)
+        self._persist()
 
     # -- the event loop ----------------------------------------------------
-    def run(self, requests: List[Request]) -> ServeStats:
+    def run(self, requests: List[Request],
+            max_dispatches: Optional[int] = None) -> ServeStats:
         """Serve an arrival stream to completion (discrete-event loop
         on the virtual clock); returns the engine's stats with the
-        request-level counters filled in."""
+        request-level counters filled in.
+
+        Ids the ledger already knows — served, shed, or re-admitted by
+        :meth:`restore` — are not offered again, so a resumed run can
+        be handed the SAME regenerated stream and picks up exactly
+        where the crash left it.  ``max_dispatches`` stops after that
+        many batches (the kill-and-restart harness; the books stay
+        balanced, pending requests wait in the persisted snapshot)."""
         tr = get_tracer()
-        reqs = sorted(requests, key=lambda r: (r.arrival_t, r.rid))
+        # on a resumed run the caller hands back the SAME regenerated
+        # stream, so ids the ledger already offered are filtered out;
+        # a fresh frontend must NOT filter (independent streams may
+        # legitimately reuse rid numbering)
+        if self._resumed:
+            reqs = sorted((r for r in requests
+                           if r.rid not in self.ledger.offered),
+                          key=lambda r: (r.arrival_t, r.rid))
+        else:
+            reqs = sorted(requests, key=lambda r: (r.arrival_t, r.rid))
         st: ServeStats = self.engine.stats
-        st.offered_requests += len(reqs)
         i = 0
+        dispatched = 0
         while i < len(reqs) or self._pending():
+            if max_dispatches is not None and dispatched >= max_dispatches:
+                break
             while i < len(reqs) and reqs[i].arrival_t <= self.clock.now \
                     + _EPS:
                 if tr.enabled:
@@ -386,6 +479,7 @@ class ServingFrontend:
             batch = self._form()
             if batch is not None:
                 self._dispatch(*batch)
+                dispatched += 1
                 continue
             # nothing closeable: idle to the next decision point (next
             # arrival, or the instant a queue's slack runs out).  The
@@ -407,8 +501,139 @@ class ServingFrontend:
                     self.clock.advance(dt, "idle")
         # a run must leave the books balanced: every simulated second
         # in a named channel, and (when tracing this clock) every
-        # charged second witnessed by a span
+        # charged second witnessed by a span.  A *resumed* clock
+        # carries pre-crash channel time no span of this process
+        # witnessed, so the span cross-check only applies to runs that
+        # started on this tracer's watch.
+        self._persist()
         self.clock.assert_conserved()
-        if getattr(tr, "clock", None) is self.clock:
+        if getattr(tr, "clock", None) is self.clock and not self._resumed:
             tr.assert_matches_clock(self.clock)
         return st
+
+    # -- warm restart ------------------------------------------------------
+    def pending_requests(self) -> int:
+        """Requests queued (including restart re-admissions) but not
+        yet dispatched or shed."""
+        return self._pending()
+
+    def assert_ledger_conserved(self) -> None:
+        """The at-most-once book balance: ``served + shed + in-flight +
+        queued == offered`` with no id in two terminal states."""
+        led = self.ledger
+        dup = led.served & led.shed
+        if dup:
+            raise AssertionError(
+                f"requests both served and shed: {sorted(dup)[:5]}")
+        resolved = (len(led.served) + len(led.shed)
+                    + len(led.in_flight) + self._pending())
+        if resolved != len(led.offered):
+            raise AssertionError(
+                f"request ledger leaked: {len(led.offered)} offered but "
+                f"{len(led.served)} served + {len(led.shed)} shed + "
+                f"{len(led.in_flight)} in-flight + {self._pending()} "
+                "queued")
+
+    #: ServeStats fields a snapshot carries across a restart; scalars
+    #: merge additively into the fresh engine's stats, lists extend
+    _SNAP_STATS = ("requests", "batches", "offered_requests",
+                   "shed_requests", "slo_misses", "readmitted_requests",
+                   "fetch_seconds", "compute_seconds", "pages_fetched",
+                   "queue_latencies", "service_latencies",
+                   "request_latencies")
+
+    def snapshot(self) -> Dict:
+        """JSON-safe frontend state: clock ledger, queued request ids,
+        the at-most-once ledger, λ/compute estimators and the
+        request-level stats.  Payloads are NOT serialized — a restart
+        regenerates the (seeded, deterministic) request stream and
+        :meth:`restore` re-binds ids to the regenerated objects."""
+        st = self.engine.stats
+        stats = {}
+        for key in self._SNAP_STATS:
+            v = getattr(st, key)
+            stats[key] = list(v) if isinstance(v, list) else v
+        return {
+            "version": 1,
+            "policy": self.policy,
+            "max_batch": self.max_batch,
+            "clock": self.clock.snapshot(),
+            "queued": {m: [r.rid for r in q]
+                       for m, q in self._queues.items()},
+            "fifo": [r.rid for r in self._fifo],
+            "ledger": self.ledger.to_dict(),
+            "rates": dict(self._rates),
+            "last_arrival": dict(self._last_arrival),
+            "cpr": self._cpr,
+            "stats": stats,
+        }
+
+    def _persist(self) -> None:
+        if self.snapshot_path is None:
+            return
+        tmp = f"{self.snapshot_path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.snapshot(), f)
+        os.replace(tmp, self.snapshot_path)   # never a torn snapshot
+
+    @classmethod
+    def restore(cls, engine, snap: Dict, requests: List[Request],
+                compute_model: Optional[BatchComputeModel] = None,
+                capture: bool = True,
+                snapshot_path: Optional[str] = None) -> "ServingFrontend":
+        """Warm restart from a :meth:`snapshot` (or its JSON) after a
+        crash: a FRESH engine (its pools rebuild lazily from the
+        recovered store) plus the snapshot's clock/ledger/queues.
+
+        ``requests`` must contain every id the snapshot references —
+        the deterministic regeneration of the original stream.  Queued
+        ids re-enter their queues; in-flight ids (dispatched, never
+        acknowledged) are re-admitted for recompute.  Both count as
+        re-admissions in the ledger and in
+        ``ServeStats.readmitted_requests``."""
+        fe = cls(engine, max_batch=int(snap["max_batch"]),
+                 policy=str(snap["policy"]), compute_model=compute_model,
+                 capture=capture, snapshot_path=snapshot_path)
+        fe.clock = VirtualClock.from_snapshot(snap["clock"])
+        fe.ledger = RequestLedger.from_dict(snap["ledger"])
+        fe._rates = {str(m): float(v) for m, v in snap["rates"].items()}
+        fe._last_arrival = {str(m): float(v)
+                            for m, v in snap["last_arrival"].items()}
+        fe._cpr = None if snap["cpr"] is None else float(snap["cpr"])
+        by_rid = {r.rid: r for r in requests}
+        readmitted = 0
+        for model, rids in snap["queued"].items():
+            fe._queues[model] = [by_rid[rid] for rid in rids]
+            readmitted += len(rids)
+        fe._fifo = [by_rid[rid] for rid in snap["fifo"]]
+        readmitted += len(fe._fifo)
+        # in-flight = the crash window: dispatched, never acknowledged.
+        # The results died with the process; re-queue for deterministic
+        # recompute — delivery stays at-most-once because served ids
+        # are never offered again.
+        for rid in sorted(fe.ledger.in_flight):
+            req = by_rid[rid]
+            if fe.policy == "naive":
+                fe._fifo.append(req)
+            else:
+                fe._queues.setdefault(req.model, []).append(req)
+            readmitted += 1
+        fe.ledger.in_flight.clear()
+        # in-flight ids were dispatched first but re-entered last:
+        # restore arrival order so EDF/FIFO formation is unchanged
+        for q in fe._queues.values():
+            q.sort(key=lambda r: (r.arrival_t, r.rid))
+        fe._fifo.sort(key=lambda r: (r.arrival_t, r.rid))
+        st: ServeStats = engine.stats
+        for key, v in snap["stats"].items():
+            cur = getattr(st, key)
+            if isinstance(cur, list):
+                cur.extend(v)
+            elif isinstance(cur, float):
+                setattr(st, key, cur + float(v))
+            else:
+                setattr(st, key, cur + int(v))
+        fe.ledger.readmitted += readmitted
+        st.readmitted_requests += readmitted
+        fe._resumed = True
+        return fe

@@ -146,6 +146,23 @@ class VirtualClock:
         """Seconds charged to ``channel`` so far."""
         return self.channels.get(channel, 0.0)
 
+    def snapshot(self) -> Dict:
+        """JSON-safe state for warm restart: ``from_snapshot`` rebuilds
+        a clock with the same now/start/channel ledger, so conservation
+        (and every latency measured against ``now``) carries across a
+        process death."""
+        return {"now": self.now, "start": self._start,
+                "channels": dict(self.channels)}
+
+    @classmethod
+    def from_snapshot(cls, snap: Dict) -> "VirtualClock":
+        """Rebuild a clock from :meth:`snapshot` output."""
+        clock = cls(float(snap.get("start", 0.0)))
+        clock.channels = {str(k): float(v)
+                          for k, v in snap["channels"].items()}
+        clock.now = float(snap["now"])
+        return clock
+
     def assert_conserved(self, tol: float = 1e-9) -> None:
         """Fail loudly if any simulated second escaped the channel
         ledger: ``sum(channels) == now - start`` within ``tol``.  A

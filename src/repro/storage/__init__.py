@@ -26,9 +26,11 @@ from urllib.parse import parse_qs, urlparse
 from .backend import (MANIFEST_VERSION, ManifestConflictError,
                       MemoryBackend, PageBackend, StorageProfile,
                       resolve_dtype)
+from .crashpoints import CrashPointReached, crash_point
 from .faults import (CorruptPageError, FatalStorageError,
                      FaultInjectingBackend, FaultSpec, RetryPolicy,
                      StorageFaultError, TransientStorageError)
+from .journal import Journal, RecoveryReport, recover_backend
 from .localdir import LocalDirBackend
 from .objsim import ObjectStoreSimBackend
 from .sqlite import SQLiteBackend
@@ -39,7 +41,8 @@ __all__ = [
     "LocalDirBackend", "SQLiteBackend", "ObjectStoreSimBackend",
     "FaultInjectingBackend", "FaultSpec", "RetryPolicy",
     "StorageFaultError", "TransientStorageError", "CorruptPageError",
-    "FatalStorageError",
+    "FatalStorageError", "CrashPointReached", "crash_point",
+    "Journal", "RecoveryReport", "recover_backend",
     "open_backend",
 ]
 
@@ -50,9 +53,18 @@ def _sqlalchemy_path(rest: str) -> str:
     return rest[1:] if rest.startswith("/") else rest
 
 
+def _recovered(backend: PageBackend) -> PageBackend:
+    """Journal replay at the URL attach point (DESIGN.md §11): a store a
+    crashed writer left dirty is GC'd before anything reads it.  Clean
+    journals make this a single cheap read."""
+    recover_backend(backend)
+    return backend
+
+
 def open_backend(url) -> PageBackend:
     """Resolve a storage URL (or bare directory path, or an already-open
-    backend) to a :class:`PageBackend`."""
+    backend) to a :class:`PageBackend`, replaying any crash-recovery
+    journal the previous writer left behind."""
     if isinstance(url, PageBackend):
         return url
     url = str(url)
@@ -60,19 +72,21 @@ def open_backend(url) -> PageBackend:
         # fault-injection composition: fault+<inner-url>#<spec>, e.g.
         # fault+sqlite:///m.db#transient=0.1,corrupt=0.05,seed=7 — the
         # spec rides in the fragment so inner query strings stay intact
+        # (the inner open_backend already ran recovery on the real store)
         inner_url, _, spec = url[len("fault+"):].partition("#")
         return FaultInjectingBackend(open_backend(inner_url),
                                      FaultSpec.parse(spec))
     if "://" not in url:                       # bare path: legacy call sites
-        return LocalDirBackend(url)
+        return _recovered(LocalDirBackend(url))
     scheme, rest = url.split("://", 1)
     scheme = scheme.lower()
     if scheme == "file":
         # standard file URL: the path component is absolute
         parsed = urlparse(url)
-        return LocalDirBackend((parsed.netloc or "") + parsed.path)
+        return _recovered(LocalDirBackend((parsed.netloc or "") + parsed.path))
     if scheme == "sqlite":
-        return SQLiteBackend(_sqlalchemy_path(rest.split("?", 1)[0]))
+        return _recovered(
+            SQLiteBackend(_sqlalchemy_path(rest.split("?", 1)[0])))
     if scheme == "memory":
         return MemoryBackend()
     if scheme == "objsim":
@@ -86,9 +100,9 @@ def open_backend(url) -> PageBackend:
         if not path:
             inner = None                       # in-memory inner store
         elif path.endswith((".db", ".sqlite")):
-            inner = SQLiteBackend(path)
+            inner = _recovered(SQLiteBackend(path))
         else:
-            inner = LocalDirBackend(path)
+            inner = _recovered(LocalDirBackend(path))
         return ObjectStoreSimBackend(inner, **kw)
     raise ValueError(f"unknown storage URL scheme {scheme!r} in {url!r} "
                      "(expected file | sqlite | objsim | memory)")

@@ -124,6 +124,38 @@ class PageBackend(abc.ABC):
         except FileNotFoundError:
             return False
 
+    # ------------------------------------------------------------ journal --
+    # The write-ahead intent journal (storage/journal.py, DESIGN.md §11):
+    # multi-step mutations append an intent before touching pages, a done
+    # marker after, and ``journal_rewrite`` compacts/clears atomically.
+    # Recovery on open replays whatever is left.  The base implementation
+    # is in-process (exactly as durable as MemoryBackend itself); file and
+    # SQL backends override with fsync'd / transactional storage.
+
+    def journal_append(self, record: Dict) -> int:
+        """Durably append one record; assigns and returns the next ``seq``
+        unless the record already carries one (done markers echo their
+        intent's seq)."""
+        j = self.__dict__.setdefault("_journal", [])
+        if "seq" not in record:
+            record = {**record,
+                      "seq": max((r.get("seq", 0) for r in j), default=0) + 1}
+        j.append(dict(record))
+        return int(record["seq"])
+
+    def journal_records(self) -> List[Dict]:
+        """All journal records in append order (empty = clean store)."""
+        return [dict(r) for r in self.__dict__.get("_journal", [])]
+
+    def journal_rewrite(self, records: Sequence[Dict]) -> None:
+        """Atomically replace the journal (compaction; ``[]`` clears)."""
+        self.__dict__["_journal"] = [dict(r) for r in records]
+
+    def sweep_temp(self) -> int:
+        """Remove staging debris a crash can strand (``*.tmp`` files for
+        directory backends); returns how many items were swept."""
+        return 0
+
     # ------------------------------------------------------------- admin --
     def url(self) -> str:
         """Round-trippable URL (``open_backend(b.url())`` reopens it)."""

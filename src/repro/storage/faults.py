@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import sqlite3
-from typing import Dict, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -295,6 +295,22 @@ class FaultInjectingBackend(PageBackend):
 
     def delete_pages(self, hashes: Sequence[str]) -> int:
         return self.inner.delete_pages(hashes)
+
+    # ------------------------------------------------------------- journal --
+    # The intent journal is the recovery layer's own bookkeeping: faults
+    # are never injected into it (a durability layer that corrupts its
+    # undo log proves nothing), so all primitives delegate verbatim.
+    def journal_append(self, record: Dict) -> int:
+        return self.inner.journal_append(record)
+
+    def journal_records(self) -> List[Dict]:
+        return self.inner.journal_records()
+
+    def journal_rewrite(self, records: Sequence[Dict]) -> None:
+        self.inner.journal_rewrite(records)
+
+    def sweep_temp(self) -> int:
+        return self.inner.sweep_temp()
 
     # ------------------------------------------------------------ manifest --
     def commit_manifest(self, manifest: Dict) -> None:

@@ -74,6 +74,18 @@ class ObjectStoreSimBackend(PageBackend):
     def load_manifest(self) -> Dict:
         return self.inner.load_manifest()
 
+    def journal_append(self, record: Dict) -> int:
+        return self.inner.journal_append(record)
+
+    def journal_records(self) -> List[Dict]:
+        return self.inner.journal_records()
+
+    def journal_rewrite(self, records: Sequence[Dict]) -> None:
+        self.inner.journal_rewrite(records)
+
+    def sweep_temp(self) -> int:
+        return self.inner.sweep_temp()
+
     def close(self) -> None:
         self.inner.close()
 

@@ -1,0 +1,41 @@
+"""Seeded violations for the durability pass (tests/test_analysis.py).
+
+Lives outside ``repro/storage/`` so the default-configured pass ignores
+it; the test re-scopes the pass onto this file with ``files=``.
+"""
+import os
+
+
+def unjournaled_replace(tmp, dst):
+    """Rule A trips: an atomic rename with no crash seam around it."""
+    os.replace(tmp, dst)
+
+
+def suppressed_replace(tmp, dst):
+    """The pragma'd twin stays quiet."""
+    os.replace(tmp, dst)  # repro: allow-unjournaled (fixture rationale)
+
+
+def seamed_replace(tmp, dst):
+    """A crash_point call in the same function satisfies the rule."""
+    crash_point("fixture.seam")
+    os.replace(tmp, dst)
+
+
+def unjournaled_commit(con):
+    """Rule B trips: a db transaction commit with no crash seam."""
+    con.commit()
+
+
+def nested_seam_does_not_count(tmp, dst):
+    """A seam inside a nested helper does not journal the OUTER
+    function's rename — Rule A still trips."""
+    def inner():
+        crash_point("fixture.inner")
+    inner()
+    os.replace(tmp, dst)
+
+
+def crash_point(name):
+    """Local stub so the fixture never imports the real registry."""
+    del name

@@ -13,6 +13,7 @@ from repro.analysis.lint import Source, parse_pragmas, run_lint
 from repro.analysis.passes import default_passes
 from repro.analysis.passes.api_drift import ApiDriftPass
 from repro.analysis.passes.channel_charge import ChannelChargePass
+from repro.analysis.passes.durability import DurabilityPass
 from repro.analysis.passes.frontend_clock import FrontendClockPass
 from repro.analysis.passes.host_sync import HostSyncPass
 from repro.analysis.passes.slab_writes import SlabWritePass
@@ -160,6 +161,34 @@ def test_span_discipline_raw_calls_allowed_in_tracer_module():
     text = Path(ROOT / "src/repro/obs/trace.py").read_text()
     src = Source("src/repro/obs/trace.py", text)
     assert SpanDisciplinePass().run(src) == []
+
+
+def test_durability_fixture_trips_and_pragma_suppresses():
+    src = Source.load(FIXTURES / "storage" / "fx_durability.py")
+    findings = DurabilityPass(
+        files=("analysis_fixtures/storage/fx_durability.py",)).run(src)
+    assert {f.name for f in findings} == {"durability"}
+    msgs = _msgs(findings)
+    assert "unjournaled_replace" in msgs          # Rule A: os.replace
+    assert "unjournaled_commit" in msgs           # Rule B: con.commit()
+    assert "nested_seam_does_not_count" in msgs   # nested defs don't count
+    assert "suppressed_replace" not in msgs       # pragma'd stays quiet
+    assert "seamed_replace" not in msgs           # seam in-function: clean
+    assert len(findings) == 3
+
+
+def test_durability_scoped_to_storage_layer_by_default():
+    # the same rename outside the storage layer is ignored
+    src = Source("src/repro/serving/frontend.py",
+                 "import os\n\ndef f(a, b):\n    os.replace(a, b)\n")
+    assert DurabilityPass().run(src) == []
+    # ... while repro/storage/ and core/store.py ARE in default scope
+    src = Source("src/repro/storage/newbackend.py",
+                 "import os\n\ndef f(a, b):\n    os.replace(a, b)\n")
+    assert len(DurabilityPass().run(src)) == 1
+    src = Source("src/repro/core/store.py",
+                 "def f(con):\n    con.commit()\n")
+    assert len(DurabilityPass().run(src)) == 1
 
 
 def test_silent_except_fixture_trips_pragma_and_narrow_stay_quiet():

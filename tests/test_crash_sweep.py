@@ -1,0 +1,57 @@
+"""Crash-point registry semantics plus the exhaustive kill-at-every-seam
+sweep (DESIGN.md §11).  The sweep itself SIGKILLs one subprocess per
+(seam, backend) pair and is marked slow; the registry/arming tests are
+cheap and always run.
+"""
+import pytest
+
+from repro.storage.crashpoints import (CrashPointReached, all_crash_points,
+                                       armed, crash_point, run_sweep)
+
+
+def test_registry_is_populated_at_import_time():
+    reg = all_crash_points()
+    assert len(reg) >= 20
+    # at least one seam per durable layer, so no layer silently drops out
+    prefixes = {name.split(".", 1)[0] for name in reg}
+    assert {"localdir", "sqlite", "store", "recover"} <= prefixes
+    assert all(desc for desc in reg.values())
+
+
+def test_unregistered_crash_point_is_a_hard_error():
+    with pytest.raises(RuntimeError, match="not registered"):
+        crash_point("no.such.seam")
+    with pytest.raises(ValueError, match="unknown crash point"):
+        with armed("no.such.seam"):
+            pass
+
+
+def test_armed_raises_then_disarms():
+    name = sorted(all_crash_points())[0]
+    with armed(name, mode="raise"):
+        with pytest.raises(CrashPointReached, match=name.split(".")[0]):
+            crash_point(name)
+    crash_point(name)                      # disarmed again: no-op
+
+
+def test_armed_only_fires_on_its_own_seam():
+    a, b = sorted(all_crash_points())[:2]
+    with armed(a, mode="raise"):
+        crash_point(b)                     # a different seam: no-op
+        with pytest.raises(CrashPointReached):
+            crash_point(a)
+
+
+@pytest.mark.slow
+def test_exhaustive_crash_sweep_recovers_every_seam(tmp_path):
+    """Every registered seam is killed at least once; every kill
+    recovers to a readable store with zero orphans, zero temps, an
+    empty journal, and logits bit-exact against the legal golden."""
+    results = run_sweep(base_dir=str(tmp_path))
+    failed = [r for r in results if not r["ok"]]
+    assert not failed, "\n".join(
+        f"{r['seam']} ({r['kind']}): {'; '.join(r['problems'])}"
+        for r in failed)
+    swept = {r["seam"] for r in results if r["triggered"]}
+    assert swept == set(all_crash_points()), \
+        f"unreached seams: {sorted(set(all_crash_points()) - swept)}"
